@@ -1,0 +1,107 @@
+"""Shared benchmark substrate: cached pretrained base + method runner.
+
+Every quality benchmark (Tables 1/2/3/6 proxies) follows the paper's
+protocol shape: take a pretrained base, finetune each PEFT method at a
+*matched trainable-parameter budget*, report final task loss.  The base is
+full-param pretrained once on the synthetic mixture and cached on disk.
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load, save
+from repro.configs import get_config, smoke
+from repro.core import AdapterConfig
+from repro.data import DataConfig, ShardedLoader
+from repro.models import Model
+from repro.train import (AdamWConfig, Trainer, TrainerConfig, pretrain_base)
+
+CACHE = Path(__file__).resolve().parent / "_cache"
+
+
+def smoke_cfg():
+    return smoke(get_config("granite-3-2b"))
+
+
+def pretrained_base(steps: int = 200):
+    cfg = smoke_cfg()
+    ck = CACHE / f"base_{steps}"
+    model = Model(cfg, AdapterConfig(method="none"))
+    if ck.exists():
+        params_like, _ = model.init_params(jax.random.key(0))
+        params, _ = load(ck, like=params_like)
+        return cfg, params
+    params, losses = pretrain_base(
+        model, model.init_params(jax.random.key(0))[0],
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=24, task="mixture"),
+        steps=steps)
+    CACHE.mkdir(exist_ok=True)
+    save(ck, params, {"pretrain_loss": losses[-1]})
+    return cfg, params
+
+
+def finetune(acfg: AdapterConfig, cfg, params, *, task="sort", steps=120,
+             lr=1e-2, seed=9, eval_batches=8):
+    """Finetune one method; returns (final train loss, eval loss, n_params,
+    seconds/step)."""
+    model = Model(cfg, acfg)
+    loader = ShardedLoader(DataConfig(vocab_size=cfg.vocab_size, seq_len=24,
+                                      task=task, seed=seed), global_batch=8)
+    t = Trainer(model, params, loader,
+                AdamWConfig(lr=lr, total_steps=steps, schedule="constant",
+                            warmup_frac=0.0),
+                TrainerConfig(total_steps=steps))
+    st, _ = t.run()
+    # held-out eval (different seed stream)
+    from repro.train import make_train_step, init_opt_state
+    from repro.train.train_step import loss_fn
+    ev_loader = ShardedLoader(DataConfig(vocab_size=cfg.vocab_size,
+                                         seq_len=24, task=task, seed=seed + 1),
+                              global_batch=8)
+    lf = jax.jit(lambda tr, b: loss_fn(model, params, tr, st["static"], b))
+    evs = [float(lf(st["trainable"], ev_loader(i)))
+           for i in range(eval_batches)]
+    from repro.core import count_from_state
+    secs = float(np.median([h["sec"] for h in t.history[2:]]))
+    return float(np.mean([h["loss"] for h in t.history[-5:]])), \
+        float(np.mean(evs)), count_from_state(st), secs
+
+
+def method_suite(e: int = 2):
+    """The paper's method grid at one budget (Table 1 + Table 2 rows)."""
+    return {
+        "lora": AdapterConfig(method="lora", rank=e, dtype=jnp.float32),
+        "pure_sharing": AdapterConfig(method="pure", equiv_rank=e,
+                                      subset_selection=False,
+                                      dtype=jnp.float32),
+        "pure+random_scaling": AdapterConfig(method="pure", equiv_rank=e,
+                                             subset_selection=False,
+                                             random_scaling=True,
+                                             dtype=jnp.float32),
+        "pure+subset_selection": AdapterConfig(method="pure", equiv_rank=e,
+                                               rank=4 * e,
+                                               subset_selection=True,
+                                               dtype=jnp.float32),
+        "mos": AdapterConfig(method="mos", equiv_rank=e, rank=4 * e,
+                             shards_per_vector=2, private_rank=1,
+                             dtype=jnp.float32),
+        "mos-pd": AdapterConfig(method="mos", equiv_rank=e, rank=4 * e,
+                                shards_per_vector=2, private_rank=1,
+                                pair_dissociation=False, dtype=jnp.float32),
+        "mos-vs": AdapterConfig(method="mos", equiv_rank=e, rank=4 * e,
+                                shards_per_vector=1, private_rank=1,
+                                dtype=jnp.float32),
+        "mos-sp": AdapterConfig(method="mos", equiv_rank=e, rank=4 * e,
+                                shards_per_vector=2, private_rank=0,
+                                dtype=jnp.float32),
+        "vera": AdapterConfig(method="vera", rank=32, dtype=jnp.float32),
+        "tied_lora": AdapterConfig(method="tied_lora", tied_rank=8,
+                                   dtype=jnp.float32),
+        "prolora": AdapterConfig(method="prolora", rank=2 * e, prolora_m=2,
+                                 dtype=jnp.float32),
+    }

@@ -1,0 +1,214 @@
+"""§Roofline: derive the three roofline terms per (arch × shape) cell from
+the dry-run's compiled artifacts.
+
+Methodology (EXPERIMENTS.md §Roofline has the full discussion):
+  * XLA's ``cost_analysis`` does not scale while-loop bodies by trip count,
+    so the roofline compiles run fully *unrolled* (layers, attention tiles,
+    SSD chunks, loss chunks) at depth L ∈ {1, 2} pattern-groups; every
+    metric is exactly linear in L (flops(L) = base + per_group·L), so two
+    points extrapolate exactly to the production depth.
+  * Unrolled attention also skips fully-masked causal/SWA tiles — the
+    schedule the Pallas kernel executes on real TPU, making the FLOP count
+    the deployed one rather than the XLA-fallback one.
+  * All numbers are per-device (the compiled module is the SPMD program).
+
+Terms (hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI):
+  compute    = flops / PEAK_FLOPS
+  memory     = bytes_accessed / HBM_BW
+  collective = Σ wire_bytes(op) / ICI_BW     (ring accounting, dryrun.py)
+
+MODEL_FLOPS uses the standard analytic counts (6·N·D train with full remat;
+2·N·D prefill; 2·N_active·B decode, + attention/SSD terms) so the ratio
+MODEL/HLO exposes remat or padding waste.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.configs import SHAPES, applicable_shapes, get_config
+from repro.launch.dryrun import HBM_BW, ICI_BW, OUT_DIR, PEAK_FLOPS
+
+CHIPS = 256  # single-pod roofline table
+
+
+def groups_of(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every
+    if cfg.family == "encdec":
+        return cfg.n_layers          # enc+dec extrapolated jointly
+    return cfg.n_layers
+
+
+def _extrapolate(points: Dict[str, dict], key, n_groups: int) -> float:
+    p1, p2 = points["1"], points["2"]
+    v1, v2 = _get(p1, key), _get(p2, key)
+    per_group = v2 - v1
+    base = v1 - per_group
+    return base + per_group * n_groups
+
+
+def _get(p, key):
+    if isinstance(key, tuple):
+        return float(p[key[0]].get(key[1], 0.0))
+    return float(p.get(key, 0.0))
+
+
+def count_base_params(cfg) -> Tuple[float, float]:
+    """(N_total, N_active) matmul params (embedding table excluded, lm_head
+    included once)."""
+    from repro.core import AdapterConfig
+    from repro.models import Model
+    m = Model(cfg.replace(tp_pad=16), AdapterConfig(method="none"))
+    params, _ = m.init_params(abstract=True)
+    total = sum(float(np.prod(v.shape)) for k, v in params.items()
+                if k != "embed" or cfg.tie_embeddings)
+    total -= sum(float(np.prod(v.shape)) for k, v in params.items()
+                 if "pos_embed" in k)
+    active = total
+    if cfg.n_experts and cfg.top_k:
+        routed = sum(float(np.prod(v.shape)) for k, v in params.items()
+                     if any(s in k for s in ("w_gate", "w_up", "w_down")))
+        frac = cfg.top_k * cfg.capacity_factor / cfg.n_experts
+        active = total - routed * (1.0 - min(frac, 1.0))
+    return total, active
+
+
+def attention_flops(cfg, S: int, B: int, decode: bool) -> float:
+    """Score+PV matmul flops, global, forward only (causal-skipped)."""
+    n_attn = (cfg.n_layers // cfg.attn_every) if cfg.family == "hybrid" \
+        else (0 if cfg.family == "ssm" else cfg.n_layers)
+    if cfg.family == "encdec":
+        n_attn = cfg.n_layers + cfg.n_enc_layers
+    H, hd = cfg.padded_heads, cfg.hd
+    if decode:
+        ctx = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        return 4.0 * B * n_attn * H * hd * ctx
+    eff = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    return 4.0 * B * n_attn * H * hd * S * eff * 0.5
+
+
+def ssd_flops(cfg, S: int, B: int, decode: bool) -> float:
+    if cfg.family == "ssm":
+        n_ssm = cfg.n_layers
+    elif cfg.family == "hybrid":
+        n_ssm = cfg.n_layers - cfg.n_layers // cfg.attn_every
+    else:
+        return 0.0
+    H, P, N, Q = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_chunk
+    if decode:
+        return B * n_ssm * H * P * N * 6.0
+    intra = 2.0 * B * S * Q * (cfg.ssm_groups * N + H * P) * 0.5
+    inter = 6.0 * B * S * H * P * N
+    return n_ssm * (intra + inter)
+
+
+def model_flops(cfg, shape) -> float:
+    """Global analytic step flops for the paper-faithful step."""
+    N, N_act = count_base_params(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        D = B * S
+        return 6.0 * N_act * D + 3.0 * attention_flops(cfg, S, B, False) \
+            + 3.0 * ssd_flops(cfg, S, B, False)
+    if shape.kind == "prefill":
+        D = B * S
+        return 2.0 * N_act * D + attention_flops(cfg, S, B, False) \
+            + ssd_flops(cfg, S, B, False)
+    # decode: one token per request
+    return 2.0 * N_act * B + attention_flops(cfg, S, B, True) \
+        + ssd_flops(cfg, S, B, True)
+
+
+def cell_terms(arch: str, shape_name: str, variant="baseline",
+               mesh_tag="pod1") -> dict:
+    f = OUT_DIR / f"{arch}__{shape_name}__{mesh_tag}__{variant}__roofline.json"
+    if not f.exists():
+        return {}
+    rec = json.loads(f.read_text())
+    if not rec.get("ok"):
+        return {}
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ng = groups_of(cfg)
+    pts = rec["roofline_points"]
+    flops = _extrapolate(pts, "flops", ng)
+    bytes_ = _extrapolate(pts, "bytes", ng)
+    coll = {k: _extrapolate(pts, ("collective_bytes", k), ng)
+            for k in pts["1"]["collective_bytes"]}
+    coll_total = sum(coll.values())
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_ / HBM_BW
+    t_x = coll_total / ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape) / CHIPS
+    return {
+        "arch": arch, "shape": shape_name,
+        "flops": flops, "bytes": bytes_, "collective_bytes": coll_total,
+        "collectives": coll,
+        "t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+        "dominant": dom,
+        "model_flops": mf,
+        "useful_ratio": (mf / flops) if flops else 0.0,
+        "roofline_fraction": (max(t_c, t_m, t_x) and
+                              t_c / max(t_c, t_m, t_x)),
+        "step_seconds_bound": max(t_c, t_m, t_x),
+    }
+
+
+SUGGEST = {
+    "compute": "compute-bound: raise MFU via larger per-device batch or "
+               "fewer remat recomputes",
+    "memory": "HBM-bound: fuse/skip activation round-trips (Pallas flash "
+              "kernel; smaller fp32 transients; bf16 loss chunks)",
+    "collective": "ICI-bound: overlap weight all-gathers with compute, "
+                  "shrink grads (int8 EF all-reduce), or trade FSDP for "
+                  "replication",
+}
+
+
+def all_cells(variant="baseline") -> List[dict]:
+    out = []
+    for arch in sorted(set(a for a in _archs())):
+        for shp in applicable_shapes(get_config(arch)):
+            t = cell_terms(arch, shp, variant)
+            if t:
+                out.append(t)
+    return out
+
+
+def _archs():
+    from repro.configs import ASSIGNED
+    return ASSIGNED
+
+
+def report_rows():
+    rows = []
+    for t in all_cells():
+        derived = (f"dom={t['dominant']}|t_c={t['t_compute']:.3e}|"
+                   f"t_m={t['t_memory']:.3e}|t_x={t['t_collective']:.3e}|"
+                   f"useful={t['useful_ratio']:.2f}")
+        rows.append((f"roofline/{t['arch']}/{t['shape']}",
+                     t["step_seconds_bound"] * 1e6, derived))
+    return rows
+
+
+def markdown_table(variant="baseline") -> str:
+    lines = ["| arch | shape | t_compute (s) | t_memory (s) | t_collective (s)"
+             " | dominant | MODEL/HLO flops | bound step (s) |",
+             "|---|---|---|---|---|---|---|---|"]
+    for t in all_cells(variant):
+        lines.append(
+            f"| {t['arch']} | {t['shape']} | {t['t_compute']:.3e} | "
+            f"{t['t_memory']:.3e} | {t['t_collective']:.3e} | "
+            f"{t['dominant']} | {t['useful_ratio']:.2f} | "
+            f"{t['step_seconds_bound']:.3e} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,191 @@
+"""Benchmark harness — one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``us_per_call`` is the
+measured per-step wall time where a table involves training/serving, 0
+where the table is pure accounting; ``derived`` carries the table's own
+metric (param count / final loss / roofline term).
+
+Tables:
+  table2_params    — paper Table 2 "# Param." column, exact reproduction
+  table1_sharing   — paper Table 1: pure sharing vs differentiation probes
+  table2_methods   — paper Table 2: budget-matched method comparison + MoS
+                     ablations (-pd/-vs/-sp)
+  table6_grid      — paper Table 6: shards-per-vector × private-rank grid
+  table8_timing    — paper Table 8: LoRA vs MoS step-time overhead
+  serving_bench    — multi-tenant engine throughput (paper §1 motivation)
+  roofline         — §Roofline terms per (arch × shape) from the dry-run
+
+Run everything: ``PYTHONPATH=src python -m benchmarks.run``
+Subset:         ``... -m benchmarks.run --only table1_sharing,roofline``
+Fast mode:      ``... -m benchmarks.run --fast`` (fewer steps; CI-scale)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def emit(name: str, us_per_call: float, derived):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def table2_params(fast: bool):
+    from repro.core import AdapterConfig, make_plan, param_count
+    from repro.models.transformer import adapter_specs
+    from repro.configs import get_config
+    specs = adapter_specs(get_config("llama2-7b"), None)
+    rows = [
+        ("lora_r2", AdapterConfig(method="lora", rank=2), 5.00),
+        ("lora_r8", AdapterConfig(method="lora", rank=8), 19.99),
+        ("lora_r16", AdapterConfig(method="lora", rank=16), 39.98),
+        ("lora_r64", AdapterConfig(method="lora", rank=64), 159.91),
+        ("vera_r256", AdapterConfig(method="vera", rank=256), 1.42),
+        ("mos_e2", AdapterConfig(method="mos", equiv_rank=2, rank=8,
+                                 shards_per_vector=4, private_rank=1), 5.00),
+        ("mos_e8", AdapterConfig(method="mos", equiv_rank=8, rank=32,
+                                 shards_per_vector=4, private_rank=1), 19.99),
+    ]
+    for name, cfg, paper in rows:
+        ours = param_count(make_plan(cfg, specs))["total"] / 1e6
+        emit(f"table2_params/{name}", 0.0,
+             f"{ours:.2f}M(paper={paper:.2f}M|match={abs(ours-paper)<0.01*paper+0.01})")
+
+
+def _quality(names, fast: bool, task="sort"):
+    from benchmarks.common import finetune, method_suite, pretrained_base
+    cfg, params = pretrained_base(steps=120 if fast else 250)
+    steps = 60 if fast else 160
+    suite = method_suite()
+    for name in names:
+        acfg = suite[name]
+        t0 = time.time()
+        train_l, eval_l, n, secs = finetune(acfg, cfg, params, task=task,
+                                            steps=steps)
+        emit(f"quality/{name}", secs * 1e6,
+             f"eval_loss={eval_l:.4f}|train_loss={train_l:.4f}|params={n}")
+
+
+def table1_sharing(fast: bool):
+    _quality(["lora", "pure_sharing", "pure+random_scaling",
+              "pure+subset_selection"], fast)
+
+
+def table2_methods(fast: bool):
+    _quality(["mos", "mos-pd", "mos-vs", "mos-sp", "vera", "tied_lora",
+              "prolora"], fast)
+
+
+def table6_grid(fast: bool):
+    import jax.numpy as jnp
+    from benchmarks.common import finetune, pretrained_base
+    from repro.core import AdapterConfig
+    cfg, params = pretrained_base(steps=120 if fast else 250)
+    steps = 50 if fast else 120
+    grid_l = [1, 2] if fast else [1, 2, 4]
+    grid_p = [0, 1] if fast else [0, 1, 3]
+    for l in grid_l:
+        for p in grid_p:
+            acfg = AdapterConfig(method="mos", equiv_rank=2, rank=8,
+                                 shards_per_vector=l, private_rank=p,
+                                 dtype=jnp.float32)
+            _, eval_l, n, secs = finetune(acfg, cfg, params, steps=steps)
+            emit(f"table6_grid/l{l}_p{p}", secs * 1e6,
+                 f"eval_loss={eval_l:.4f}")
+
+
+def table8_timing(fast: bool):
+    """Paper Table 8: MoS adds ~2.8% step time over LoRA at equal budget."""
+    import jax, jax.numpy as jnp, numpy as np
+    from benchmarks.common import pretrained_base, smoke_cfg
+    from repro.core import AdapterConfig
+    from repro.data import DataConfig, ShardedLoader
+    from repro.models import Model
+    from repro.train import AdamWConfig, init_opt_state, make_train_step
+    cfg, params = pretrained_base(steps=120 if fast else 250)
+    loader = ShardedLoader(DataConfig(vocab_size=cfg.vocab_size, seq_len=24),
+                           global_batch=8)
+    out = {}
+    for name, acfg in [
+        ("lora_r2", AdapterConfig(method="lora", rank=2, dtype=jnp.float32)),
+        ("mos_e2", AdapterConfig(method="mos", equiv_rank=2, rank=8,
+                                 shards_per_vector=2, private_rank=1,
+                                 dtype=jnp.float32)),
+    ]:
+        m = Model(cfg, acfg)
+        ad = m.init_adapter()
+        opt = init_opt_state(ad["trainable"])
+        step = jax.jit(make_train_step(m, AdamWConfig(total_steps=100)))
+        b = loader(0)
+        tr = ad["trainable"]
+        tr, opt, _ = step(params, tr, ad["static"], opt, b)  # compile
+        n = 10 if fast else 30
+        t0 = time.time()
+        for i in range(n):
+            tr, opt, mm = step(params, tr, ad["static"], opt, loader(i))
+        jax.block_until_ready(mm["loss"])
+        out[name] = (time.time() - t0) / n
+        emit(f"table8_timing/{name}", out[name] * 1e6, f"s_per_step={out[name]:.4f}")
+    ratio = out["mos_e2"] / out["lora_r2"] - 1.0
+    emit("table8_timing/mos_overhead", 0.0,
+         f"{ratio*100:.2f}%(paper=2.80%)")
+
+
+def serving_bench(fast: bool):
+    import jax, jax.numpy as jnp, numpy as np
+    from benchmarks.common import pretrained_base
+    from repro.core import AdapterConfig
+    from repro.models import Model
+    from repro.serving import Request, ServingEngine
+    cfg, params = pretrained_base(steps=120 if fast else 250)
+    acfg = AdapterConfig(method="mos", equiv_rank=2, rank=8,
+                         shards_per_vector=2, private_rank=1,
+                         dtype=jnp.float32)
+    m = Model(cfg, acfg)
+    states = [m.init_adapter(jax.random.key(i)) for i in range(4)]
+    eng = ServingEngine(m, params, states, slots=4, max_len=64)
+    for i in range(8):
+        eng.submit(Request(rid=i, prompt=np.array([0, 10 + i, 1], np.int32),
+                           adapter_id=i % 4, max_new=8))
+    t0 = time.time()
+    done = eng.run(max_ticks=64)
+    dt = time.time() - t0
+    toks = sum(len(r.out) for r in done)
+    emit("serving/engine_throughput", dt / max(toks, 1) * 1e6,
+         f"tokens={toks}|tenants=4|slots=4")
+
+
+def roofline(fast: bool):
+    from benchmarks.roofline_report import report_rows
+    for name, us, derived in report_rows():
+        emit(name, us, derived)
+
+
+TABLES = {
+    "table2_params": table2_params,
+    "table1_sharing": table1_sharing,
+    "table2_methods": table2_methods,
+    "table6_grid": table6_grid,
+    "table8_timing": table8_timing,
+    "serving_bench": serving_bench,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    names = [n for n in args.only.split(",") if n] or list(TABLES)
+    print("name,us_per_call,derived")
+    for n in names:
+        TABLES[n](args.fast)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Paper Table 2 ablations (-pd / -vs / -sp) + peer baselines.
+Usage: PYTHONPATH=src python -m benchmarks.tables.ablation"""
+from benchmarks.run import table2_methods
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    table2_methods(fast=False)

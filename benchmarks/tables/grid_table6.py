@@ -1,0 +1,7 @@
+"""Paper Table 6 — shards-per-vector × private-rank grid.
+Usage: PYTHONPATH=src python -m benchmarks.tables.grid_table6"""
+from benchmarks.run import table6_grid
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    table6_grid(fast=False)

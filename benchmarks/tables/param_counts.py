@@ -1,0 +1,7 @@
+"""Paper Table 2 '# Param.' column — exact reproduction (thin CLI over
+benchmarks.run).  Usage: PYTHONPATH=src python -m benchmarks.tables.param_counts"""
+from benchmarks.run import table2_params
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    table2_params(fast=False)

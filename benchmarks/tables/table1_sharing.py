@@ -1,0 +1,7 @@
+"""Paper Table 1 — pure sharing vs differentiation probes (budget-matched
+synthetic-task transfer).  Usage: PYTHONPATH=src python -m benchmarks.tables.table1_sharing"""
+from benchmarks.run import table1_sharing
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    table1_sharing(fast=False)

@@ -1,0 +1,7 @@
+"""Paper Table 8 — LoRA vs MoS step-time overhead.
+Usage: PYTHONPATH=src python -m benchmarks.tables.timing_table8"""
+from benchmarks.run import table8_timing
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    table8_timing(fast=False)

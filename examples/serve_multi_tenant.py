@@ -1,0 +1,73 @@
+"""Multi-tenant adapter serving — the paper's motivating scenario (§1):
+many customized models served concurrently from one base.
+
+Trains two tiny MoS customizations (different tasks), then serves a mixed
+request stream through the continuous-batching engine: per-request adapter
+routing (BGMV), slot reuse, greedy decoding.
+
+Run: PYTHONPATH=src python examples/serve_multi_tenant.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke
+from repro.core import AdapterConfig, count_from_state
+from repro.data import DataConfig, ShardedLoader, ASSISTANT, USER
+from repro.models import Model
+from repro.serving import Request, ServingEngine
+from repro.train import (AdamWConfig, Trainer, TrainerConfig, pretrain_base)
+
+ACFG = AdapterConfig(method="mos", equiv_rank=2, rank=8, shards_per_vector=2,
+                     private_rank=1, dtype=jnp.float32)
+
+
+def train_tenant(cfg, params, task, steps=150):
+    model = Model(cfg, ACFG)
+    loader = ShardedLoader(DataConfig(vocab_size=cfg.vocab_size, seq_len=24,
+                                      task=task, seed=3), global_batch=8)
+    t = Trainer(model, params, loader,
+                AdamWConfig(lr=1e-2, total_steps=steps, schedule="constant",
+                            warmup_frac=0.0),
+                TrainerConfig(total_steps=steps))
+    st, _ = t.run()
+    return model, st
+
+
+def main():
+    cfg = smoke(get_config("granite-3-2b"))
+    base = Model(cfg, AdapterConfig(method="none"))
+    params, _ = base.init_params(jax.random.key(0))
+    params, _ = pretrain_base(base, params,
+                              DataConfig(vocab_size=cfg.vocab_size,
+                                         seq_len=24, task="mixture"),
+                              steps=200)
+
+    model, st_copy = train_tenant(cfg, params, "copy")
+    _, st_sort = train_tenant(cfg, params, "sort")
+    n = count_from_state(st_copy)
+    print(f"2 tenants x {n} trainable params each "
+          f"({n * 4 / 1024:.1f} KiB/tenant at fp32)")
+
+    eng = ServingEngine(model, params, [st_copy, st_sort], slots=4,
+                        max_len=64)
+    rng = np.random.default_rng(0)
+    for i in range(6):
+        payload = rng.integers(10, 100, size=4).astype(np.int32)
+        prompt = np.concatenate([[USER], payload, [ASSISTANT]]).astype(np.int32)
+        eng.submit(Request(rid=i, prompt=prompt, adapter_id=i % 2,
+                           max_new=5))
+    done = eng.run(max_ticks=64)
+    for r in sorted(done, key=lambda r: r.rid):
+        tenant = ["copy", "sort"][r.adapter_id]
+        print(f"req {r.rid} [tenant={tenant}] prompt={r.prompt[1:-1].tolist()}"
+              f" -> out={r.out}")
+
+
+if __name__ == "__main__":
+    main()

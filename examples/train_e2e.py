@@ -1,0 +1,70 @@
+"""End-to-end training driver: ~100M-parameter model, a few hundred steps,
+with checkpointing, resume, and straggler telemetry — the (b) deliverable's
+"train a ~100M model" example, CPU-sized by default.
+
+Run:   PYTHONPATH=src python examples/train_e2e.py [--steps 300] [--d-model 256]
+Resume after a kill: simply run the same command again (stateless-seekable
+data + atomic checkpoints make the restart exact).
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import AdapterConfig, count_from_state
+from repro.data import DataConfig, ShardedLoader
+from repro.models import Model
+from repro.train import AdamWConfig, Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+    args = ap.parse_args()
+
+    # ~100M-class config (scaled so CPU steps stay interactive; raise
+    # --d-model/--layers on real hardware)
+    cfg = get_config("granite-3-2b").replace(
+        name="granite-e2e", n_layers=args.layers, d_model=args.d_model,
+        n_heads=8, n_kv_heads=4, d_ff=4 * args.d_model, head_dim=32,
+        vocab_size=2048, dtype="float32", remat="none", attn_chunk=128,
+    )
+    acfg = AdapterConfig(method="mos", equiv_rank=2, rank=8,
+                         shards_per_vector=4, private_rank=1,
+                         dtype=jnp.float32)
+    model = Model(cfg, acfg)
+    params, _ = model.init_params(jax.random.key(0))
+    n_base = sum(int(np.prod(v.shape)) for v in params.values())
+    n_ad = count_from_state(model.init_adapter())
+    print(f"base params: {n_base/1e6:.1f}M | trainable (MoS pools): "
+          f"{n_ad/1e3:.1f}K | ratio {n_base/max(n_ad,1):.0f}x")
+
+    loader = ShardedLoader(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                      task="mixture"), global_batch=16)
+    t = Trainer(model, params, loader,
+                AdamWConfig(lr=2e-4, total_steps=args.steps),
+                TrainerConfig(total_steps=args.steps, ckpt_every=100,
+                              straggler_factor=3.0),
+                ckpt_dir=args.ckpt_dir)
+    t.run()
+    ls = [h["loss"] for h in t.history]
+    if ls:
+        print(f"steps {t.history[0]['step']}..{t.history[-1]['step']} | "
+              f"loss {ls[0]:.3f} -> {ls[-1]:.3f} | "
+              f"median step {np.median([h['sec'] for h in t.history]):.3f}s | "
+              f"stragglers {t.straggler_events}")
+    else:
+        print("nothing to do (already trained to --steps; checkpoint found)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Fault-tolerant checkpointing: atomic I/O, rotation, elastic reshard."""
+from .io import save, load, save_sharded, load_sharded
+from .manager import CheckpointManager
+from .elastic import place, place_replicated, reshard_checkpoint

@@ -1,0 +1,47 @@
+"""Elastic rescale: move a run between mesh shapes without losing state.
+
+``reshard_checkpoint`` rewrites a per-shard checkpoint saved on mesh A into
+the layout for mesh B (any shapes whose axis products divide the array
+dims).  Together with the stateless-seekable data pipeline (step → batch)
+this gives elastic scaling: a 512-chip job can restart as a 256-chip job
+mid-run — the DP width change is absorbed because batches are indexed by
+global step, not by per-host iterator state.
+
+``place`` puts a restored global tree onto a live mesh with the given
+rules/axes (device_put with NamedShardings) — used both after restore and
+after reshard.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Any
+
+import jax
+
+from . import io as ckio
+
+
+def place(tree, axes_tree, rules):
+    """device_put a (host) pytree onto the rules' mesh."""
+    flat = ckio._flatten(tree)
+    flat_axes = ckio._flatten_dicts_only(axes_tree)
+    out = {}
+    for k, v in flat.items():
+        out[k] = jax.device_put(v, rules.sharding_for(flat_axes[k]))
+    return ckio._unflatten(out)
+
+
+def place_replicated(tree, rules):
+    rep = rules.replicated()
+    return jax.tree.map(lambda v: jax.device_put(v, rep), tree)
+
+
+def reshard_checkpoint(src: Path, dst: Path, new_rules, axes_tree):
+    """Rewrite a sharded checkpoint for a new mesh (offline, host-side)."""
+    tree, meta = ckio.load_sharded(src)
+    meta = dict(meta)
+    meta["resharded_to"] = {a: int(s) for a, s in
+                            zip(new_rules.mesh.axis_names,
+                                new_rules.mesh.devices.shape)}
+    ckio.save_sharded(dst, tree, new_rules, axes_tree, metadata=meta)
+    return meta

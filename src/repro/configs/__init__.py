@@ -1,0 +1,17 @@
+"""Assigned-architecture configs + registry."""
+from .base import ModelConfig, ShapeConfig, SHAPES, applicable_shapes
+from .registry import get_config, list_archs, smoke, input_specs, register
+
+# import all arch modules so they register themselves
+from . import (internvl2_76b, whisper_base, mamba2_1p3b, phi3_medium_14b,
+               starcoder2_15b, h2o_danube_1p8b, granite_3_2b, mixtral_8x7b,
+               qwen2_moe_a2p7b, jamba_1p5_large_398b, llama2_7b,
+               llama3p2_3b)
+
+ALL_ARCHS = True  # sentinel for registry lazy import
+
+ASSIGNED = [
+    "internvl2-76b", "whisper-base", "mamba2-1.3b", "phi3-medium-14b",
+    "starcoder2-15b", "h2o-danube-1.8b", "granite-3-2b", "mixtral-8x7b",
+    "qwen2-moe-a2.7b", "jamba-1.5-large-398b",
+]

@@ -1,0 +1,150 @@
+"""Model / run configuration dataclasses.
+
+Every assigned architecture is expressed as a ``ModelConfig``; the exact
+values live in one ``src/repro/configs/<arch>.py`` per architecture.  Smoke
+variants (same family, tiny dims) are produced by ``smoke()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 → d_model // n_heads
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0             # per-expert ffn width (qwen: 1408)
+    n_shared_experts: int = 0        # qwen: 4 (shared width = n*d_ff_expert)
+    moe_every: int = 1               # MoE at layers where (idx % moe_every)!=0? see stacks
+    capacity_factor: float = 1.25
+    # --- SSM (Mamba2 SSD) ---
+    ssm_state: int = 0               # N
+    ssm_head_dim: int = 64           # P
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_groups: int = 1              # G (B/C groups)
+    ssm_chunk: int = 256             # SSD chunk length
+    # --- hybrid (jamba) ---
+    attn_every: int = 0              # 1 attention layer per this many (jamba: 8)
+    # --- attention ---
+    sliding_window: int = 0          # 0 = full attention
+    rope_theta: float = 10000.0
+    pos_embed: str = "rope"          # rope | learned | none
+    # --- encoder-decoder (whisper) ---
+    n_enc_layers: int = 0
+    enc_seq: int = 0                 # fixed encoder length (whisper: 1500)
+    max_pos: int = 0                 # learned-position table size
+    # --- frontend stubs ---
+    n_patches: int = 0               # vlm: prepended patch embeddings
+    # --- misc ---
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    act: str = "swiglu"              # swiglu | gelu
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    # padding multiple for q-heads so TP=16 divides them (see DESIGN.md);
+    # 1 for tests, 16 for the production mesh.  kv heads are padded so that
+    # the GQA group size is preserved.
+    tp_pad: int = 1
+    # remat policy for the layer scan: none | dots | full
+    remat: str = "dots"
+    # attention kv-chunk for the XLA blockwise attention
+    attn_chunk: int = 1024
+    # unroll the layer scan as a python loop (roofline depth-extrapolation
+    # compiles; cost_analysis does not scale while-loop trip counts)
+    unroll_layers: bool = False
+    # §Perf: barrier after residual adds — pins TP psums to bf16 (XLA
+    # otherwise hoists the norm's f32 upcast across the all-reduce, 2x wire)
+    psum_barrier: bool = False
+
+    # ------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def group_size(self) -> int:
+        """GQA group size (q heads per kv head)."""
+        return max(self.n_heads // max(self.n_kv_heads, 1), 1)
+
+    @property
+    def padded_heads(self) -> int:
+        """q heads padded to a multiple of lcm(tp_pad, group_size)."""
+        m = math.lcm(self.tp_pad, self.group_size)
+        return math.ceil(self.n_heads / m) * m
+
+    @property
+    def padded_kv_heads(self) -> int:
+        return self.padded_heads // self.group_size
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a 128 multiple when TP-padding is on (Megatron
+        convention); loss/logits mask the padded tail."""
+        if self.tp_pad <= 1:
+            return self.vocab_size
+        return math.ceil(self.vocab_size / 128) * 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Eligible for long_500k (attn-free / hybrid / sliding-window)."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs autoregress (whisper decoder included)
+
+    def dtype_jnp(self):
+        import jax.numpy as jnp
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg: ModelConfig) -> Tuple[str, ...]:
+    """Shape cells that apply to this arch (skips per assignment rules)."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.is_subquadratic:
+        out.append("long_500k")
+    return tuple(out)

@@ -1,0 +1,12 @@
+"""InternVL2-76B — InternViT frontend (stub) + InternLM2-72B backbone.
+[arXiv:2404.16821]  Backbone only per assignment; patch embeddings are
+precomputed inputs (n_patches=256 stub)."""
+from .base import ModelConfig
+from .registry import register
+
+CONFIG = register(ModelConfig(
+    name="internvl2-76b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=28672, vocab_size=128256, head_dim=128,
+    rope_theta=1_000_000.0, n_patches=256,
+))

@@ -1,0 +1,15 @@
+"""Jamba-1.5-Large (398B) — hybrid Mamba+attention 1:7 interleave, MoE 16e
+top-2 every other layer.  [arXiv:2403.19887]
+No positional embeddings (jamba relies on the mamba layers for position).
+SSD (mamba2-style) mixer with N=128 — our TPU-native SSM (DESIGN.md §8)."""
+from .base import ModelConfig
+from .registry import register
+
+CONFIG = register(ModelConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=24576, vocab_size=65536, head_dim=128,
+    n_experts=16, top_k=2, d_ff_expert=24576, moe_every=2,
+    attn_every=8, pos_embed="none",
+    ssm_state=128, ssm_head_dim=64, ssm_expand=2, ssm_groups=8,
+))

@@ -1,0 +1,15 @@
+"""LLaMA2-7B — the paper's main experimental model (Table 1/2).  MHA."""
+from .base import ModelConfig
+from .registry import register
+
+CONFIG = register(ModelConfig(
+    name="llama2-7b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32,
+    d_ff=11008, vocab_size=32000, head_dim=128,
+))
+
+CONFIG_13B = register(ModelConfig(
+    name="llama2-13b", family="dense",
+    n_layers=40, d_model=5120, n_heads=40, n_kv_heads=40,
+    d_ff=13824, vocab_size=32000, head_dim=128,
+))

@@ -1,0 +1,12 @@
+"""Mamba2-1.3B — attention-free SSD (state-space duality).
+[arXiv:2405.21060]  d_inner=4096, 64 ssd-heads of 64, N=128."""
+from .base import ModelConfig
+from .registry import register
+
+CONFIG = register(ModelConfig(
+    name="mamba2-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=1, n_kv_heads=1,
+    d_ff=0, vocab_size=50280, head_dim=64,
+    ssm_state=128, ssm_head_dim=64, ssm_expand=2, ssm_groups=1,
+    pos_embed="none",
+))

@@ -1,0 +1,11 @@
+"""Mixtral-8x7B — 8 experts top-2 MoE, SWA 4096.  [arXiv:2401.04088]"""
+from .base import ModelConfig
+from .registry import register
+
+CONFIG = register(ModelConfig(
+    name="mixtral-8x7b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab_size=32000, head_dim=128,
+    n_experts=8, top_k=2, d_ff_expert=14336,
+    sliding_window=4096, rope_theta=1_000_000.0,
+))

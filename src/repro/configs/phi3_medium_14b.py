@@ -1,0 +1,10 @@
+"""Phi3-medium-14B — dense, RoPE SwiGLU GQA.  [arXiv:2404.14219]
+40 q-heads: padded to 48 on the production mesh (tp_pad=16, group=4)."""
+from .base import ModelConfig
+from .registry import register
+
+CONFIG = register(ModelConfig(
+    name="phi3-medium-14b", family="dense",
+    n_layers=40, d_model=5120, n_heads=40, n_kv_heads=10,
+    d_ff=17920, vocab_size=100352, head_dim=128,
+))

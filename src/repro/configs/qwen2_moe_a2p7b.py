@@ -1,0 +1,12 @@
+"""Qwen1.5-MoE-A2.7B — 60 routed experts top-4 + 4 shared experts.
+[hf:Qwen/Qwen1.5-MoE-A2.7B]"""
+from .base import ModelConfig
+from .registry import register
+
+CONFIG = register(ModelConfig(
+    name="qwen2-moe-a2.7b", family="moe",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab_size=151936, head_dim=128,
+    n_experts=60, top_k=4, d_ff_expert=1408, n_shared_experts=4,
+    rope_theta=1_000_000.0,
+))

@@ -1,0 +1,106 @@
+"""Architecture registry: exact assigned configs + smoke-scale variants +
+``input_specs()`` ShapeDtypeStruct stand-ins for the dry-run.
+
+Sources are the assignment's public configs; the modality frontends of the
+[vlm]/[audio] entries are stubs per the assignment (``input_specs`` provides
+precomputed patch/frame embeddings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, SHAPES, ShapeConfig, applicable_shapes
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    from . import ALL_ARCHS  # noqa: F401  (force module import)
+    return _REGISTRY[name]
+
+
+def list_archs():
+    from . import ALL_ARCHS  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# smoke-scale reduction: same family/topology, tiny dims
+# ---------------------------------------------------------------------------
+
+def smoke(cfg: ModelConfig) -> ModelConfig:
+    kw: Dict[str, Any] = dict(
+        n_layers=min(cfg.n_layers, 4),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2),
+        d_ff=128,
+        vocab_size=128,
+        head_dim=16,
+        dtype="float32",
+        remat="none",
+        attn_chunk=32,
+        ssm_chunk=16,
+        rope_theta=10000.0,
+    )
+    if cfg.family == "hybrid":
+        kw["n_layers"] = cfg.attn_every           # one full pattern group
+    if cfg.n_experts:
+        kw.update(n_experts=min(cfg.n_experts, 4),
+                  d_ff_expert=64,
+                  n_shared_experts=min(cfg.n_shared_experts, 2))
+    if cfg.ssm_state:
+        kw.update(ssm_state=16, ssm_head_dim=8, ssm_groups=min(cfg.ssm_groups, 2))
+    if cfg.family == "encdec":
+        kw.update(n_enc_layers=2, n_layers=2, enc_seq=24, max_pos=128)
+    if cfg.family == "vlm":
+        kw.update(n_patches=8)
+    if cfg.sliding_window:
+        kw["sliding_window"] = 32
+    if cfg.max_pos:
+        kw["max_pos"] = 128
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **kw)
+
+
+# ---------------------------------------------------------------------------
+# input specs (abstract stand-ins, never allocated)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                concrete: bool = False) -> Dict[str, Any]:
+    """Model inputs for one (arch × shape) cell.
+
+    train/prefill: tokens (B, S) [+ patch_embeds / frames stubs]
+    decode: tokens (B, 1) — the cache is built separately.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    emb = cfg.dtype_jnp()
+
+    def mk(shp, dt):
+        if concrete:
+            return jnp.zeros(shp, dt)
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    out: Dict[str, Any] = {}
+    if shape.is_decode:
+        out["tokens"] = mk((B, 1), tok)
+    else:
+        out["tokens"] = mk((B, S), tok)
+        out["labels"] = mk((B, S), tok)
+        if cfg.family == "vlm":
+            out["patch_embeds"] = mk((B, cfg.n_patches, cfg.d_model), emb)
+    if cfg.family == "encdec" and not shape.is_decode:
+        out["frames"] = mk((B, cfg.enc_seq, cfg.d_model), emb)
+    if cfg.family == "vlm" and shape.is_decode:
+        pass  # patches already live in the KV cache at decode time
+    return out

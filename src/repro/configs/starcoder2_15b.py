@@ -1,0 +1,10 @@
+"""StarCoder2-15B — dense GQA + RoPE, layernorm + gelu MLP.  [arXiv:2402.19173]"""
+from .base import ModelConfig
+from .registry import register
+
+CONFIG = register(ModelConfig(
+    name="starcoder2-15b", family="dense",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=4,
+    d_ff=24576, vocab_size=49152, head_dim=128,
+    norm="layernorm", act="gelu",
+))

@@ -1,0 +1,14 @@
+"""Whisper-base — encoder-decoder, conv frontend stubbed to precomputed
+frame embeddings (B, 1500, 512).  [arXiv:2212.04356]
+max_pos=32768 so the assigned decode_32k cell lowers mechanically (real
+Whisper caps the decoder at 448 positions — noted in DESIGN.md)."""
+from .base import ModelConfig
+from .registry import register
+
+CONFIG = register(ModelConfig(
+    name="whisper-base", family="encdec",
+    n_layers=6, n_enc_layers=6, d_model=512, n_heads=8, n_kv_heads=8,
+    d_ff=2048, vocab_size=51865, head_dim=64,
+    norm="layernorm", act="gelu", pos_embed="learned",
+    enc_seq=1500, max_pos=32768,
+))

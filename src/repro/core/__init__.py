@@ -1,0 +1,31 @@
+"""MoS core: global shard pools, index routing, materialization, and every
+baseline adapter (LoRA / VeRA / TiedLoRA / PRoLoRA / pure-sharing probes)
+behind one functional interface.  See DESIGN.md §1-2.
+"""
+from .types import AdapterConfig, LinearTypeSpec, PoolGeometry, METHODS
+from .adapters import (
+    AdapterPlan,
+    make_plan,
+    init_state,
+    split_scan,
+    layer_slice,
+    delta,
+    materialize_ab,
+    merge_weights,
+    param_count,
+    count_from_state,
+)
+from .materialize import materialize, materialize_stack, lowrank_delta, merged_delta_w
+from .pools import resolve_geometry, init_pools
+from .routing import build_index_matrices, validate_privatization
+from .diversity import diversity, diversity_report
+
+__all__ = [
+    "AdapterConfig", "LinearTypeSpec", "PoolGeometry", "METHODS",
+    "AdapterPlan", "make_plan", "init_state", "split_scan", "layer_slice",
+    "delta", "materialize_ab", "merge_weights", "param_count",
+    "count_from_state", "materialize", "materialize_stack", "lowrank_delta",
+    "merged_delta_w", "resolve_geometry", "init_pools",
+    "build_index_matrices", "validate_privatization",
+    "diversity", "diversity_report",
+]

@@ -1,0 +1,410 @@
+"""Unified adapter interface: MoS + every baseline the paper compares against.
+
+One ``AdapterPlan`` + ``state`` pytree covers:
+
+  * ``mos``       — the paper's method (global pools + index routing)
+  * ``pure``      — pure sharing / + random scaling / + subset selection
+                    (paper Sec. 2, Table 1 probes; same pool machinery)
+  * ``lora``      — vanilla LoRA (Hu et al., 2021)
+  * ``vera``      — frozen shared matrices + trainable per-layer d/b vectors
+  * ``tied_lora`` — shared trainable A/B + per-layer trainable u/v vectors
+  * ``prolora``   — intra-layer rotated replication (rotation-only variant)
+  * ``none``      — no adapter (full-finetune / frozen baselines)
+
+State layout (a pure pytree of arrays):
+
+    state = {"trainable": {type_name: {...}}, "static": {type_name: {...}}}
+
+Keys listed in ``PER_LAYER_KEYS[method]`` carry a leading ``L`` dimension and
+are meant to be sliced per-instance (scan xs in the model); everything else is
+shared across instances (scan closure).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import pools as pools_lib
+from . import routing as routing_lib
+from .materialize import lowrank_delta, materialize, merged_delta_w
+from .types import AdapterConfig, LinearTypeSpec, PoolGeometry
+
+# keys with a leading L (n_instances) dimension, per method
+PER_LAYER_KEYS = {
+    "mos": {"static": ("idx_a", "idx_b", "scale")},
+    "pure": {"static": ("idx_a", "idx_b", "scale")},
+    "lora": {"trainable": ("a", "b")},
+    "vera": {"trainable": ("d", "bvec")},
+    "tied_lora": {"trainable": ("u", "v")},
+    "prolora": {"trainable": ("a_chunk", "b_chunk")},
+    "none": {},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class AdapterPlan:
+    cfg: AdapterConfig
+    specs: Tuple[LinearTypeSpec, ...]
+    geoms: Dict[str, PoolGeometry]  # only for pooled methods
+
+    @property
+    def method(self) -> str:
+        return self.cfg.method
+
+    def spec(self, name: str) -> LinearTypeSpec:
+        for s in self.specs:
+            if s.name == name:
+                return s
+        raise KeyError(name)
+
+
+def make_plan(cfg: AdapterConfig, specs: Sequence[LinearTypeSpec]) -> AdapterPlan:
+    geoms = {}
+    if cfg.method in ("mos", "pure"):
+        for s in specs:
+            geoms[s.name] = pools_lib.resolve_geometry(cfg, s)
+    return AdapterPlan(cfg=cfg, specs=tuple(specs), geoms=geoms)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _abstract(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _init_type(
+    plan: AdapterPlan, spec: LinearTypeSpec, rng, abstract: bool
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    cfg = plan.cfg
+    m, dt = cfg.method, cfg.dtype
+    L, h, o = spec.n_instances, spec.h, spec.o
+    kaiming = math.sqrt(3.0 / h)
+
+    def uni(key, shape, bound):
+        if abstract:
+            return _abstract(shape, dt)
+        return jax.random.uniform(key, shape, dt, minval=-bound, maxval=bound)
+
+    def zeros(shape):
+        if abstract:
+            return _abstract(shape, dt)
+        return jnp.zeros(shape, dt)
+
+    def full(shape, v):
+        if abstract:
+            return _abstract(shape, dt)
+        return jnp.full(shape, v, dt)
+
+    if m == "none":
+        return {}, {}
+
+    if m in ("mos", "pure"):
+        geom = plan.geoms[spec.name]
+        tr = pools_lib.init_pools(rng, geom, dt, abstract=abstract)
+        idx_a, idx_b = routing_lib.build_index_matrices(
+            cfg, geom, seed=cfg.seed + _stable_hash(spec.name)
+        )
+        st = {"idx_a": jnp.asarray(idx_a), "idx_b": jnp.asarray(idx_b)}
+        if m == "pure" and cfg.random_scaling:
+            st["scale"] = jnp.asarray(
+                routing_lib.build_random_scaling(
+                    geom, seed=cfg.seed + _stable_hash(spec.name)
+                ),
+                dtype=dt,
+            )
+        return {"a_pool": tr["a"], "b_pool": tr["b"]}, st
+
+    if m == "lora":
+        r = cfg.rank
+        k1, _ = jax.random.split(rng)
+        return {"a": uni(k1, (L, r, h), kaiming), "b": zeros((L, r, o))}, {}
+
+    if m == "vera":
+        R = cfg.rank
+        k1, k2 = jax.random.split(rng)
+        # frozen shared random matrices (not trainable)
+        st = {
+            "a": uni(k1, (R, h), kaiming),
+            "b_mat": uni(k2, (R, o), math.sqrt(3.0 / R)),
+        }
+        tr = {"d": full((L, R), cfg.vera_d_init), "bvec": zeros((L, o))}
+        return tr, st
+
+    if m == "tied_lora":
+        r = cfg.tied_rank
+        k1, _ = jax.random.split(rng)
+        tr = {
+            "a": uni(k1, (r, h), kaiming),
+            "b": zeros((r, o)),
+            "u": full((L, r), 1.0),
+            "v": full((L, o), 1.0),
+        }
+        return tr, {}
+
+    if m == "prolora":
+        r, mm = cfg.rank, cfg.prolora_m
+        mm = _largest_divisor(h, o, mm)
+        k1, _ = jax.random.split(rng)
+        # chunks are replicated m× along the feature dims with rank-rotation
+        tr = {
+            "a_chunk": uni(k1, (L, r, h // mm), kaiming),
+            "b_chunk": zeros((L, r, o // mm)),
+        }
+        return tr, {}
+
+    raise ValueError(m)
+
+
+def _largest_divisor(h: int, o: int, cap: int) -> int:
+    g = math.gcd(h, o)
+    for d in range(min(cap, g), 0, -1):
+        if g % d == 0:
+            return d
+    return 1
+
+
+def _stable_hash(name: str) -> int:
+    v = 0
+    for ch in name:
+        v = (v * 131 + ord(ch)) % (2**31 - 1)
+    return v
+
+
+def init_state(plan: AdapterPlan, rng: jax.Array, abstract: bool = False):
+    trainable, static = {}, {}
+    for i, spec in enumerate(plan.specs):
+        sub = jax.random.fold_in(rng, i)
+        tr, st = _init_type(plan, spec, sub, abstract)
+        if tr:
+            trainable[spec.name] = tr
+        if st:
+            static[spec.name] = st
+    return {"trainable": trainable, "static": static}
+
+
+# ---------------------------------------------------------------------------
+# scan split helpers
+# ---------------------------------------------------------------------------
+
+def split_scan(plan: AdapterPlan, state, names: Sequence[str]):
+    """Split state for the given type names into (shared, stacked) trees.
+
+    ``stacked`` leaves have a leading L dim and should be passed as scan xs;
+    ``shared`` is closed over.  Both keep the {"trainable"/"static"} split so
+    ``delta`` can be called uniformly with slices.
+    """
+    keys = PER_LAYER_KEYS[plan.method]
+    shared = {"trainable": {}, "static": {}}
+    stacked = {"trainable": {}, "static": {}}
+    for grp in ("trainable", "static"):
+        per_layer = set(keys.get(grp, ()))
+        for name in names:
+            d = state[grp].get(name, {})
+            sh = {k: v for k, v in d.items() if k not in per_layer}
+            stk = {k: v for k, v in d.items() if k in per_layer}
+            if sh:
+                shared[grp][name] = sh
+            if stk:
+                stacked[grp][name] = stk
+    return shared, stacked
+
+
+def layer_slice(plan: AdapterPlan, state, name: str, k: int):
+    """Per-instance slice (python int k) for non-scan call sites."""
+    keys = PER_LAYER_KEYS[plan.method]
+    out = {"trainable": {}, "static": {}}
+    for grp in ("trainable", "static"):
+        per_layer = set(keys.get(grp, ()))
+        d = state[grp].get(name, {})
+        out[grp][name] = {
+            kk: (v[k] if kk in per_layer else v) for kk, v in d.items()
+        }
+    return out
+
+
+def _merge_slice(shared, stacked_slice, name: str) -> Dict[str, Dict[str, Any]]:
+    tr = dict(shared["trainable"].get(name, {}))
+    tr.update(stacked_slice["trainable"].get(name, {}))
+    st = dict(shared["static"].get(name, {}))
+    st.update(stacked_slice["static"].get(name, {}))
+    return {"trainable": tr, "static": st}
+
+
+# ---------------------------------------------------------------------------
+# materialization + delta
+# ---------------------------------------------------------------------------
+
+def materialize_ab(
+    plan: AdapterPlan, merged: Dict[str, Dict[str, Any]], name: str
+):
+    """→ (a (r,h), b_rows (r,o), row_scale|None, col_scale|None, scaling)."""
+    cfg = plan.cfg
+    tr, st = merged["trainable"], merged["static"]
+    m = cfg.method
+    if m in ("mos", "pure"):
+        geom = plan.geoms[name]
+        a = materialize(tr["a_pool"], st["idx_a"])
+        b = materialize(tr["b_pool"], st["idx_b"])
+        return a, b, st.get("scale"), None, cfg.scaling(geom.r)
+    if m == "lora":
+        return tr["a"], tr["b"], None, None, cfg.scaling(cfg.rank)
+    if m == "vera":
+        return st["a"], st["b_mat"], tr["d"], tr["bvec"], 1.0
+    if m == "tied_lora":
+        return tr["a"], tr["b"], tr["u"], tr["v"], cfg.scaling(cfg.tied_rank)
+    if m == "prolora":
+        a_c, b_c = tr["a_chunk"], tr["b_chunk"]
+        r = a_c.shape[0]
+        mm_a = plan.spec(name).h // a_c.shape[1]
+        stride = max(r // max(mm_a, 1), 1)
+        a = jnp.concatenate(
+            [jnp.roll(a_c, j * stride, axis=0) for j in range(mm_a)], axis=1
+        )
+        b = jnp.concatenate(
+            [jnp.roll(b_c, j * stride, axis=0) for j in range(mm_a)], axis=1
+        )
+        return a, b, None, None, cfg.scaling(r)
+    raise ValueError(m)
+
+
+def delta(
+    plan: AdapterPlan,
+    shared,
+    stacked_slice,
+    name: str,
+    x: jax.Array,
+    dropout_rng: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Adapter delta for one adapted linear: returns x ΔWᵀ, shape (..., o)."""
+    if plan.method == "none":
+        return jnp.zeros(x.shape[:-1] + (plan.spec(name).o,), x.dtype)
+    merged = _merge_slice(shared, stacked_slice, name)
+    a, b, rs, cs, scale = materialize_ab(plan, merged, name)
+    y = lowrank_delta(
+        x, a, b, scale, row_scale=rs,
+        dropout_rng=dropout_rng, dropout=plan.cfg.dropout,
+    )
+    if cs is not None:  # vera/tied output vector
+        y = y * cs.astype(y.dtype)
+    return y
+
+
+def delta_factored(
+    plan: AdapterPlan,
+    shared,
+    stacked_slice,
+    name: str,
+    x: jax.Array,
+    dropout_rng: Optional[jax.Array] = None,
+):
+    """Factored adapter delta: returns (u, b_rows, scaling, col_scale).
+
+    The caller adds ``(u @ b_rows[:, sl]) * scaling`` per output slice — used
+    when the base weight of one *logical* linear (e.g. mamba in_proj) is
+    stored split for sharding, while the adapter stays fused (same math as
+    :func:`delta`, never materializing the full (..., o) delta).
+    """
+    if plan.method == "none":
+        return None
+    merged = _merge_slice(shared, stacked_slice, name)
+    a, b, rs, cs, scale = materialize_ab(plan, merged, name)
+    if plan.cfg.dropout > 0.0 and dropout_rng is not None:
+        keep = jax.random.bernoulli(dropout_rng, 1.0 - plan.cfg.dropout, x.shape)
+        x = jnp.where(keep, x / (1.0 - plan.cfg.dropout), 0.0)
+    u = jnp.einsum("...h,rh->...r", x, a.astype(x.dtype))
+    from ..distributed.context import constrain_rank_u
+    u = constrain_rank_u(u)
+    if rs is not None:
+        u = u * rs.astype(u.dtype)
+    return u, b, scale, cs
+
+
+def expert_delta(
+    plan: AdapterPlan,
+    shared,
+    idx_slice,         # stacked_slice for this position: leaves lead with E
+    name: str,
+    h: jax.Array,      # (E, C, d) expert inputs
+) -> jax.Array:
+    """Batched per-expert adapter delta for routed-expert linears.
+
+    Experts act as extra pool-sharing instances (DESIGN.md §5).  Supported
+    for mos/pure (materialize per-expert from the shared pool) and lora
+    (per-expert stacked matrices).
+    """
+    if plan.method == "none":
+        return jnp.zeros(h.shape[:-1] + (plan.spec(name).o,), h.dtype)
+    cfg = plan.cfg
+    if plan.method in ("mos", "pure"):
+        tr = shared["trainable"][name]
+        st = idx_slice["static"][name]
+        from .materialize import materialize_stack
+        a = materialize_stack(tr["a_pool"], st["idx_a"])   # (E, r, h)
+        b = materialize_stack(tr["b_pool"], st["idx_b"])   # (E, r, o)
+        r = plan.geoms[name].r
+    elif plan.method == "lora":
+        tr = idx_slice["trainable"][name]
+        a, b = tr["a"], tr["b"]
+        r = cfg.rank
+    else:
+        raise NotImplementedError(
+            f"expert adapters not supported for method {plan.method!r}")
+    u = jnp.einsum("ecd,erd->ecr", h, a.astype(h.dtype))
+    y = jnp.einsum("ecr,ero->eco", u, b.astype(h.dtype))
+    return y * jnp.asarray(cfg.scaling(r), h.dtype)
+
+
+def merge_weights(plan: AdapterPlan, state, name: str, k: int, w: jax.Array):
+    """W + ΔWᵏ for deployment-time merging (paper §3.6)."""
+    sl = layer_slice(plan, state, name, k)
+    # layer_slice returns {"trainable": {name: {...}}, ...}; unwrap
+    m = {"trainable": sl["trainable"][name], "static": sl["static"][name]}
+    a, b, rs, cs, scale = materialize_ab(plan, m, name)
+    dw = merged_delta_w(a, b, scale, row_scale=rs)
+    if cs is not None:
+        dw = dw * cs[:, None].astype(dw.dtype)
+    return w + dw.astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# parameter accounting (reproduces paper Table 2 "# Param." column)
+# ---------------------------------------------------------------------------
+
+def param_count(plan: AdapterPlan) -> Dict[str, int]:
+    """Closed-form trainable parameter count per type + total."""
+    cfg = plan.cfg
+    out: Dict[str, int] = {}
+    for s in plan.specs:
+        L, h, o = s.n_instances, s.h, s.o
+        m = cfg.method
+        if m == "none":
+            n = 0
+        elif m in ("mos", "pure"):
+            n = plan.geoms[s.name].trainable_params
+        elif m == "lora":
+            n = L * cfg.rank * (h + o)
+        elif m == "vera":
+            n = L * (cfg.rank + o)
+        elif m == "tied_lora":
+            r = cfg.tied_rank
+            n = r * (h + o) + L * (r + o)
+        elif m == "prolora":
+            mm = _largest_divisor(h, o, cfg.prolora_m)
+            n = L * cfg.rank * (h + o) // mm
+        else:
+            raise ValueError(m)
+        out[s.name] = n
+    out["total"] = sum(out.values())
+    return out
+
+
+def count_from_state(state) -> int:
+    leaves = jax.tree_util.tree_leaves(state["trainable"])
+    return int(sum(np.prod(l.shape) for l in leaves))

@@ -1,0 +1,68 @@
+"""Materialization of per-layer low-rank matrices from global pools, and the
+low-rank delta application shared by every adapter method.
+
+``materialize_a``/``materialize_b`` are the pure-jnp reference for the Pallas
+kernel in ``repro.kernels.mos_gather`` (gather + concat = reshape).  Both are
+used directly in the jitted train/serve steps — the gathers are
+compile-time-regular (indices are frozen buffers) so XLA schedules them well;
+the Pallas kernel fuses them with the first matmul for the TPU hot path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def materialize(pool: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather shards and concatenate: pool (n, s), idx (r, l) → (r, l*s).
+
+    Row i of the result is the concatenation of ``l`` shards — exactly the
+    paper's Figure 2b retrieval.
+    """
+    r = idx.shape[0]
+    return jnp.take(pool, idx.reshape(-1), axis=0).reshape(r, -1)
+
+
+def materialize_stack(pool: jax.Array, idx: jax.Array) -> jax.Array:
+    """Vectorized over instances: idx (L, r, l) → (L, r, l*s)."""
+    L, r = idx.shape[0], idx.shape[1]
+    return jnp.take(pool, idx.reshape(-1), axis=0).reshape(L, r, -1)
+
+
+def lowrank_delta(
+    x: jax.Array,
+    a: jax.Array,             # (r, h)   — A^k rows
+    b_rows: jax.Array,        # (r, o)   — B^k columns, stored row-major
+    scaling: float,
+    row_scale: Optional[jax.Array] = None,   # (r,) random-scaling probe
+    dropout_rng: Optional[jax.Array] = None,
+    dropout: float = 0.0,
+) -> jax.Array:
+    """y = ((drop(x) @ Aᵀ) ⊙ s) @ B_rows * (α/r)  — shape (..., o).
+
+    Computes the LoRA delta ``x ΔWᵀ`` with ΔW = B A (paper eq. 1) without
+    ever forming ΔW.
+    """
+    if dropout > 0.0 and dropout_rng is not None:
+        keep = jax.random.bernoulli(dropout_rng, 1.0 - dropout, x.shape)
+        x = jnp.where(keep, x / (1.0 - dropout), 0.0)
+    u = jnp.einsum("...h,rh->...r", x, a.astype(x.dtype))
+    from ..distributed.context import constrain_rank_u
+    u = constrain_rank_u(u)
+    if row_scale is not None:
+        u = u * row_scale.astype(u.dtype)
+    y = jnp.einsum("...r,ro->...o", u, b_rows.astype(x.dtype))
+    return y * jnp.asarray(scaling, dtype=x.dtype)
+
+
+def merged_delta_w(
+    a: jax.Array, b_rows: jax.Array, scaling: float,
+    row_scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    """ΔW = scaling · B A as an (o, h) matrix — for LoRA-style weight
+    merging at deployment (paper §3.6 'linear properties')."""
+    if row_scale is not None:
+        a = a * row_scale[:, None].astype(a.dtype)
+    return scaling * jnp.einsum("ro,rh->oh", b_rows, a)

@@ -1,0 +1,106 @@
+"""Global shard-pool sizing and initialization (paper §3.1, §3.5).
+
+For each linear-layer type (q/k/v/..., with fan-in ``h``, fan-out ``o``,
+shared across ``L`` instances) MoS keeps two pools:
+
+  * ``A`` pool: ``e*L*l`` shards of length ``h // l``  (rows of A-vectors)
+  * ``B`` pool: ``e*L*l`` shards of length ``o // l``  (columns of B-vectors)
+
+so that the *trainable* parameter count equals vanilla LoRA at rank ``e``
+applied to all ``L`` instances — the paper's budget-matching convention
+(Table 2: MoS "# Param." == LoRA "# Param." at e == LoRA rank).
+
+Privatization (§3.5) reserves the tail ``L*p*l`` shards of each pool as the
+private segment; each (instance, private-row) consumes its own shards exactly
+once.  Initialization follows the paper: B pools are zero (so finetuning
+starts at the pretrained model), A pools use a Kaiming-uniform bound computed
+from the *full* fan-in ``h`` (not the shard length), matching "adjust the
+sampling boundaries ... to align with the vanilla LoRA" (PRoLoRA convention).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .types import AdapterConfig, LinearTypeSpec, PoolGeometry
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    for d in range(min(cap, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def resolve_geometry(cfg: AdapterConfig, spec: LinearTypeSpec) -> PoolGeometry:
+    """Resolve (e, r, l, p) for one linear type, clamping where needed.
+
+    Rules (documented, deterministic):
+      * l must divide both h and o → use the largest divisor of gcd(h, o)
+        not exceeding the requested ``shards_per_vector``.
+      * pure-sharing mode forces r = e*L, l = 1, p = 0 (all vectors, shared
+        identically or via subset selection per cfg flags).
+      * p <= min(r, e); additionally if r > p the public segment must be
+        non-empty (e > p), otherwise p is reduced.
+    """
+    L = spec.n_instances
+    e = cfg.equiv_rank
+    if cfg.method == "pure" and not cfg.subset_selection:
+        # pure sharing: every instance uses the whole pool
+        r, l, p = e * L, 1, 0
+    elif cfg.method == "pure":
+        # pure sharing + subset selection (paper Table 1 probe):
+        # unordered subset, paired indices, no sharding/privatization
+        r, l, p = cfg.rank, 1, 0
+    else:
+        r = cfg.rank
+        l = _largest_divisor_leq(math.gcd(spec.h, spec.o), cfg.shards_per_vector)
+        p = min(cfg.private_rank, r, e)
+        if r > p and e <= p:
+            p = max(e - 1, 0)
+    n_shards = e * L * l
+    n_private = L * p * l
+    if n_private > n_shards:
+        raise ValueError(
+            f"{spec.name}: private segment ({n_private}) exceeds pool ({n_shards})"
+        )
+    return PoolGeometry(
+        spec=spec,
+        e=e,
+        r=r,
+        l=l,
+        p=p,
+        n_shards=n_shards,
+        n_private=n_private,
+        shard_len_a=spec.h // l,
+        shard_len_b=spec.o // l,
+    )
+
+
+def init_pools(
+    rng: jax.Array,
+    geom: PoolGeometry,
+    dtype: Any,
+    abstract: bool = False,
+) -> Dict[str, Any]:
+    """Initialize {'a': (n_shards, h/l), 'b': (n_shards, o/l)} pools."""
+    a_shape = (geom.n_shards, geom.shard_len_a)
+    b_shape = (geom.n_shards, geom.shard_len_b)
+    if abstract:
+        return {
+            "a": jax.ShapeDtypeStruct(a_shape, dtype),
+            "b": jax.ShapeDtypeStruct(b_shape, dtype),
+        }
+    # Kaiming-uniform with the *virtual* full fan-in h (paper init note).
+    bound = math.sqrt(3.0 / geom.spec.h)
+    a = jax.random.uniform(rng, a_shape, dtype, minval=-bound, maxval=bound)
+    b = jnp.zeros(b_shape, dtype)
+    return {"a": a, "b": b}
+
+
+def pool_param_count(geom: PoolGeometry) -> int:
+    return geom.trainable_params

@@ -1,0 +1,100 @@
+"""Index-matrix construction — the MoE-like *index-based* router (paper §3).
+
+The router is deliberately input-independent (paper §C): index matrices are
+drawn once at initialization and frozen, so low-rank matrices can be
+materialized ahead of the activation (zero routing latency at inference, and
+compile-time-regular gathers on TPU).
+
+All four differentiation strategies are realized here:
+  * subset selection  — each instance draws r of the pooled rank vectors
+  * pair dissociation — independent draws for the A and B index matrices
+  * vector sharding   — indices address shards, (L, r, l) instead of (L, r)
+  * shard privatization — rows [0, p) of each instance address the private
+    tail segment, each private shard used exactly once globally
+
+Construction is host-side numpy (init-time only, deterministic from seed).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from .types import AdapterConfig, PoolGeometry
+
+
+def _sample_public(
+    rng: np.random.Generator, geom: PoolGeometry, n_rows: int
+) -> np.ndarray:
+    """Sample ``(n_rows, l)`` public shard ids for one instance/matrix.
+
+    Without replacement across the instance's draws when the public segment
+    is large enough (maximal intra-instance diversity; generalizes the
+    paper's boolean subset selection), otherwise with replacement.
+    """
+    need = n_rows * geom.l
+    if need == 0:
+        return np.zeros((0, geom.l), dtype=np.int32)
+    if geom.n_public >= need:
+        idx = rng.choice(geom.n_public, size=need, replace=False)
+    else:
+        idx = rng.integers(0, geom.n_public, size=need)
+    return idx.reshape(n_rows, geom.l).astype(np.int32)
+
+
+def _private_rows(geom: PoolGeometry, k: int) -> np.ndarray:
+    """Private shard ids for instance ``k``: rows (p, l), each used once."""
+    p, l = geom.p, geom.l
+    if p == 0:
+        return np.zeros((0, l), dtype=np.int32)
+    base = geom.n_public + (k * p * l)
+    return (base + np.arange(p * l, dtype=np.int32)).reshape(p, l)
+
+
+def build_index_matrices(
+    cfg: AdapterConfig, geom: PoolGeometry, seed: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Build frozen index matrices I_a, I_b of shape ``(L, r, l)`` (int32).
+
+    Private rows come first (rows [0, p)), public rows after — row order
+    inside a matrix does not change ΔW = Bᵏ Aᵏ (it permutes the rank dim of
+    both factors identically), so this layout is equivalent to the paper's
+    and keeps the privatized shards at a fixed offset for easy testing.
+    """
+    L, r = geom.spec.n_instances, geom.r
+    rng = np.random.default_rng(np.random.Philox(key=seed))
+    idx_a = np.zeros((L, r, geom.l), dtype=np.int32)
+    idx_b = np.zeros((L, r, geom.l), dtype=np.int32)
+    pure = cfg.method == "pure" and not cfg.subset_selection
+    for k in range(L):
+        if pure:
+            # every instance selects the whole pool, in order
+            row = np.arange(geom.n_shards, dtype=np.int32).reshape(r, 1)
+            idx_a[k], idx_b[k] = row, row
+            continue
+        priv = _private_rows(geom, k)
+        pub_a = _sample_public(rng, geom, r - geom.p)
+        idx_a[k] = np.concatenate([priv, pub_a], axis=0)
+        if cfg.pair_dissociation:
+            pub_b = _sample_public(rng, geom, r - geom.p)
+            idx_b[k] = np.concatenate([priv, pub_b], axis=0)
+        else:
+            # -pd ablation: identical index matrix for A and B
+            idx_b[k] = idx_a[k]
+    return idx_a, idx_b
+
+
+def build_random_scaling(
+    geom: PoolGeometry, seed: int
+) -> np.ndarray:
+    """Frozen per-instance rank scalars s ~ N(0,1) (paper Sec. 2, eq. for
+    random scaling).  Shape (L, r)."""
+    rng = np.random.default_rng(np.random.Philox(key=seed + 1))
+    return rng.standard_normal((geom.spec.n_instances, geom.r)).astype(np.float32)
+
+
+def validate_privatization(idx_a: np.ndarray, geom: PoolGeometry) -> bool:
+    """Check the privatization invariant: each private shard id appears at
+    most once across the whole index tensor."""
+    priv = idx_a[idx_a >= geom.n_public]
+    return len(np.unique(priv)) == priv.size

@@ -1,0 +1,114 @@
+"""Shared dataclasses for the MoS core.
+
+Everything in ``repro.core`` is purely functional: adapter *state* is a pytree
+of arrays split into ``trainable`` (receives gradients) and ``static``
+(index matrices, frozen random matrices, scaling buffers).  The model layer
+only ever calls :func:`repro.core.adapters.delta` with a layer-type name and a
+per-layer slice of the static state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+# Adapter methods implemented behind one interface.  ``pure`` covers the
+# paper's Sec. 2 probes via the ``random_scaling`` / ``subset_selection``
+# flags (pure sharing, + random scaling, + subset selection).
+METHODS = (
+    "none",
+    "lora",
+    "mos",
+    "pure",
+    "vera",
+    "tied_lora",
+    "prolora",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdapterConfig:
+    """Configuration for any supported PEFT adapter.
+
+    The MoS hyper-parameters follow the paper's notation:
+      * ``equiv_rank`` (e): trainable-parameter budget expressed as the LoRA
+        rank with an identical parameter count (pool size = e * L vectors).
+      * ``rank`` (r): materialized per-layer rank (paper uses e.g. e=2, r=8).
+      * ``shards_per_vector`` (l): vector sharding granularity.
+      * ``private_rank`` (p): rows per layer drawn from the private segment.
+      * ``pair_dissociation``: independent index matrices for A and B.
+    """
+
+    method: str = "mos"
+    rank: int = 8
+    equiv_rank: int = 2
+    shards_per_vector: int = 4
+    private_rank: int = 1
+    pair_dissociation: bool = True
+    # "pure" method probes (paper Sec. 2 / Table 1)
+    random_scaling: bool = False
+    subset_selection: bool = False
+    # generic LoRA knobs
+    alpha: float = 16.0
+    dropout: float = 0.0
+    # baselines
+    prolora_m: int = 2           # PRoLoRA replication factor
+    vera_d_init: float = 0.1     # VeRA d-vector init
+    tied_rank: int = 280         # TiedLoRA rank (paper Table 2)
+    # numerics
+    dtype: Any = jnp.float32
+    # whether routed-expert linears are adapted (experts act as extra
+    # pool-sharing instances; see DESIGN.md §5)
+    adapt_experts: bool = False
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(f"unknown adapter method {self.method!r}")
+
+    def scaling(self, rank: int) -> float:
+        return self.alpha / float(max(rank, 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearTypeSpec:
+    """One adapted linear-layer *type* (e.g. "q", "down", "ssm_in").
+
+    ``n_instances`` is the number of layer instances sharing this type's
+    global pool — usually the number of transformer blocks L, but e.g. the
+    whisper encoder and decoder stacks contribute separate types, and routed
+    experts can contribute ``L * E`` instances.
+    """
+
+    name: str
+    h: int              # input features (fan-in)
+    o: int              # output features (fan-out)
+    n_instances: int    # L (pool sharing breadth)
+
+    def lora_params(self, r: int) -> int:
+        return self.n_instances * r * (self.h + self.o)
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolGeometry:
+    """Resolved pool geometry for one linear type (see core/pools.py)."""
+
+    spec: LinearTypeSpec
+    e: int              # equivalent rank (budget)
+    r: int              # materialized rank
+    l: int              # shards per vector (resolved; divides h and o)
+    p: int              # private rank (resolved)
+    n_shards: int       # total shards per pool (A and B each) = e*L*l
+    n_private: int      # = L*p*l (placed at the tail of the pool)
+    shard_len_a: int    # = h // l
+    shard_len_b: int    # = o // l
+
+    @property
+    def n_public(self) -> int:
+        return self.n_shards - self.n_private
+
+    @property
+    def trainable_params(self) -> int:
+        # pools only; indices are frozen buffers
+        return self.n_shards * (self.shard_len_a + self.shard_len_b)

@@ -1,0 +1,3 @@
+"""Data substrate: synthetic chat-format tasks + sharded seekable loader."""
+from .synthetic import DataConfig, example, batch, IGNORE, N_SPECIAL, USER, ASSISTANT, EOS, PAD
+from .pipeline import ShardedLoader

@@ -1,0 +1,2 @@
+"""Distribution: mesh rules, sharding trees, manual collectives, pipeline."""
+from .sharding import AxisRules, DEFAULT_RULES, VARIANT_OVERRIDES, make_rules

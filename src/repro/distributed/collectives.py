@@ -1,0 +1,93 @@
+"""Manual collectives: int8 error-feedback gradient compression and a
+ppermute ring all-reduce — the distributed-optimization layer.
+
+``ring_allreduce_int8`` implements compressed data-parallel gradient
+averaging inside ``shard_map``:
+
+  1. residual-corrected gradient  g' = g + e     (error feedback)
+  2. per-tensor symmetric int8 quantization      (4× fewer wire bytes vs f32)
+  3. ring reduce: N-1 ppermute hops of the int8 payload + its fp32 scale,
+     accumulating in fp32 (quantization happens once — hops forward the
+     *original* int8 blocks, so there is no requantization error cascade)
+  4. new residual e' = g' - dequant(q)
+
+On the wire each hop moves 1 byte/element (+1 scale), vs 4 (fp32) or
+2 (bf16) for the XLA all-reduce — visible in the §Perf collective term.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _axis_size(axis_names) -> int:
+    n = 1
+    for a in (axis_names if isinstance(axis_names, (tuple, list)) else [axis_names]):
+        n *= jax.lax.axis_size(a)
+    return n
+
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ring_allreduce_quantized(q, scale, axis_name):
+    """All-reduce dequant(q, scale) around a ring with int8 payloads.
+
+    Each hop forwards the int8 block it *received* (wire stays 1B/elem);
+    accumulation is local fp32.  N-1 hops → every device holds the full sum.
+    """
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    acc = dequantize_int8(q, scale)
+    cur_q, cur_s = q, scale
+    for _ in range(n - 1):
+        cur_q = jax.lax.ppermute(cur_q, axis_name, perm)
+        cur_s = jax.lax.ppermute(cur_s, axis_name, perm)
+        acc = acc + dequantize_int8(cur_q, cur_s)
+    return acc
+
+
+def ring_allreduce_int8(grads, err_fb, axis_names):
+    """Compressed DP gradient mean with error feedback (tree version).
+
+    grads/err_fb: pytrees of fp32 leaves (local).  axis_names: data axes.
+    Returns (mean_grads, new_err_fb).
+    """
+    axes = tuple(axis_names) if isinstance(axis_names, (tuple, list)) \
+        else (axis_names,)
+    n_total = _axis_size(axes)
+
+    def one(g, e):
+        gc = g.astype(jnp.float32) + e
+        q, s = quantize_int8(gc)
+        new_e = gc - dequantize_int8(q, s)
+        acc = dequantize_int8(q, s)
+        # reduce over each data axis in sequence (ring per axis)
+        for a in axes:
+            acc = ring_allreduce_quantized(*quantize_int8(acc), a) \
+                if a != axes[0] else ring_allreduce_quantized(q, s, a)
+        return acc / n_total, new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err_fb)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in out]), \
+        tdef.unflatten([o[1] for o in out])
+
+
+def psum_scatter_mean(x, axis_name):
+    """Reduce-scatter + local mean — building block for sharded optimizers."""
+    n = jax.lax.axis_size(axis_name)
+    return jax.lax.psum_scatter(x, axis_name, tiled=True) / n

@@ -1,0 +1,108 @@
+"""Tracing-time sharding-constraint context.
+
+Model code is mesh-agnostic; launchers activate an ``AxisRules`` during
+``jit.lower`` tracing and the model sprinkles ``constrain_batch`` at layer
+boundaries.  Constraints pin ONLY the batch dim (everything else is
+``PartitionSpec.UNCONSTRAINED`` so GSPMD still chooses head/ff factoring) —
+without them, propagation through nested scans drops the data-parallel
+sharding of activations (observed: global-batch f32 buffers in the HLO).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CURRENT = None
+
+
+@contextlib.contextmanager
+def use_rules(rules):
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = rules
+    try:
+        yield
+    finally:
+        _CURRENT = prev
+
+
+def active_rules():
+    return _CURRENT
+
+
+def constrain_batch(x, batch_dim: int = 0):
+    """Pin the batch dim to the data axes; leave the rest unconstrained."""
+    r = _CURRENT
+    if r is None or x.ndim == 0:
+        return x
+    da = r.data_axes
+    if not da:
+        return x
+    entries = [P.UNCONSTRAINED] * x.ndim
+    entries[batch_dim] = da if len(da) > 1 else da[0]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, P(*entries)))
+
+
+def constrain_delta_out(y, col_parallel: bool):
+    """§Perf 'delta_shard': pin the adapter-delta output's feature dim to
+    the base linear's TP sharding.  Pools are replicated, so without this
+    GSPMD reshards the (B,S,o) delta via its replicate-then-partition
+    fallback — a full f32 all-reduce per adapted linear."""
+    r = _CURRENT
+    if r is None or not getattr(r, "delta_shard", False):
+        return y
+    if "model" not in r.mesh.axis_names:
+        return y
+    entries = [P.UNCONSTRAINED] * (y.ndim - 1) + \
+        ["model" if col_parallel else None]
+    return jax.lax.with_sharding_constraint(
+        y, NamedSharding(r.mesh, P(*entries)))
+
+
+def constrain_rank_u(u):
+    """§Perf 'delta_shard': force the adapter's rank-bottleneck psum.
+
+    For row-parallel base linears the shrink contraction (x Aᵀ) is over the
+    TP-sharded feature dim, so u is partial over "model".  Pinning u
+    replicated makes GSPMD reduce the (B,S,r) tensor (~KBs) instead of its
+    preferred reduce-after-expand on the (B,S,o) delta (~512 MB f32)."""
+    r = _CURRENT
+    if r is None or not getattr(r, "delta_shard", False) or u.ndim < 2:
+        return u
+    da = r.data_axes
+    if not da:
+        return u
+    entries = [da if len(da) > 1 else da[0]] + [None] * (u.ndim - 1)
+    return jax.lax.with_sharding_constraint(
+        u, NamedSharding(r.mesh, P(*entries)))
+
+
+def constrain_use(x, axes):
+    """Weight-use constraint for the 'fsdp_ag' §Perf variant: dims whose
+    logical axis maps to a DATA axis are pinned replicated *at use*, forcing
+    GSPMD to all-gather the (small, bf16) weight instead of partial-summing
+    the (large, f32-promoted) activations over the data axis.  Storage
+    sharding (in_shardings) is untouched — this is ZeRO-3-style
+    gather-on-use."""
+    r = _CURRENT
+    if r is None or not getattr(r, "gather_fsdp", False) or x.ndim == 0:
+        return x
+    data = set(r.data_axes)
+    entries = []
+    dirty = False
+    for name in axes:
+        v = r.rules.get(name)
+        vv = v if isinstance(v, tuple) else (v,)
+        if any(a in data for a in vv if a):
+            entries.append(None)
+            dirty = True
+        else:
+            entries.append(P.UNCONSTRAINED)
+    if not dirty or len(entries) != x.ndim:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, P(*entries)))

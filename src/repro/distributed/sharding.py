@@ -1,0 +1,161 @@
+"""Logical-axis → mesh-axis rules and sharding-tree construction.
+
+Parameters/caches carry *logical* axes (tuples of names, parallel to the
+param tree — see models/layers.py).  One rule set maps those names onto the
+production mesh; §Perf variants override individual rules without touching
+model code.
+
+Default layout (DESIGN.md §4):
+  TP over "model": q-heads, ffn, ssm-heads, vocab
+  FSDP over "data": the d_model dim of every large weight (2-D sharded
+    weights; XLA SPMD all-gathers them per-layer inside the scan)
+  DP over ("pod","data"): activation batch dims
+  SP: decode cells with B < data shard the KV-cache *sequence* instead
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    rules: Dict[str, Any]
+    mesh: Mesh
+    # §Perf 'fsdp_ag': gather FSDP weights at use instead of letting GSPMD
+    # partial-sum activations over the data axis (see context.constrain_use)
+    gather_fsdp: bool = False
+    # §Perf 'delta_shard': co-shard adapter-delta outputs with the base
+    # linear's TP columns (context.constrain_delta_out)
+    delta_shard: bool = False
+
+    @property
+    def data_axes(self):
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    def spec_for(self, axes: Tuple[str, ...]) -> P:
+        used = set()
+        entries = []
+        for name in axes:
+            v = self.rules.get(name, None)
+            if v is None:
+                entries.append(None)
+                continue
+            parts = tuple(a for a in (v if isinstance(v, tuple) else (v,))
+                          if a in self.mesh.axis_names and a not in used)
+            used.update(parts)
+            entries.append(parts if len(parts) > 1 else
+                           (parts[0] if parts else None))
+        return P(*entries)
+
+    def sharding_for(self, axes: Tuple[str, ...]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(axes))
+
+    def tree_shardings(self, axes_tree) -> Any:
+        return jax.tree.map(
+            lambda ax: self.sharding_for(ax),
+            axes_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x),
+        )
+
+    def batch_sharding(self, ndim: int, batch_dim: int = 0) -> NamedSharding:
+        entries = [None] * ndim
+        da = self.data_axes
+        entries[batch_dim] = da if len(da) > 1 else (da[0] if da else None)
+        return NamedSharding(self.mesh, P(*entries))
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+
+# sizes of each dim must be divisible by the product of mapped axes; the
+# model guarantees this via head padding (configs/base.py) and MXU-aligned
+# ffn dims.  "data" entries implement FSDP for weights / DP for activations.
+DEFAULT_RULES: Dict[str, Any] = {
+    # tensor-parallel dims
+    "vocab": "model",
+    "heads_flat": "model",
+    "ff": "model",
+    "ff_expert": "model",
+    "dinner": "model",
+    "ssm_heads": "model",
+    # FSDP dim (weights' d_model side)
+    "embed": "data",
+    # replicated / small
+    "kv_flat": None,
+    "embed_out": None,
+    "embed_noshard": None,
+    "experts": None,         # EP variant maps this to "data"
+    "experts_noshard": None,
+    "pos": None,
+    "layers": None,
+    "conv": None,
+    "state_noshard": None,
+    # adapter pools: replicated (tiny, trainable)
+    "pool": None,
+    "rank": None,
+}
+
+
+def make_rules(mesh: Mesh, overrides: Optional[Dict[str, Any]] = None) -> AxisRules:
+    rules = dict(DEFAULT_RULES)
+    flags = {}
+    for k, v in (overrides or {}).items():
+        if k.startswith("_"):
+            flags[k[1:]] = v
+        else:
+            rules[k] = v
+    return AxisRules(rules=rules, mesh=mesh, **flags)
+
+
+# §Perf / feature variants ---------------------------------------------------
+
+VARIANT_OVERRIDES: Dict[str, Dict[str, Any]] = {
+    "baseline": {},
+    # expert parallelism: experts over the data axis (tokens all_to_all)
+    "ep": {"experts": "data", "ff_expert": "model"},
+    # no FSDP (pure TP; serving-style weight replication over data)
+    "no_fsdp": {"embed": None},
+    # FSDP kept for storage, weights all-gathered at use (ZeRO-3 gather)
+    "fsdp_ag": {"_gather_fsdp": True},
+    # FSDP over both data axes (more aggressive weight sharding)
+    "fsdp_pod": {"embed": ("pod", "data")},
+    # vocab replicated (kills lm-head collectives, costs memory)
+    "vocab_replicated": {"vocab": None},
+    # SP-decode: KV cache sequence sharded over "model" (+ no FSDP) — kills
+    # the decode-time full-cache gather (see EXPERIMENTS.md §Perf)
+    "kv_shard": {"kv_seq": "model", "embed": None},
+    # co-shard adapter deltas with base TP columns (kills the GSPMD
+    # replicate-then-partition all-reduce per adapted linear)
+    "delta_shard": {"_delta_shard": True},
+    # combined best-known training config (§Perf result)
+    "train_opt": {"_delta_shard": True, "embed": None},
+    # combined best-known serving config (§Perf result)
+    "serve_opt": {"_delta_shard": True, "kv_seq": "model", "embed": None},
+}
+
+
+def divisible(n: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    prod = int(np.prod([mesh.shape[a] for a in axes if a in mesh.axis_names]))
+    return n % max(prod, 1) == 0
+
+
+def validate_tree(rules: AxisRules, params, axes_tree):
+    """Assert every sharded dim is divisible by its mesh extent."""
+    flat_p = params if isinstance(params, dict) else dict(params)
+    for k, arr in flat_p.items():
+        ax = axes_tree[k]
+        for dim, name in zip(arr.shape, ax):
+            mapped = rules.rules.get(name)
+            if not divisible(dim, rules.mesh, mapped):
+                raise ValueError(
+                    f"{k}: dim {dim} (logical {name!r}) not divisible on "
+                    f"mesh axes {mapped!r}")

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical ops (validated interpret=True).
+
+mos_gather       — shard-pool gather+concat materialization (the paper's op)
+bgmv             — multi-tenant batched LoRA apply (Punica BGMV, TPU form)
+flash_attention  — blockwise causal attention with exact tile skipping
+"""

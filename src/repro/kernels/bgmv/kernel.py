@@ -1,0 +1,87 @@
+"""Pallas TPU kernels: batched multi-adapter LoRA apply (Punica BGMV).
+
+GPU Punica gathers adapter weights with warp shuffles per request; the TPU
+adaptation makes the per-request weight selection a *scalar-prefetch block
+redirect*: adapter ids live in SMEM and the BlockSpec index_map points each
+request's DMA at its adapter slab — the MXU then sees dense (h, r)/(r, o)
+tiles.  Decode-time x rows are (1, h): the shrink matmul is a skinny
+mat-vec, so requests are the parallel grid dim and the h dim is kept whole
+in VMEM (h ≤ 8k → ≤ 32 KB/row).
+
+``bgmv_expand`` tiles the output dim (o can be ~3.5·d for fused projections)
+so the per-step VMEM working set stays (r, o_tile) + (1, o_tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def _shrink_kernel(ids_ref, x_ref, a_ref, u_ref):
+    # x (1, h), a (1, r, h) → u (1, r)
+    x = x_ref[0, :]
+    a = a_ref[0]
+    u_ref[0, :] = jnp.dot(a, x, preferred_element_type=jnp.float32
+                          ).astype(u_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bgmv_shrink(x, a_stack, ids, interpret: bool = True):
+    """x (B, h), a_stack (T, r, h), ids (B,) → (B, r)."""
+    B, h = x.shape
+    T, r, _ = a_stack.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, h), lambda b, ids_ref: (b, 0)),
+            pl.BlockSpec((1, r, h), lambda b, ids_ref: (ids_ref[b], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, r), lambda b, ids_ref: (b, 0)),
+    )
+    return pl.pallas_call(
+        _shrink_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, r), x.dtype),
+        interpret=interpret,
+    )(ids, x, a_stack)
+
+
+def _expand_kernel(ids_ref, u_ref, b_ref, y_ref):
+    # u (1, r), b (1, r, ot) → y (1, ot)
+    u = u_ref[0, :]
+    b = b_ref[0]
+    y_ref[0, :] = jnp.dot(u, b, preferred_element_type=jnp.float32
+                          ).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "o_tile"))
+def bgmv_expand(u, b_stack, ids, interpret: bool = True, o_tile: int = 512):
+    """u (B, r), b_stack (T, r, o), ids (B,) → (B, o)."""
+    B, r = u.shape
+    T, _, o = b_stack.shape
+    ot = min(o_tile, o)
+    assert o % ot == 0, (o, ot)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, o // ot),
+        in_specs=[
+            pl.BlockSpec((1, r), lambda b, j, ids_ref: (b, 0)),
+            pl.BlockSpec((1, r, ot), lambda b, j, ids_ref: (ids_ref[b], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, ot), lambda b, j, ids_ref: (b, j)),
+    )
+    return pl.pallas_call(
+        _expand_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, o), u.dtype),
+        interpret=interpret,
+    )(ids, u, b_stack)

@@ -1,0 +1,23 @@
+"""Jit wrapper for BGMV: full per-request LoRA delta (shrink → expand)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import bgmv_expand, bgmv_shrink
+from .ref import bgmv_expand_ref, bgmv_ref, bgmv_shrink_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "scale"))
+def bgmv(x, a_stack, b_stack, ids, scale: float = 1.0,
+         interpret: bool = True):
+    """y_b = scale · (x_b A[id_b]ᵀ) B[id_b] — serving-time adapter delta."""
+    u = bgmv_shrink(x, a_stack, ids, interpret=interpret)
+    y = bgmv_expand(u, b_stack, ids, interpret=interpret)
+    return y * jnp.asarray(scale, y.dtype)
+
+
+__all__ = ["bgmv", "bgmv_shrink", "bgmv_expand",
+           "bgmv_ref", "bgmv_shrink_ref", "bgmv_expand_ref"]

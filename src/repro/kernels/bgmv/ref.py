@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the multi-tenant BGMV kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bgmv_shrink_ref(x, a_stack, ids):
+    """x (B, h), a_stack (T, r, h), ids (B,) → u (B, r) = A[id_b] x_b."""
+    a = jnp.take(a_stack, ids, axis=0)
+    return jnp.einsum("bh,brh->br", x, a.astype(x.dtype))
+
+
+def bgmv_expand_ref(u, b_stack, ids):
+    """u (B, r), b_stack (T, r, o), ids (B,) → y (B, o) = u_b B[id_b]."""
+    b = jnp.take(b_stack, ids, axis=0)
+    return jnp.einsum("br,bro->bo", u, b.astype(u.dtype))
+
+
+def bgmv_ref(x, a_stack, b_stack, ids, scale: float = 1.0):
+    return bgmv_expand_ref(bgmv_shrink_ref(x, a_stack, ids),
+                           b_stack, ids) * scale

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: blockwise (flash) attention with exact tile skipping.
+
+Grid = (B·H, q_blocks, kv_blocks); the kv dim is the innermost "arbitrary"
+dim so the (m, l, acc) running-softmax state lives in VMEM scratch across kv
+steps.  Causal/SWA tiles that are fully masked are skipped with
+``pl.when`` — on TPU the grid is executed sequentially per core, so the
+skip removes real work (this is the gap the XLA fallback cannot close;
+EXPERIMENTS.md §Roofline quantifies it).
+
+Block sizes default to (128, 128) — MXU-aligned in both matmul dims; d is
+kept whole (≤ 128 for every assigned arch).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _live_pred(q_start, k_start, bq, bk, causal, window):
+    live = jnp.bool_(True)
+    if causal:
+        live = jnp.logical_and(live, k_start <= q_start + bq - 1)
+    if window > 0:
+        live = jnp.logical_and(live, q_start - (k_start + bk - 1) < window)
+    return live
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+               *, scale, causal, window, bq, bk, nk):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    @pl.when(_live_pred(q_start, k_start, bq, bk, causal, window))
+    def _run():
+        q = q_ref[0].astype(jnp.float32)                 # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, ...] = (acc_ref[...] /
+                         jnp.maximum(l_ref[...], 1e-30)[:, None]
+                         ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                              "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128, interpret: bool = True):
+    """q/k/v (B, H, S, d) → (B, H, S, d)."""
+    B, H, S, d = q.shape
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    nq, nk = S // bq, S // bk
+    qf = q.reshape(B * H, S, d)
+    kf = k.reshape(B * H, S, d)
+    vf = v.reshape(B * H, S, d)
+
+    kernel = functools.partial(_fa_kernel, scale=1.0 / math.sqrt(d),
+                               causal=causal, window=window,
+                               bq=bq, bk=bk, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, d)

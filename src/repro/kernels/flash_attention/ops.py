@@ -1,0 +1,8 @@
+"""Jit wrapper for the flash-attention kernel (inference/forward use;
+training uses the XLA blockwise fallback whose backward is autodiffed)."""
+from __future__ import annotations
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+__all__ = ["flash_attention", "attention_ref"]

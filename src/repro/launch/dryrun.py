@@ -1,0 +1,386 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell on the production mesh and record memory / cost / collective stats.
+
+The first two lines above MUST precede any jax import (jax locks the device
+count at first init).  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--variant ep]
+  PYTHONPATH=src python -m repro.launch.dryrun --arch ... --roofline   # depth-
+      extrapolation compiles (unrolled, L∈{1,2} groups) for §Roofline terms
+
+Results land in experiments/dryrun/<cell>.json.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import (ASSIGNED, SHAPES, applicable_shapes, get_config,
+                       input_specs)
+from ..core.types import AdapterConfig
+from ..distributed.sharding import VARIANT_OVERRIDES, make_rules
+from ..models import Model
+from ..serving.engine import make_serve_step
+from ..train import AdamWConfig, abstract_opt_state, make_train_step
+from .mesh import make_production_mesh
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# hardware constants (TPU v5e per assignment)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+
+def default_adapter(dtype=jnp.float32) -> AdapterConfig:
+    # paper main setting: budget e=2 (LoRA-r2-equivalent), r=8, l=4, p=1
+    return AdapterConfig(method="mos", equiv_rank=2, rank=8,
+                         shards_per_vector=4, private_rank=1, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# sharding trees for step arguments
+# ---------------------------------------------------------------------------
+
+def _abstractify(tree):
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)
+                        if not isinstance(a, jax.ShapeDtypeStruct) else a, tree)
+
+
+def batch_shardings(rules, batch):
+    da = rules.data_axes
+    d = da if len(da) > 1 else da[0]
+
+    def one(a):
+        spec = [None] * len(a.shape)
+        spec[0] = d
+        return NamedSharding(rules.mesh, P(*spec))
+    return jax.tree.map(one, batch)
+
+
+def cache_shardings(rules, cache, batch_shardable: bool):
+    """KV caches: batch-sharded when B divides the data axes, else
+    sequence-sharded (SP, the long_500k path).  The 'kv_shard' §Perf variant
+    additionally shards the KV sequence over "model" (SP-decode: each chip
+    holds an S/16 slab, attention combines partial softmax stats) — this
+    removes the full-cache all-gather that otherwise dominates decode."""
+    mesh = rules.mesh
+    da = rules.data_axes
+    d = da if len(da) > 1 else da[0]
+    kv_model = rules.rules.get("kv_seq") == "model"
+
+    def one(path, a):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shp = a.shape
+        spec = [None] * len(shp)
+        if name in ("pos",):
+            spec[0] = d if batch_shardable else None
+        elif name == "kvpos":
+            if batch_shardable:
+                spec[0] = d
+            if kv_model:
+                spec[1] = "model"
+            elif not batch_shardable:
+                spec[1] = d
+        elif name in ("k", "v"):                    # (count,B,S,KVp,hd)
+            if batch_shardable:
+                spec[1] = d
+            if kv_model:
+                spec[2] = "model"                    # SP-decode slab
+            elif not batch_shardable:
+                spec[2] = d                          # SP: shard sequence
+        elif name in ("xk", "xv"):                  # (count,B,Se,KVp,hd)
+            if batch_shardable:
+                spec[1] = d
+        elif name == "ssm":                          # (count,B,G,R,N,P)
+            if batch_shardable:
+                spec[1] = d
+            spec[3] = "model"
+        elif name in ("conv_x",):                    # (count,B,K-1,di)
+            if batch_shardable:
+                spec[1] = d
+            spec[3] = "model"
+        elif name in ("conv_b", "conv_c"):
+            if batch_shardable:
+                spec[1] = d
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def replicated_tree(rules, tree):
+    return jax.tree.map(lambda _: rules.replicated(), tree)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective accounting
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for x in dims.split(","):
+            if x:
+                n *= int(x)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo: str):
+    """Per-device wire bytes by op kind, from the optimized HLO.
+
+    Ring-algorithm accounting per op result shape R and operand shape O:
+      all-gather: send O, receive R-O  → wire ≈ R (result) per device
+      all-reduce: 2×O (reduce-scatter + all-gather phases)
+      reduce-scatter: O (operand streamed once)
+      all-to-all / collective-permute: O
+    ``-start/-done`` async pairs are counted once (on -start or the sync op).
+    """
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(out, 0)
+    for line in hlo.splitlines():
+        if "-done(" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str = m.group(1) or m.group(2)
+        kind = m.group(3)
+        b = _shape_bytes(shape_str)
+        if kind == "all-reduce":
+            b *= 2
+        out[kind] += b
+        counts[kind] += 1
+    return out, counts
+
+
+# ---------------------------------------------------------------------------
+# one cell
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, rules, *, tenants: int = 8,
+               unroll: bool = False, layer_override=None, remat=None,
+               adapter: AdapterConfig = None, extra_model_kw=None):
+    kw = {"tp_pad": 16, "unroll_layers": unroll}
+    kw.update(extra_model_kw or {})
+    cfg = get_config(arch).replace(**kw)
+    if layer_override:
+        if cfg.family == "encdec":
+            cfg = cfg.replace(n_layers=layer_override,
+                              n_enc_layers=layer_override)
+        elif cfg.family == "hybrid":
+            cfg = cfg.replace(n_layers=layer_override * cfg.attn_every)
+        else:
+            cfg = cfg.replace(n_layers=layer_override)
+    if remat:
+        cfg = cfg.replace(remat=remat)
+    shape = SHAPES[shape_name]
+    model = Model(cfg, adapter or default_adapter())
+    params, axes = model.init_params(abstract=True)
+    p_sh = {k: rules.sharding_for(axes[k]) for k in params}
+    ad_state = model.init_adapter(abstract=True)
+    ad_tr = ad_state["trainable"]
+    ad_st = _abstractify(ad_state["static"])
+    return cfg, shape, model, params, p_sh, ad_tr, ad_st
+
+
+def lower_cell(arch: str, shape_name: str, rules, *, tenants: int = 8,
+               unroll: bool = False, layer_override=None, remat="full",
+               adapter=None, extra_model_kw=None, donate: bool = True):
+    cfg, shape, model, params, p_sh, ad_tr, ad_st = build_cell(
+        arch, shape_name, rules, tenants=tenants, unroll=unroll,
+        layer_override=layer_override, remat=remat, adapter=adapter,
+        extra_model_kw=extra_model_kw)
+    mesh = rules.mesh
+    rep = rules.replicated()
+    n_data = int(np.prod([mesh.shape[a] for a in rules.data_axes]))
+
+    from ..distributed.context import use_rules
+    with mesh, use_rules(rules):
+        if shape.kind == "train":
+            batch = input_specs(cfg, shape)
+            b_sh = batch_shardings(rules, batch)
+            opt = abstract_opt_state(ad_tr)
+            step = make_train_step(model, AdamWConfig())
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, replicated_tree(rules, ad_tr),
+                              replicated_tree(rules, ad_st),
+                              replicated_tree(rules, opt), b_sh),
+            )
+            lowered = jitted.lower(params, ad_tr, ad_st, opt, batch)
+        elif shape.kind == "prefill":
+            batch = input_specs(cfg, shape)
+            batch.pop("labels", None)
+            b_sh = batch_shardings(rules, batch)
+            plen = shape.seq_len + (cfg.n_patches if cfg.family == "vlm" else 0)
+            cache = model.init_cache(shape.global_batch, plen, abstract=True)
+            shardable = shape.global_batch % n_data == 0
+            c_sh = cache_shardings(rules, cache, shardable)
+
+            def prefill_step(params, ad_tr, ad_st, batch, cache):
+                st = {"trainable": ad_tr, "static": ad_st}
+                new_cache, h = model.prefill(params, st, batch, cache)
+                return new_cache, model.logits(params, h)[:, 0]
+
+            jitted = jax.jit(prefill_step,
+                             in_shardings=(p_sh, rep, rep, b_sh, c_sh),
+                             out_shardings=(c_sh, None))
+            lowered = jitted.lower(params, ad_tr, ad_st, batch, cache)
+        else:  # decode
+            toks = input_specs(cfg, shape)["tokens"]
+            ids = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+            cache = model.init_cache(shape.global_batch, shape.seq_len,
+                                     abstract=True)
+            shardable = shape.global_batch % n_data == 0
+            c_sh = cache_shardings(rules, cache, shardable)
+            if shardable:
+                t_sh = batch_shardings(rules, {"t": toks})["t"]
+                i_sh = batch_shardings(rules, {"i": ids})["i"]
+            else:
+                t_sh = i_sh = rep
+            # tenant-stacked adapters (T on axis 0 for pools)
+            T = tenants
+            ad_tr_mt = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct((T,) + a.shape, a.dtype), ad_tr)
+            serve = make_serve_step(model, tenants=T)
+            jitted = jax.jit(serve,
+                             in_shardings=(p_sh, {"trainable": rep,
+                                                  "static": rep},
+                                           t_sh, i_sh, c_sh),
+                             out_shardings=(c_sh, None))
+            lowered = jitted.lower(params,
+                                   {"trainable": ad_tr_mt, "static": ad_st},
+                                   toks, ids, cache)
+    return lowered
+
+
+def run_cell(arch, shape_name, *, multi_pod=False, variant="baseline",
+             tenants=8, roofline=False, out_dir=OUT_DIR, remat=None,
+             adapter=None, extra_model_kw=None, tag=""):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh, VARIANT_OVERRIDES.get(variant, {}))
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    cell = f"{arch}__{shape_name}__{mesh_tag}__{variant}{tag}"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    rec = {"arch": arch, "shape": shape_name, "mesh": list(mesh.devices.shape),
+           "mesh_axes": list(mesh.axis_names), "variant": variant,
+           "tenants": tenants, "ok": False}
+    t0 = time.time()
+    try:
+        if roofline:
+            rec["roofline_points"] = {}
+            for L in (1, 2):
+                lw = lower_cell(arch, shape_name, rules, tenants=tenants,
+                                unroll=True, layer_override=L, remat=remat,
+                                adapter=adapter, extra_model_kw=extra_model_kw)
+                comp = lw.compile()
+                ca = comp.cost_analysis() or {}
+                cb, cc = collective_bytes(comp.as_text())
+                rec["roofline_points"][str(L)] = {
+                    "flops": float(ca.get("flops", 0.0)),
+                    "bytes": float(ca.get("bytes accessed", 0.0)),
+                    "collective_bytes": cb, "collective_counts": cc,
+                }
+            rec["ok"] = True
+        else:
+            lw = lower_cell(arch, shape_name, rules, tenants=tenants,
+                            remat=remat, adapter=adapter,
+                            extra_model_kw=extra_model_kw)
+            comp = lw.compile()
+            mem = comp.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+            }
+            ca = comp.cost_analysis() or {}
+            rec["cost_analysis"] = {
+                k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and
+                k in ("flops", "bytes accessed", "transcendentals",
+                      "optimal_seconds")}
+            cb, cc = collective_bytes(comp.as_text())
+            rec["collective_bytes"] = cb
+            rec["collective_counts"] = cc
+            rec["ok"] = True
+    except Exception as e:  # noqa
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["seconds"] = round(time.time() - t0, 1)
+    (out_dir / f"{cell}.json").write_text(json.dumps(rec, indent=1))
+    status = "OK" if rec["ok"] else "FAIL"
+    print(f"[{status}] {cell} ({rec['seconds']}s)", flush=True)
+    if not rec["ok"]:
+        print(rec["error"], flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--tenants", type=int, default=8)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--roofline", action="store_true")
+    ap.add_argument("--remat")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED:
+            for shp in applicable_shapes(get_config(arch)):
+                cells.append((arch, shp))
+    else:
+        cells.append((args.arch, args.shape))
+
+    fails = 0
+    for arch, shp in cells:
+        mesh_tag = "pod2" if args.multi_pod else "pod1"
+        tag = "__roofline" if args.roofline else ""
+        f = OUT_DIR / f"{arch}__{shp}__{mesh_tag}__{args.variant}{tag}.json"
+        if args.skip_existing and f.exists() and \
+                json.loads(f.read_text()).get("ok"):
+            print(f"[SKIP] {f.name}")
+            continue
+        rec = run_cell(arch, shp, multi_pod=args.multi_pod,
+                       variant=args.variant, tenants=args.tenants,
+                       roofline=args.roofline, remat=args.remat,
+                       tag=tag)
+        fails += 0 if rec["ok"] else 1
+    raise SystemExit(1 if fails else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Roofline launcher: print the §Roofline markdown table for any recorded
+variant, or one cell's full term breakdown.
+
+  PYTHONPATH=src python -m repro.launch.roofline                # full table
+  PYTHONPATH=src python -m repro.launch.roofline --variant serve_opt \
+      --arch internvl2-76b --shape decode_32k                   # one cell
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[3]))
+
+
+def main():
+    from benchmarks.roofline_report import cell_terms, markdown_table
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    args = ap.parse_args()
+    if args.arch and args.shape:
+        t = cell_terms(args.arch, args.shape, variant=args.variant)
+        if not t:
+            raise SystemExit("cell not recorded; run dryrun.py --roofline first")
+        print(json.dumps(t, indent=1))
+    else:
+        print(markdown_table(args.variant))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Pure-JAX model zoo for all assigned architectures."""
+from .model import Model
+from .transformer import adapter_specs, arch_stacks
+
+__all__ = ["Model", "adapter_specs", "arch_stacks"]

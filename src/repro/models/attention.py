@@ -1,0 +1,255 @@
+"""Attention: GQA + RoPE + sliding-window, in three XLA-friendly forms.
+
+  * ``blockwise_attention`` — train/prefill: nested scan (q-chunks outer,
+    kv-chunks inner) with a streaming (m, l, acc) softmax — the pure-JAX
+    flash attention.  Memory is O(q_chunk × kv_chunk) per step regardless of
+    sequence length.  Causal masking is exact; the *compute* of fully-masked
+    future blocks is not skipped in XLA (static shapes) — the Pallas kernel
+    in ``repro.kernels.flash_attention`` closes that gap on real TPU, and the
+    roofline analysis accounts for it (EXPERIMENTS.md §Roofline).
+  * ``banded_attention`` — sliding-window prefill: each q-chunk attends a
+    static-width banded kv slab (dynamic start, static size), so SWA archs
+    (mixtral, h2o-danube) get true O(S·w) compute even in XLA.
+  * ``decode_attention`` — single-token decode over an arbitrarily-sharded
+    KV cache: one dense einsum over S; XLA partitions the softmax
+    reductions over a sequence-sharded cache (the long_500k SP path) with
+    psum-style collectives automatically.
+
+Layout convention: q is grouped as (B, S, KV, G, hd) — GQA groups are an
+explicit dim so kv heads are never materialized ×group (memory win vs
+repeat_kv), and head padding preserves the group structure (configs/base.py).
+Unwritten cache slots carry position ``INVALID_POS`` so causal masking hides
+them without a separate validity mask.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INVALID_POS = jnp.int32(2**30)
+NEG_INF = -1e30
+
+
+def _mask(qpos, kvpos, causal: bool, window: int):
+    """qpos (..., Sq), kvpos (..., Skv) → bool (..., Sq, Skv)."""
+    qp = qpos[..., :, None].astype(jnp.int32)
+    kp = kvpos[..., None, :].astype(jnp.int32)
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        m &= kp <= qp
+    else:
+        m &= kp < INVALID_POS
+    if window > 0:
+        m &= (qp - kp) < window
+    return m
+
+
+def _chunk_attend(q, kc, vc, qpos, kvpos, causal, window, scale):
+    """One (q-chunk × kv-chunk) tile → (m, l, acc) contributions.
+
+    q: (B, Sq, KV, G, hd); kc/vc: (B, C, KV, hd);
+    qpos: (B, Sq) or (Sq,); kvpos: (C,) or (B, C).
+    """
+    s = jnp.einsum("bskgd,bckd->bskgc", q, kc,
+                   preferred_element_type=jnp.float32) * scale
+    mask = _mask(qpos, kvpos, causal, window)          # (B?, Sq, C)
+    while mask.ndim < s.ndim:                          # → (B,Sq,1,1,C)
+        mask = mask[..., :, None, :]
+    mask = jnp.moveaxis(mask, -1, -1)
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)                            # (B,Sq,KV,G)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bskgc,bckd->bskgd", p.astype(vc.dtype), vc,
+                     preferred_element_type=jnp.float32)
+    return m, l, acc
+
+
+def _combine(m1, l1, a1, m2, l2, a2):
+    m = jnp.maximum(m1, m2)
+    c1 = jnp.exp(m1 - m)
+    c2 = jnp.exp(m2 - m)
+    return m, l1 * c1 + l2 * c2, a1 * c1[..., None] + a2 * c2[..., None]
+
+
+def blockwise_attention(
+    q: jax.Array,            # (B, Sq, KV, G, hd)
+    k: jax.Array,            # (B, Skv, KV, hd)
+    v: jax.Array,
+    qpos: jax.Array,         # (Sq,) or (B, Sq)
+    kvpos: jax.Array,        # (Skv,) or (B, Skv)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    unroll: bool = False,
+) -> jax.Array:
+    """Streaming-softmax attention.  ``unroll=True`` replaces the scans with
+    python loops *and skips fully-masked causal/SWA tiles exactly* — the
+    compute schedule the Pallas TPU kernel executes (used by the roofline
+    compiles; scan mode is the compact-HLO production fallback)."""
+    B, Sq, KV, G, hd = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Skv)
+    nq, nk = -(-Sq // qc), -(-Skv // kc)
+    # pad to chunk multiples
+    q = _pad_axis(q, 1, nq * qc)
+    k = _pad_axis(k, 1, nk * kc)
+    v = _pad_axis(v, 1, nk * kc)
+    qpos = _pad_pos(qpos, Sq, nq * qc)
+    kvpos = _pad_pos(kvpos, Skv, nk * kc)
+
+    qs = q.reshape(B, nq, qc, KV, G, hd).swapaxes(0, 1)          # (nq,B,qc,...)
+    qp = _chunk_pos(qpos, nq, qc)                                 # (nq,[B,]qc)
+    ks = k.reshape(B, nk, kc, KV, hd).swapaxes(0, 1)
+    vs = v.reshape(B, nk, kc, KV, hd).swapaxes(0, 1)
+    kp = _chunk_pos(kvpos, nk, kc)
+
+    def init_carry():
+        m0 = jnp.full((B, qc, KV, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, qc, KV, G), jnp.float32)
+        a0 = jnp.zeros((B, qc, KV, G, hd), jnp.float32)
+        return m0, l0, a0
+
+    if unroll:
+        # exact tile skipping: aligned chunks assumed (same origin for q/kv
+        # positions, true for train/prefill where qpos == kvpos == arange)
+        aligned = Sq == Skv
+        outs = []
+        for i in range(nq):
+            carry = init_carry()
+            for j in range(nk):
+                if causal and aligned and j * kc > i * qc + qc - 1:
+                    continue            # strictly-future tile
+                if window > 0 and aligned and \
+                        (i * qc) - (j * kc + kc - 1) >= window:
+                    continue            # beyond the sliding window
+                m2, l2, a2 = _chunk_attend(qs[i], ks[j], vs[j], qp[i], kp[j],
+                                           causal, window, scale)
+                carry = _combine(*carry, m2, l2, a2)
+            m, l, acc = carry
+            outs.append((acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype))
+        out = jnp.stack(outs).swapaxes(0, 1).reshape(B, nq * qc, KV, G, hd)
+        return out[:, :Sq]
+
+    def q_body(_, q_in):
+        qi, qpi = q_in
+
+        def kv_body(carry, kv_in):
+            ki, vi, kpi = kv_in
+            m2, l2, a2 = _chunk_attend(qi, ki, vi, qpi, kpi, causal, window, scale)
+            return _combine(*carry, m2, l2, a2), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_body, init_carry(), (ks, vs, kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, (qs, qp))                # (nq,B,qc,...)
+    out = outs.swapaxes(0, 1).reshape(B, nq * qc, KV, G, hd)
+    return out[:, :Sq]
+
+
+def banded_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    qpos: jax.Array, kvpos: jax.Array,
+    *, window: int, q_chunk: int = 1024, unroll: bool = False,
+) -> jax.Array:
+    if unroll:   # exact-skip form shares the blockwise unrolled path
+        return blockwise_attention(q, k, v, qpos, kvpos, causal=True,
+                                   window=window, q_chunk=q_chunk,
+                                   kv_chunk=q_chunk, unroll=True)
+    """Sliding-window prefill: q-chunk i attends kv slab
+    [i*qc - window_chunks*qc, (i+1)*qc) — static size, dynamic start."""
+    B, Sq, KV, G, hd = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    qc = min(q_chunk, Sq)
+    nq = -(-Sq // qc)
+    wq = -(-window // qc)                 # window chunks
+    slab = (wq + 1) * qc
+    # left-pad kv by slab so dynamic starts never clamp unevenly
+    k = _pad_axis(k, 1, Skv + slab, left=True)
+    v = _pad_axis(v, 1, Skv + slab, left=True)
+    kvpos_p = jnp.pad(
+        jnp.broadcast_to(kvpos, (Skv,)) if kvpos.ndim == 1 else kvpos,
+        [(slab, 0)] if kvpos.ndim == 1 else [(0, 0), (slab, 0)],
+        constant_values=np_invalid(),
+    )
+    q = _pad_axis(q, 1, nq * qc)
+    qpos = _pad_pos(qpos, Sq, nq * qc)
+    qs = q.reshape(B, nq, qc, KV, G, hd).swapaxes(0, 1)
+    qp = _chunk_pos(qpos, nq, qc)
+
+    def body(_, xs):
+        i, qi, qpi = xs
+        start = i * qc  # slab [start, start+slab) in padded coords ends at q-chunk end
+        ki = jax.lax.dynamic_slice_in_dim(k, start, slab, axis=1)
+        vi = jax.lax.dynamic_slice_in_dim(v, start, slab, axis=1)
+        kpi = jax.lax.dynamic_slice_in_dim(kvpos_p, start, slab, axis=-1)
+        m, l, acc = _chunk_attend(qi, ki, vi, qpi, kpi, True, window, scale)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nq), qs, qp))
+    out = outs.swapaxes(0, 1).reshape(B, nq * qc, KV, G, hd)
+    return out[:, :Sq]
+
+
+def decode_attention(
+    q: jax.Array,            # (B, 1, KV, G, hd)
+    k: jax.Array,            # (B, S, KV, hd) — may be sequence-sharded
+    v: jax.Array,
+    qpos: jax.Array,         # (B,)
+    kvpos: jax.Array,        # (B, S) — INVALID_POS marks unwritten slots
+    *, window: int = 0,
+) -> jax.Array:
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bokgd,bskd->bokgs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = _mask(qpos[:, None], kvpos, True, window)      # (B,1,S)
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[:, :, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bokgs,bskd->bokgd", (p / jnp.maximum(l, 1e-30)).astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def np_invalid():
+    return 2**30
+
+
+def _pad_axis(x, axis, target, left=False):
+    cur = x.shape[axis]
+    if cur == target:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (target - cur, 0) if left else (0, target - cur)
+    return jnp.pad(x, pads)
+
+
+def _pad_pos(pos, cur, target):
+    if cur == target:
+        return pos
+    pads = [(0, 0)] * (pos.ndim - 1) + [(0, target - cur)]
+    return jnp.pad(pos, pads, constant_values=np_invalid())
+
+
+def _chunk_pos(pos, n, c):
+    if pos.ndim == 1:
+        return pos.reshape(n, c)
+    return pos.reshape(pos.shape[0], n, c).swapaxes(0, 1)

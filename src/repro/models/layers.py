@@ -1,0 +1,136 @@
+"""Primitive layers + the param/axes tree convention.
+
+Every ``init_*`` builds two parallel dicts: ``params`` (arrays or
+ShapeDtypeStructs when abstract) and ``axes`` (tuples of *logical* axis names
+per dim).  ``repro.distributed.sharding`` maps logical axes → mesh axes.
+
+Logical axes vocabulary:
+  layers, groups, sub      — stacking dims (never sharded)
+  vocab                    — vocab-parallel dim ("model")
+  heads, ssm_heads         — tensor-parallel head dims ("model")
+  kv_heads, head_dim       — replicated small dims
+  ff, ff_expert, dinner    — tensor-parallel ffn dims ("model")
+  embed, embed_in          — d_model dims (FSDP candidates → "data")
+  experts                  — expert dim (EP candidate)
+  conv, state, scalar      — replicated
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ParamFactory:
+    """Accumulates (params, axes) with abstract-init support."""
+
+    def __init__(self, rng: Optional[jax.Array], dtype, abstract: bool):
+        self.rng = rng
+        self.dtype = dtype
+        self.abstract = abstract
+        self.params: Dict[str, Any] = {}
+        self.axes: Dict[str, Any] = {}
+
+    def _key(self):
+        self.rng, k = jax.random.split(self.rng) if not self.abstract else (self.rng, None)
+        return k
+
+    def normal(self, name, shape, axes, scale=0.02):
+        if self.abstract:
+            arr = jax.ShapeDtypeStruct(tuple(shape), self.dtype)
+        else:
+            arr = (jax.random.normal(self._key(), shape, jnp.float32) * scale).astype(self.dtype)
+        self.params[name] = arr
+        self.axes[name] = tuple(axes)
+        return arr
+
+    def fanin(self, name, shape, axes, fan_in):
+        return self.normal(name, shape, axes, scale=1.0 / math.sqrt(fan_in))
+
+    def const(self, name, shape, axes, value=0.0):
+        if self.abstract:
+            arr = jax.ShapeDtypeStruct(tuple(shape), self.dtype)
+        else:
+            arr = jnp.full(shape, value, self.dtype)
+        self.params[name] = arr
+        self.axes[name] = tuple(axes)
+        return arr
+
+    def sub(self, name, factory_out):
+        p, a = factory_out
+        self.params[name] = p
+        self.axes[name] = a
+
+    def done(self):
+        return self.params, self.axes
+
+
+# ---------------------------------------------------------------------------
+# norms / embeddings / linear
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_apply(kind: str, x, p, prefix=""):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p[prefix + "scale"])
+    return layernorm(x, p[prefix + "scale"], p[prefix + "bias"])
+
+
+def init_norm(pf: ParamFactory, name: str, d: int, kind: str, stack: Tuple[int, ...] = ()):
+    ax = tuple("layers" for _ in stack)
+    pf.const(f"{name}.scale", stack + (d,), ax + ("embed_noshard",), 1.0)
+    if kind == "layernorm":
+        pf.const(f"{name}.bias", stack + (d,), ax + ("embed_noshard",), 0.0)
+
+
+def linear(x: jax.Array, w: jax.Array) -> jax.Array:
+    """y = x @ Wᵀ with W stored (out, in)."""
+    return jnp.einsum("...h,oh->...o", x, w.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, heads..., hd); positions: (B|1, S) — always 2D."""
+    hd = x.shape[-1]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    freqs = rope_frequencies(hd, theta)                        # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs     # (B, S, hd/2)
+    # insert head dims between S and hd so ang right-aligns with x
+    while ang.ndim < x.ndim:
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x):
+    return jax.nn.silu(x)

@@ -1,0 +1,248 @@
+"""Mamba2 (SSD — state-space duality) mixer, TPU-adapted.
+
+Train/prefill uses the chunked SSD form: a ``lax.scan`` over sequence chunks
+whose body is pure matmuls (intra-chunk "attention-like" term + inter-chunk
+state propagation) — the MXU-friendly restatement of the selective scan.  All
+decay exponents are ≤ 0 (A < 0, dt > 0) so every ``exp`` is ≤ 1; decays are
+computed in fp32, matmuls accumulate in fp32.
+
+Decode carries a recurrent fp32 state (B, G, R, N, P) + a depthwise-conv
+ring cache — O(1) per token, which is what makes the long_500k cells
+tractable for the ssm/hybrid archs.
+
+Heads are kept factored as (G groups × R heads-per-group) so B/C (per-group)
+are never materialized per-head, and TP shards the R dim ("ssm_heads").
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamFactory, linear, silu
+from .mlp import AdapterHook
+
+
+def init_mamba(pf: ParamFactory, cfg, stack: Tuple[int, ...] = (), prefix: str = ""):
+    d, di = cfg.d_model, cfg.d_inner
+    G, N, K = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_conv
+    H = cfg.ssm_heads
+    ax = tuple("layers" for _ in stack)
+    # in_proj is one logical linear (the paper's "ssm_in" adapter type) but
+    # its base weight is stored split so each piece shards cleanly:
+    # z/x head-sharded, B/C/dt replicated-or-head-sharded.
+    pf.fanin(prefix + "in_z", stack + (di, d), ax + ("dinner", "embed"), d)
+    pf.fanin(prefix + "in_x", stack + (di, d), ax + ("dinner", "embed"), d)
+    pf.fanin(prefix + "in_b", stack + (G * N, d), ax + ("state_noshard", "embed"), d)
+    pf.fanin(prefix + "in_c", stack + (G * N, d), ax + ("state_noshard", "embed"), d)
+    pf.fanin(prefix + "in_dt", stack + (H, d), ax + ("ssm_heads", "embed"), d)
+    pf.fanin(prefix + "out_proj", stack + (d, di), ax + ("embed", "dinner"), di)
+    pf.normal(prefix + "conv_x", stack + (K, di), ax + ("conv", "dinner"), 0.2)
+    pf.normal(prefix + "conv_b", stack + (K, G * N), ax + ("conv", "state_noshard"), 0.2)
+    pf.normal(prefix + "conv_c", stack + (K, G * N), ax + ("conv", "state_noshard"), 0.2)
+    pf.const(prefix + "A_log", stack + (H,), ax + ("ssm_heads",), math.log(4.0))
+    pf.const(prefix + "D", stack + (H,), ax + ("ssm_heads",), 1.0)
+    pf.const(prefix + "dt_bias", stack + (H,), ax + ("ssm_heads",), math.log(math.e - 1))
+    pf.const(prefix + "norm_scale", stack + (di,), ax + ("dinner",), 1.0)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, cache: Optional[jax.Array]):
+    """Depthwise causal conv; x (B,S,C), w (K,C).  With a cache (B,K-1,C)
+    (decode), S is typically 1 and the window is [cache; x]."""
+    K = w.shape[0]
+    if cache is None:
+        xp = jnp.pad(x, [(0, 0), (K - 1, 0), (0, 0)])
+    else:
+        xp = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    new_cache = xp[:, -(K - 1):] if K > 1 else xp[:, :0]
+    return y, new_cache
+
+
+def in_proj_apply(x, p, cfg, hook_factored, prefix: str):
+    """The logical ssm_in linear, computed piecewise from split weights.
+
+    The adapter delta is *fused* (one "ssm_in" type of fan-out
+    2·di + 2·G·N + H, per the paper: one linear = one type); we compute
+    u = x Aᵀ once and add u · B_rows[:, slice] per piece so the full delta is
+    never materialized and each piece keeps its clean sharding.
+    """
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    fac = hook_factored("ssm_in", x)
+    offs = [0, di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N,
+            2 * di + 2 * G * N + H]
+    names = ["in_z", "in_x", "in_b", "in_c", "in_dt"]
+    outs = []
+    for i, nm in enumerate(names):
+        y = linear(x, p[prefix + nm])
+        if fac is not None:
+            u, b_rows, scale, cs = fac
+            sl = b_rows[:, offs[i]:offs[i + 1]]
+            if getattr(sl, "ndim", 2) == 3:     # multi-tenant (B, r, o_sl)
+                dy = jnp.einsum("bsr,bro->bso", u, sl.astype(x.dtype))
+            else:
+                dy = jnp.einsum("...r,ro->...o", u, sl.astype(x.dtype))
+            if cs is not None:
+                dy = dy * cs[offs[i]:offs[i + 1]].astype(dy.dtype)
+            y = y + dy * jnp.asarray(scale, x.dtype)
+        outs.append(y)
+    return outs  # z, xs, b, c, dt
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array, G: int):
+    """RMSNormGated with ngroups=G: norm(y * silu(z)) per group."""
+    h = (y * silu(z)).astype(jnp.float32)
+    shp = h.shape
+    hg = h.reshape(shp[:-1] + (G, shp[-1] // G))
+    ms = jnp.mean(jnp.square(hg), axis=-1, keepdims=True)
+    hg = hg * jax.lax.rsqrt(ms + 1e-6)
+    return (hg.reshape(shp) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def ssd_scan(xh, dt, A, Bm, Cm, chunk: int, s0=None, unroll: bool = False):
+    """Chunked SSD.
+
+    xh (B,S,G,R,P); dt (B,S,G,R) fp32 post-softplus; A (G,R) fp32 (<0);
+    Bm/Cm (B,S,G,N).  Returns (y (B,S,G,R,P), final_state (B,G,R,N,P) fp32).
+    """
+    B_, S, G, R, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        xh = jnp.pad(xh, [(0, 0), (0, pad), (0, 0), (0, 0), (0, 0)])
+        dt = jnp.pad(dt, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        Bm = jnp.pad(Bm, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        Cm = jnp.pad(Cm, [(0, 0), (0, pad), (0, 0), (0, 0)])
+
+    def chunkify(t):  # (B, nc*Q, ...) -> (nc, B, Q, ...)
+        return t.reshape((B_, nc, Q) + t.shape[2:]).swapaxes(0, 1)
+
+    xs, dts, Bs, Cs = map(chunkify, (xh, dt, Bm, Cm))
+    if s0 is None:
+        s0 = jnp.zeros((B_, G, R, N, P), jnp.float32)
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def body(s_prev, inp):
+        xc, dtc, bc, cc = inp                     # (B,Q,...)
+        dA = dtc * A                               # (B,Q,G,R) fp32, <0
+        cum = jnp.cumsum(dA, axis=1)
+        # intra-chunk: scores[b,g,r,i,j] = (C_i·B_j) exp(cum_i-cum_j) dt_j
+        cb = jnp.einsum("bign,bjgn->bgij", cc, bc,
+                        preferred_element_type=jnp.float32)
+        # mask the exponent (not the result): i<j diffs are positive and
+        # would overflow exp, poisoning gradients through the where
+        diff = cum[:, :, None] - cum[:, None, :]              # (B,Qi,Qj,G,R)
+        diff = jnp.where(tri[None, :, :, None, None], diff, -jnp.inf)
+        dec = jnp.exp(diff)
+        # rearrange cb (B,G,Qi,Qj) -> (B,Qi,Qj,G,1)
+        cbt = jnp.moveaxis(cb, 1, 3)[..., None]               # (B,Qi,Qj,G,1)
+        w = cbt * dec * dtc[:, None, :, :, :]                 # (B,Qi,Qj,G,R)
+        y = jnp.einsum("bijgr,bjgrp->bigrp", w.astype(xc.dtype), xc,
+                       preferred_element_type=jnp.float32)
+        # inter-chunk: y += exp(cum_i) * C_i · s_prev
+        yin = jnp.einsum("bign,bgrnp->bigrp", cc, s_prev.astype(cc.dtype),
+                         preferred_element_type=jnp.float32)
+        y = y + yin * jnp.exp(cum)[..., None]
+        # state update
+        dec_out = jnp.exp(cum[:, -1:] - cum) * dtc            # (B,Q,G,R)
+        ds = jnp.einsum("bjgn,bjgr,bjgrp->bgrnp", bc.astype(jnp.float32),
+                        dec_out, xc.astype(jnp.float32))
+        s_new = s_prev * jnp.exp(cum[:, -1])[..., None, None] + ds
+        return s_new, y.astype(xh.dtype)
+
+    if unroll:
+        ylist, s_cur = [], s0
+        for i in range(nc):
+            s_cur, yi = body(s_cur, (xs[i], dts[i], Bs[i], Cs[i]))
+            ylist.append(yi)
+        s_fin, ys = s_cur, jnp.stack(ylist)
+    else:
+        s_fin, ys = jax.lax.scan(body, s0, (xs, dts, Bs, Cs))
+    y = ys.swapaxes(0, 1).reshape(B_, nc * Q, G, R, P)[:, :S]
+    return y, s_fin
+
+
+def mamba_mixer(
+    x: jax.Array,                   # (B, S, d)
+    p: Dict[str, Any],
+    cfg,
+    hook: AdapterHook,
+    hook_factored,
+    prefix: str = "",
+    state: Optional[Dict[str, jax.Array]] = None,   # decode: {ssm, conv_x/b/c}
+    return_state: bool = False,                      # prefill: emit final state
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Returns (out (B,S,d), new_state|None).  state!=None → decode mode
+    (S==1, recurrent update)."""
+    B_, S, d = x.shape
+    G, N, R = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads // cfg.ssm_groups
+    P = cfg.ssm_head_dim
+
+    z, xs_raw, b_raw, c_raw, dt = in_proj_apply(x, p, cfg, hook_factored, prefix)
+
+    cx = state["conv_x"] if state else None
+    cb = state["conv_b"] if state else None
+    cc = state["conv_c"] if state else None
+    xs, ncx = _causal_conv(xs_raw, p[prefix + "conv_x"], cx)
+    b, ncb = _causal_conv(b_raw, p[prefix + "conv_b"], cb)
+    c, ncc = _causal_conv(c_raw, p[prefix + "conv_c"], cc)
+    xs, b, c = silu(xs), silu(b), silu(c)
+
+    A = -jnp.exp(p[prefix + "A_log"].astype(jnp.float32)).reshape(G, R)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p[prefix + "dt_bias"].astype(jnp.float32))
+    dtg = dt.reshape(B_, S, G, R)
+    xh = xs.reshape(B_, S, G, R, P)
+    bm = b.reshape(B_, S, G, N)
+    cm = c.reshape(B_, S, G, N)
+
+    if state is None:
+        y, s_fin = ssd_scan(xh, dtg, A, bm, cm, cfg.ssm_chunk,
+                            unroll=cfg.unroll_layers)
+        new_state = None
+        if return_state:
+            K = cfg.ssm_conv
+            ct = cfg.dtype_jnp()
+            new_state = {
+                "ssm": s_fin,
+                "conv_x": xs_raw[:, -(K - 1):].astype(ct) if K > 1 else xs_raw[:, :0],
+                "conv_b": b_raw[:, -(K - 1):].astype(ct) if K > 1 else b_raw[:, :0],
+                "conv_c": c_raw[:, -(K - 1):].astype(ct) if K > 1 else c_raw[:, :0],
+            }
+    else:
+        # recurrent decode: S == 1
+        dt1 = dtg[:, 0]                                        # (B,G,R)
+        dA = jnp.exp(dt1 * A)                                  # (B,G,R)
+        s_prev = state["ssm"]                                  # fp32 (B,G,R,N,P)
+        ds = jnp.einsum("bgn,bgr,bgrp->bgrnp", bm[:, 0].astype(jnp.float32),
+                        dt1, xh[:, 0].astype(jnp.float32))
+        s_new = s_prev * dA[..., None, None] + ds
+        y = jnp.einsum("bgn,bgrnp->bgrp", cm[:, 0].astype(jnp.float32), s_new)
+        y = y[:, None].astype(x.dtype)                         # (B,1,G,R,P)
+        new_state = {"ssm": s_new, "conv_x": ncx, "conv_b": ncb, "conv_c": ncc}
+
+    y = y + (p[prefix + "D"].reshape(G, R)[None, None, :, :, None]
+             ).astype(y.dtype) * xh
+    y = y.reshape(B_, S, cfg.d_inner)
+    y = _gated_norm(y, z, p[prefix + "norm_scale"], G)
+    out = linear(y, p[prefix + "out_proj"]) + hook("ssm_out", y)
+    return out, new_state
+
+
+def init_mamba_state(cfg, batch: int, dtype, abstract: bool = False):
+    G, R = cfg.ssm_groups, cfg.ssm_heads // cfg.ssm_groups
+    N, P, K = cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_conv
+    shapes = {
+        "ssm": ((batch, G, R, N, P), jnp.float32),
+        "conv_x": ((batch, K - 1, cfg.d_inner), dtype),
+        "conv_b": ((batch, K - 1, G * N), dtype),
+        "conv_c": ((batch, K - 1, G * N), dtype),
+    }
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, dt) for k, (s, dt) in shapes.items()}
+    return {k: jnp.zeros(s, dt) for k, (s, dt) in shapes.items()}

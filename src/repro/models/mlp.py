@@ -1,0 +1,38 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU MLP (whisper).
+
+``hook(local_type_name, x)`` returns the adapter delta for that linear; the
+caller binds the layer-type key (e.g. "gate", "enc.fc1") and per-layer slice.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamFactory, gelu, linear, silu
+
+AdapterHook = Callable[[str, jax.Array], jax.Array]
+
+
+def init_mlp(pf: ParamFactory, d: int, ff: int, act: str,
+             stack: Tuple[int, ...] = (), prefix: str = ""):
+    ax = tuple("layers" for _ in stack)
+    if act == "swiglu":
+        pf.fanin(prefix + "gate", stack + (ff, d), ax + ("ff", "embed"), d)
+        pf.fanin(prefix + "up", stack + (ff, d), ax + ("ff", "embed"), d)
+        pf.fanin(prefix + "down", stack + (d, ff), ax + ("embed", "ff"), ff)
+    else:  # gelu mlp
+        pf.fanin(prefix + "fc1", stack + (ff, d), ax + ("ff", "embed"), d)
+        pf.fanin(prefix + "fc2", stack + (d, ff), ax + ("embed", "ff"), ff)
+
+
+def mlp(x: jax.Array, p: Dict[str, Any], act: str, hook: AdapterHook,
+        prefix: str = "", tprefix: str = "") -> jax.Array:
+    if act == "swiglu":
+        g = linear(x, p[prefix + "gate"]) + hook(tprefix + "gate", x)
+        u = linear(x, p[prefix + "up"]) + hook(tprefix + "up", x)
+        h = silu(g) * u
+        return linear(h, p[prefix + "down"]) + hook(tprefix + "down", h)
+    h = gelu(linear(x, p[prefix + "fc1"]) + hook(tprefix + "fc1", x))
+    return linear(h, p[prefix + "fc2"]) + hook(tprefix + "fc2", h)

@@ -1,0 +1,267 @@
+"""Model facade: parameter init (concrete or abstract), train forward,
+prefill, and decode — for every assigned architecture family.
+
+All entry points are pure functions over pytrees; ``Model`` only binds the
+configs and the adapter plan.  ``abstract=True`` init paths return
+``jax.ShapeDtypeStruct`` trees so the multi-pod dry-run never allocates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import adapters as ad
+from ..core.types import AdapterConfig
+from ..configs.base import ModelConfig
+from .attention import INVALID_POS
+from .layers import ParamFactory, linear, norm_apply, init_norm
+from .transformer import (Hooks, adapter_specs, arch_stacks, cache_seq_len,
+                          init_stack_cache, init_stack_params,
+                          organize_adapter_xs, stack_apply)
+from ..distributed.context import constrain_batch, constrain_use
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, adapter_cfg: Optional[AdapterConfig] = None):
+        self.cfg = cfg
+        self.adapter_cfg = adapter_cfg or AdapterConfig(method="none")
+        self.specs = adapter_specs(cfg, self.adapter_cfg)
+        self.plan = ad.make_plan(self.adapter_cfg, self.specs)
+        self.stacks = arch_stacks(cfg)
+        self.multi_stack = len(self.stacks) > 1
+        _, self.axes = self.init_params(abstract=True)
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+
+    def init_params(self, rng: Optional[jax.Array] = None, abstract: bool = False):
+        cfg = self.cfg
+        pf = ParamFactory(rng, cfg.dtype_jnp(), abstract)
+        pf.fanin("embed", (cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                 cfg.d_model)
+        if not cfg.tie_embeddings:
+            pf.fanin("lm_head", (cfg.padded_vocab, cfg.d_model),
+                     ("vocab", "embed"), cfg.d_model)
+        init_norm(pf, "final_norm", cfg.d_model, cfg.norm)
+        if cfg.pos_embed == "learned":
+            assert cfg.max_pos > 0
+            pf.normal("pos_embed", (cfg.max_pos, cfg.d_model),
+                      ("pos", "embed"), 0.02)
+            if cfg.family == "encdec":
+                pf.normal("enc_pos_embed", (cfg.enc_seq, cfg.d_model),
+                          ("pos", "embed"), 0.02)
+        if cfg.family == "vlm":
+            pf.fanin("patch_proj", (cfg.d_model, cfg.d_model),
+                     ("embed_out", "embed"), cfg.d_model)
+            init_norm(pf, "patch_norm", cfg.d_model, cfg.norm)
+        if cfg.family == "encdec":
+            init_norm(pf, "enc_final_norm", cfg.d_model, cfg.norm)
+        for name, count, pattern in self.stacks:
+            init_stack_params(pf, cfg, name, count, pattern)
+        return pf.done()
+
+    def init_adapter(self, rng: Optional[jax.Array] = None, abstract: bool = False):
+        if rng is None:
+            rng = jax.random.key(self.adapter_cfg.seed)
+        return ad.init_state(self.plan, rng, abstract=abstract)
+
+    def init_cache(self, batch: int, max_len: int, abstract: bool = False):
+        cfg = self.cfg
+        ring = cache_seq_len(cfg, max_len)
+
+        def mk(shape, dt, fill=0):
+            if abstract:
+                return jax.ShapeDtypeStruct(shape, dt)
+            return jnp.full(shape, fill, dt)
+
+        cache: Dict[str, Any] = {
+            "pos": mk((batch,), jnp.int32),
+            "kvpos": mk((batch, ring), jnp.int32, 2**30),
+        }
+        for name, count, pattern in self.stacks:
+            if cfg.family == "encdec" and name == "enc":
+                continue  # encoder output lives in the cross-kv caches
+            cache[name] = init_stack_cache(cfg, count, pattern, batch,
+                                           max_len, abstract)
+        return cache
+
+    def adapter_param_count(self) -> Dict[str, int]:
+        return ad.param_count(self.plan)
+
+    # ------------------------------------------------------------------
+    # embedding / head
+    # ------------------------------------------------------------------
+
+    def _embed(self, params, tokens):
+        emb = constrain_use(params["embed"], self.axes["embed"])
+        return constrain_batch(jnp.take(emb, tokens, axis=0))
+
+    def _head_inputs(self, params, x):
+        x = norm_apply(self.cfg.norm, x, params, "final_norm.")
+        return constrain_batch(x)
+
+    def logits(self, params, x):
+        w = params["embed"] if self.cfg.tie_embeddings else params["lm_head"]
+        w = constrain_use(w, self.axes["embed" if self.cfg.tie_embeddings
+                                       else "lm_head"])
+        out = jnp.einsum("bsd,vd->bsv", x, w.astype(x.dtype))
+        V = self.cfg.vocab_size
+        if self.cfg.padded_vocab != V:      # mask the padded vocab tail
+            iota = jax.lax.broadcasted_iota(jnp.int32, out.shape, 2)
+            out = jnp.where(iota < V, out, -1e30)
+        return out
+
+    # ------------------------------------------------------------------
+    # forward passes
+    # ------------------------------------------------------------------
+
+    def _encoder(self, params, ad_shared, ad_xs, frames):
+        """Whisper encoder over precomputed frame embeddings (stub)."""
+        cfg = self.cfg
+        x = frames.astype(cfg.dtype_jnp())
+        if cfg.pos_embed == "learned":
+            x = x + params["enc_pos_embed"].astype(x.dtype)[None, : x.shape[1]]
+        name, count, pattern = self.stacks[0]
+        sp = _subtree(params, name)
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32)[None]
+        x, _ = stack_apply(x, sp, cfg, self.plan, ad_shared, ad_xs[name],
+                           name, count, pattern, mode="train", positions=pos,
+                           kvpos=None, cache=None, enc_out=None,
+                           remat=cfg.remat, multi_stack=True,
+                           stack_axes=_subtree(self.axes, name))
+        return norm_apply(cfg.norm, x, params, "enc_final_norm.")
+
+    def forward_train(self, params, ad_state, batch: Dict[str, jax.Array]):
+        """Full training forward → hidden states (B, S_total, d) pre-head.
+
+        batch: {"tokens" (B,S)[, "patch_embeds" (B,P,d)][, "frames"]}.
+        """
+        cfg = self.cfg
+        ad_shared, _ = ad.split_scan(self.plan, ad_state,
+                                     [s.name for s in self.specs])
+        ad_xs = organize_adapter_xs(self.plan, ad_state, cfg)
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+        if cfg.family == "vlm":
+            pe = batch["patch_embeds"].astype(x.dtype)
+            pe = linear(pe, params["patch_proj"])
+            pe = norm_apply(cfg.norm, pe, params, "patch_norm.")
+            x = jnp.concatenate([pe, x], axis=1)
+        if cfg.pos_embed == "learned" and cfg.family != "encdec":
+            x = x + params["pos_embed"].astype(x.dtype)[None, : x.shape[1]]
+
+        enc_out = None
+        if cfg.family == "encdec":
+            enc_out = self._encoder(params, ad_shared, ad_xs, batch["frames"])
+            if cfg.pos_embed == "learned":
+                x = x + params["pos_embed"].astype(x.dtype)[None, : x.shape[1]]
+
+        S = x.shape[1]
+        pos = jnp.arange(S, dtype=jnp.int32)[None]
+        dec_stacks = [s for s in self.stacks
+                      if not (cfg.family == "encdec" and s[0] == "enc")]
+        for name, count, pattern in dec_stacks:
+            sp = _subtree(params, name)
+            x, _ = stack_apply(x, sp, cfg, self.plan, ad_shared, ad_xs[name],
+                               name, count, pattern, mode="train",
+                               positions=pos, kvpos=None, cache=None,
+                               enc_out=enc_out, remat=cfg.remat,
+                               multi_stack=self.multi_stack,
+                               stack_axes=_subtree(self.axes, name))
+        return self._head_inputs(params, x)
+
+    def prefill(self, params, ad_state, batch, cache, hooks_factory=None):
+        """Prefill: build caches, return (new_cache, last-position hidden)."""
+        cfg = self.cfg
+        ad_shared, _ = ad.split_scan(self.plan, ad_state,
+                                     [s.name for s in self.specs])
+        ad_xs = organize_adapter_xs(self.plan, ad_state, cfg)
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        x = self._embed(params, tokens)
+        if cfg.family == "vlm":
+            pe = batch["patch_embeds"].astype(x.dtype)
+            pe = linear(pe, params["patch_proj"])
+            pe = norm_apply(cfg.norm, pe, params, "patch_norm.")
+            x = jnp.concatenate([pe, x], axis=1)
+        if cfg.pos_embed == "learned" and cfg.family != "encdec":
+            x = x + params["pos_embed"].astype(x.dtype)[None, : x.shape[1]]
+
+        enc_out = None
+        if cfg.family == "encdec":
+            enc_out = self._encoder(params, ad_shared, ad_xs, batch["frames"])
+            if cfg.pos_embed == "learned":
+                x = x + params["pos_embed"].astype(x.dtype)[None, : x.shape[1]]
+
+        S = x.shape[1]
+        ring = cache["kvpos"].shape[1]
+        assert S % ring == 0 or ring >= S, "ring must divide prefill length"
+        pos = jnp.arange(S, dtype=jnp.int32)[None]
+        new_cache = {"pos": jnp.full((B,), S, jnp.int32)}
+        # ring slot p%ring holds position p for the last `ring` tokens
+        tail = jnp.arange(S - ring, S, dtype=jnp.int32) if ring <= S else None
+        if ring <= S:
+            new_cache["kvpos"] = jnp.broadcast_to(tail, (B, ring))
+        else:
+            kv = jnp.full((B, ring), 2**30, jnp.int32)
+            new_cache["kvpos"] = kv.at[:, :S].set(
+                jnp.broadcast_to(pos, (B, S)))
+
+        dec_stacks = [s for s in self.stacks
+                      if not (cfg.family == "encdec" and s[0] == "enc")]
+        for name, count, pattern in dec_stacks:
+            sp = _subtree(params, name)
+            x, nc = stack_apply(x, sp, cfg, self.plan, ad_shared, ad_xs[name],
+                                name, count, pattern, mode="prefill",
+                                positions=pos, kvpos=None, cache=cache[name],
+                                enc_out=enc_out, remat=cfg.remat,
+                                multi_stack=self.multi_stack,
+                                hooks_factory=hooks_factory,
+                                stack_axes=_subtree(self.axes, name))
+            new_cache[name] = nc
+        return new_cache, self._head_inputs(params, x[:, -1:])
+
+    def decode_step(self, params, ad_state, tokens, cache,
+                    hooks_factory=None):
+        """One decode step.  tokens (B,1) at positions cache["pos"]."""
+        cfg = self.cfg
+        ad_shared, _ = ad.split_scan(self.plan, ad_state,
+                                     [s.name for s in self.specs])
+        ad_xs = organize_adapter_xs(self.plan, ad_state, cfg)
+        B = tokens.shape[0]
+        pos = cache["pos"]                                     # (B,)
+        ring = cache["kvpos"].shape[1]
+        x = self._embed(params, tokens)
+        if cfg.pos_embed == "learned":
+            x = x + jnp.take(params["pos_embed"],
+                             jnp.clip(pos, 0, params["pos_embed"].shape[0] - 1),
+                             axis=0)[:, None].astype(x.dtype)
+
+        slot = (pos % ring).astype(jnp.int32)
+        iota = jnp.arange(ring, dtype=jnp.int32)
+        kvpos = jnp.where(iota[None, :] == slot[:, None], pos[:, None],
+                          cache["kvpos"])
+        new_cache = {"pos": pos + 1, "kvpos": kvpos}
+
+        dec_stacks = [s for s in self.stacks
+                      if not (cfg.family == "encdec" and s[0] == "enc")]
+        for name, count, pattern in dec_stacks:
+            sp = _subtree(params, name)
+            x, nc = stack_apply(x, sp, cfg, self.plan, ad_shared, ad_xs[name],
+                                name, count, pattern, mode="decode",
+                                positions=pos[:, None], kvpos=kvpos, cache=cache[name],
+                                enc_out=None, remat="none",
+                                multi_stack=self.multi_stack,
+                                hooks_factory=hooks_factory,
+                                stack_axes=_subtree(self.axes, name))
+            new_cache[name] = nc
+        return new_cache, self._head_inputs(params, x)
+
+
+def _subtree(params: Dict[str, Any], stack: str) -> Dict[str, Any]:
+    pfx = stack + "."
+    return {k[len(pfx):]: v for k, v in params.items() if k.startswith(pfx)}

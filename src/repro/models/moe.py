@@ -1,0 +1,114 @@
+"""Top-k routed Mixture-of-Experts FFN with capacity-based scatter dispatch.
+
+Dispatch is O(T·k) memory (no (T, E, C) one-hot tensors): assignment slots
+are computed with a per-expert running count (cumsum over the flattened
+assignment list) and tokens are scattered into an (E·C, d) buffer.  Expert
+FFNs then run as one batched einsum over the expert dim — MXU-friendly and
+shardable either on the ffn dim ("model", TP-MoE, default) or on the expert
+dim (EP variant, used in the §Perf pass).
+
+Routing is mixtral-style: softmax over the selected top-k logits.  Overflowed
+tokens (beyond capacity) are dropped — their delta is zero, the residual
+stream passes through (standard Switch behaviour).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamFactory, linear, silu
+from .mlp import AdapterHook, init_mlp, mlp
+
+
+def init_moe(pf: ParamFactory, d: int, ff_e: int, n_experts: int,
+             n_shared: int, ff_shared_act: str,
+             stack: Tuple[int, ...] = (), prefix: str = ""):
+    ax = tuple("layers" for _ in stack)
+    pf.fanin(prefix + "router", stack + (n_experts, d), ax + ("experts_noshard", "embed"), d)
+    pf.fanin(prefix + "w_gate", stack + (n_experts, ff_e, d), ax + ("experts", "ff_expert", "embed"), d)
+    pf.fanin(prefix + "w_up", stack + (n_experts, ff_e, d), ax + ("experts", "ff_expert", "embed"), d)
+    pf.fanin(prefix + "w_down", stack + (n_experts, d, ff_e), ax + ("experts", "embed", "ff_expert"), ff_e)
+    if n_shared > 0:
+        init_mlp(pf, d, n_shared * ff_e, ff_shared_act, stack, prefix + "shared_")
+
+
+def _running_positions(flat_e, E: int, chunk: int = 128):
+    """Per-assignment rank within its expert queue, via *chunked* cumsum.
+
+    A flat (T·k, E) one-hot cumsum lowers to a reduce-window that HLO cost
+    analysis (and naive backends) treat as O((T·k)²·E); chunking it into
+    (T·k/c, c, E) intra-chunk cumsums + an exclusive scan over the tiny
+    (T·k/c, E) chunk totals is O(T·k·c·E) — a ~2000× dispatch-FLOP cut at
+    qwen's shapes (EXPERIMENTS.md §Perf, Cell D)."""
+    Tk = flat_e.shape[0]
+    c = min(chunk, Tk)
+    nc = -(-Tk // c)
+    pad = nc * c - Tk
+    fe = jnp.pad(flat_e, (0, pad), constant_values=E) if pad else flat_e
+    oh = jax.nn.one_hot(fe, E, dtype=jnp.int32)            # (nc*c, E)
+    ohc = oh.reshape(nc, c, E)
+    intra = jnp.cumsum(ohc, axis=1)                        # (nc, c, E)
+    totals = intra[:, -1]                                  # (nc, E)
+    offs = jnp.cumsum(totals, axis=0) - totals             # exclusive
+    pos_all = offs[:, None, :] + intra - 1                 # (nc, c, E)
+    pos = jnp.sum(pos_all * ohc, axis=-1).reshape(nc * c)
+    return pos[:Tk]
+
+
+def _capacity(T: int, k: int, E: int, factor: float) -> int:
+    c = int(T * k * factor / E) + 1
+    return max(-(-c // 128) * 128, 128)   # MXU-aligned
+
+
+def moe_ffn(
+    x: jax.Array,                  # (B, S, d)
+    p: Dict[str, Any],
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float,
+    act: str,
+    hook: AdapterHook,
+    prefix: str = "",
+    expert_hook=None,   # optional: f(local_type, h (E,C,d)) -> (E,C,out)
+) -> jax.Array:
+    B, S, d = x.shape
+    T = B * S
+    E, k = n_experts, top_k
+    xf = x.reshape(T, d)
+
+    logits = linear(xf, p[prefix + "router"]).astype(jnp.float32)   # (T, E)
+    topv, topi = jax.lax.top_k(logits, k)                           # (T, k)
+    gates = jax.nn.softmax(topv, axis=-1)                           # renormalized
+
+    flat_e = topi.reshape(-1)                                       # (T*k,)
+    pos = _running_positions(flat_e, E)
+    C = _capacity(T, k, E, capacity_factor)
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)                 # E*C = trash row
+
+    x_rep = jnp.repeat(xf, k, axis=0)                               # (T*k, d)
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].set(
+        jnp.where(keep[:, None], x_rep, 0))
+    h = buf[: E * C].reshape(E, C, d)
+
+    g = jnp.einsum("ecd,efd->ecf", h, p[prefix + "w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,efd->ecf", h, p[prefix + "w_up"].astype(x.dtype))
+    if expert_hook is not None:
+        g = g + expert_hook("moe_gate", h)
+        u = u + expert_hook("moe_up", h)
+    hi = silu(g) * u
+    y = jnp.einsum("ecf,edf->ecd", hi, p[prefix + "w_down"].astype(x.dtype))
+    if expert_hook is not None:
+        y = y + expert_hook("moe_down", hi)
+
+    out_buf = jnp.concatenate([y.reshape(E * C, d), jnp.zeros((1, d), y.dtype)])
+    gathered = out_buf[slot]                                        # (T*k, d)
+    w = (gates.reshape(-1) * keep).astype(x.dtype)
+    out = jnp.sum((gathered * w[:, None]).reshape(T, k, d), axis=1)
+
+    if (prefix + "shared_gate") in p or (prefix + "shared_fc1") in p:
+        out = out + mlp(xf, p, act, hook, prefix + "shared_", tprefix="shared_")
+    return out.reshape(B, S, d)

@@ -1,0 +1,483 @@
+"""Transformer assembly: layer patterns, scan-over-layers stacks, caches.
+
+An architecture is a list of *stacks*; each stack is ``(name, count,
+pattern)`` where ``pattern`` is a short list of heterogeneous ``LayerSpec``s
+(jamba: 8 sublayers — 1 attention + 7 mamba, MoE every other).  The stack
+scans over ``count`` groups; within the body the pattern is unrolled, so the
+HLO contains each distinct sublayer exactly once regardless of depth.
+
+Adapter state rides along: per-(stack, position, type) slices are organized
+as scan xs with a leading ``count`` dim (``organize_adapter_xs``), so MoS
+gathers execute inside the scanned body and gradients scatter-add into the
+globally shared pools across all layers — the paper's inter-layer sharing,
+expressed scan-natively.
+
+Caches (KV rings / mamba states / whisper cross-KV) are scan xs *and* ys.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import adapters as ad
+from ..core.types import LinearTypeSpec
+from ..distributed.context import (constrain_batch, constrain_delta_out,
+                                   constrain_use)
+from .attention import (INVALID_POS, banded_attention, blockwise_attention,
+                        decode_attention)
+from .layers import ParamFactory, apply_rope, linear, norm_apply, init_norm
+from .mamba import init_mamba, init_mamba_state, mamba_mixer
+from .mlp import init_mlp, mlp
+from .moe import init_moe, moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str                  # "attn" | "mamba"
+    ffn: str = "mlp"            # "mlp" | "moe" | "none"
+    cross: bool = False         # whisper decoder cross-attention
+    causal: bool = True
+
+
+def arch_stacks(cfg) -> List[Tuple[str, int, List[LayerSpec]]]:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return [("layers", cfg.n_layers, [LayerSpec("attn", "mlp")])]
+    if fam == "moe":
+        return [("layers", cfg.n_layers, [LayerSpec("attn", "moe")])]
+    if fam == "ssm":
+        return [("layers", cfg.n_layers, [LayerSpec("mamba", "none")])]
+    if fam == "hybrid":
+        per = cfg.attn_every
+        assert cfg.n_layers % per == 0
+        pattern = []
+        for j in range(per):
+            mixer = "attn" if j == 0 else "mamba"
+            ffn = "moe" if (j % cfg.moe_every == cfg.moe_every - 1) else "mlp"
+            pattern.append(LayerSpec(mixer, ffn))
+        return [("layers", cfg.n_layers // per, pattern)]
+    if fam == "encdec":
+        return [
+            ("enc", cfg.n_enc_layers, [LayerSpec("attn", "mlp", causal=False)]),
+            ("dec", cfg.n_layers, [LayerSpec("attn", "mlp", cross=True)]),
+        ]
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# adapter type enumeration
+# ---------------------------------------------------------------------------
+
+def _position_types(cfg, spec: LayerSpec, adapter_cfg) -> List[Tuple[str, int, int, int]]:
+    """[(local_type, h, o, instances_per_occurrence)] for one pattern slot."""
+    d, hd = cfg.d_model, cfg.hd
+    Hp, KVp = cfg.padded_heads, cfg.padded_kv_heads
+    out = []
+    if spec.mixer == "attn":
+        out += [("q", d, Hp * hd, 1), ("k", d, KVp * hd, 1),
+                ("v", d, KVp * hd, 1), ("o", Hp * hd, d, 1)]
+    else:
+        di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+        out += [("ssm_in", d, 2 * di + 2 * G * N + H, 1),
+                ("ssm_out", di, d, 1)]
+    if spec.cross:
+        out += [("xq", d, Hp * hd, 1), ("xk", d, KVp * hd, 1),
+                ("xv", d, KVp * hd, 1), ("xo", Hp * hd, d, 1)]
+    if spec.ffn == "mlp":
+        ff = cfg.d_ff
+        if cfg.act == "swiglu":
+            out += [("gate", d, ff, 1), ("up", d, ff, 1), ("down", ff, d, 1)]
+        else:
+            out += [("fc1", d, ff, 1), ("fc2", ff, d, 1)]
+    elif spec.ffn == "moe":
+        if cfg.n_shared_experts > 0:
+            ffs = cfg.n_shared_experts * cfg.d_ff_expert
+            out += [("shared_gate", d, ffs, 1), ("shared_up", d, ffs, 1),
+                    ("shared_down", ffs, d, 1)]
+        if adapter_cfg is not None and getattr(adapter_cfg, "adapt_experts", False):
+            fe = cfg.d_ff_expert or cfg.d_ff
+            E = cfg.n_experts
+            out += [("moe_gate", d, fe, E), ("moe_up", d, fe, E),
+                    ("moe_down", fe, d, E)]
+    return out
+
+
+def adapter_specs(cfg, adapter_cfg) -> List[LinearTypeSpec]:
+    """Enumerate adapted linear types with pool-sharing breadth L."""
+    stacks = arch_stacks(cfg)
+    multi = len(stacks) > 1
+    acc: Dict[str, Tuple[int, int, int]] = {}
+    for stack_name, count, pattern in stacks:
+        pfx = f"{stack_name}." if multi else ""
+        for spec in pattern:
+            for t, h, o, per in _position_types(cfg, spec, adapter_cfg):
+                key = pfx + t
+                if key in acc:
+                    h0, o0, n0 = acc[key]
+                    acc[key] = (h0, o0, n0 + count * per)
+                else:
+                    acc[key] = (h, o, count * per)
+    return [LinearTypeSpec(k, h, o, n) for k, (h, o, n) in acc.items()]
+
+
+def organize_adapter_xs(plan: ad.AdapterPlan, state, cfg):
+    """Reshape per-layer adapter arrays into per-stack scan xs.
+
+    Returns {stack: {"p{j}": {"trainable"/"static": {type: {leaf: arr}}}}}
+    with a leading ``count`` dim on every leaf (plus an E dim for expert
+    types).  Instance numbering is (group, occurrence) to match
+    ``adapter_specs``.
+    """
+    stacks = arch_stacks(cfg)
+    multi = len(stacks) > 1
+    out = {}
+    for stack_name, count, pattern in stacks:
+        pfx = f"{stack_name}." if multi else ""
+        occ_of: Dict[str, int] = {}
+        pos_info: List[List[Tuple[str, int, int]]] = []   # (type, per, occ)
+        for spec in pattern:
+            row = []
+            for t, h, o, per in _position_types(cfg, spec, plan.cfg):
+                row.append((t, per, occ_of.get(t, 0)))
+                occ_of[t] = occ_of.get(t, 0) + 1
+            pos_info.append(row)
+        _, stacked = ad.split_scan(plan, state, [pfx + t for t in occ_of])
+        sdict = {}
+        for j, row in enumerate(pos_info):
+            node: Dict[str, Dict[str, Any]] = {"trainable": {}, "static": {}}
+            for t, per, occ in row:
+                key = pfx + t
+                n_occ = occ_of[t]
+                for grp in ("trainable", "static"):
+                    leaves = stacked[grp].get(key, {})
+                    if not leaves:
+                        continue
+                    sub = {}
+                    for kk, v in leaves.items():
+                        if per > 1:
+                            vv = v.reshape((count, n_occ, per) + v.shape[1:])[:, occ]
+                        else:
+                            vv = v.reshape((count, n_occ) + v.shape[1:])[:, occ]
+                        sub[kk] = vv                       # (count, [per,] ...)
+                    node[grp][key] = sub
+            sdict[f"p{j}"] = node
+        out[stack_name] = sdict
+    return out
+
+
+# adapted-linear types whose base output is TP-column-sharded ("model")
+COL_PARALLEL = {"q", "k", "v", "gate", "up", "fc1", "shared_gate",
+                "shared_up", "moe_gate", "moe_up", "xq", "xk", "xv"}
+
+
+class Hooks:
+    """Binds (plan, shared-state, per-layer node, type prefix) to the local
+    hook interface used by attention/mlp/moe/mamba."""
+
+    def __init__(self, plan, shared, node, type_prefix: str):
+        self.plan, self.shared, self.node = plan, shared, node
+        self.tp = type_prefix
+
+    def __call__(self, local: str, x):
+        y = ad.delta(self.plan, self.shared, self.node, self.tp + local, x)
+        return constrain_delta_out(y, local in COL_PARALLEL)
+
+    def factored(self, local: str, x):
+        return ad.delta_factored(self.plan, self.shared, self.node,
+                                 self.tp + local, x)
+
+    def expert(self, local: str, h):
+        if not getattr(self.plan.cfg, "adapt_experts", False):
+            return None
+        return ad.expert_delta(self.plan, self.shared, self.node,
+                               self.tp + local, h)
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def init_attn(pf: ParamFactory, cfg, stack: Tuple[int, ...], prefix: str):
+    d, hd = cfg.d_model, cfg.hd
+    Hp, KVp = cfg.padded_heads, cfg.padded_kv_heads
+    ax = tuple("layers" for _ in stack)
+    pf.fanin(prefix + "q", stack + (Hp * hd, d), ax + ("heads_flat", "embed"), d)
+    pf.fanin(prefix + "k", stack + (KVp * hd, d), ax + ("kv_flat", "embed"), d)
+    pf.fanin(prefix + "v", stack + (KVp * hd, d), ax + ("kv_flat", "embed"), d)
+    pf.fanin(prefix + "o", stack + (d, Hp * hd), ax + ("embed", "heads_flat"), Hp * hd)
+
+
+def init_stack_params(pf: ParamFactory, cfg, name: str, count: int,
+                      pattern: List[LayerSpec]):
+    stack = (count,)
+    for j, spec in enumerate(pattern):
+        p = f"{name}.p{j}."
+        init_norm(pf, p + "mixer_norm", cfg.d_model, cfg.norm, stack)
+        if spec.mixer == "attn":
+            init_attn(pf, cfg, stack, p)
+        else:
+            init_mamba(pf, cfg, stack, p)
+        if spec.cross:
+            init_norm(pf, p + "xattn_norm", cfg.d_model, cfg.norm, stack)
+            init_attn(pf, cfg, stack, p + "x")
+        if spec.ffn == "mlp":
+            init_norm(pf, p + "ffn_norm", cfg.d_model, cfg.norm, stack)
+            init_mlp(pf, cfg.d_model, cfg.d_ff, cfg.act, stack, p)
+        elif spec.ffn == "moe":
+            init_norm(pf, p + "ffn_norm", cfg.d_model, cfg.norm, stack)
+            init_moe(pf, cfg.d_model, cfg.d_ff_expert or cfg.d_ff,
+                     cfg.n_experts, cfg.n_shared_experts, cfg.act, stack, p)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def cache_seq_len(cfg, max_len: int) -> int:
+    """KV ring length: SWA archs only ever need ``window`` slots."""
+    if cfg.sliding_window > 0:
+        return min(max_len, cfg.sliding_window)
+    return max_len
+
+
+def init_stack_cache(cfg, count: int, pattern: List[LayerSpec],
+                     batch: int, max_len: int, abstract: bool):
+    S = cache_seq_len(cfg, max_len)
+    KVp, hd = cfg.padded_kv_heads, cfg.hd
+    dtype = cfg.dtype_jnp()
+
+    def mk(shape, dt):
+        return jax.ShapeDtypeStruct(shape, dt) if abstract else jnp.zeros(shape, dt)
+
+    cache = {}
+    for j, spec in enumerate(pattern):
+        c = {}
+        if spec.mixer == "attn":
+            c["k"] = mk((count, batch, S, KVp, hd), dtype)
+            c["v"] = mk((count, batch, S, KVp, hd), dtype)
+        else:
+            st = init_mamba_state(cfg, batch, dtype, abstract=True)
+            for k, v in st.items():
+                c[k] = mk((count,) + tuple(v.shape), v.dtype)
+        if spec.cross:
+            c["xk"] = mk((count, batch, cfg.enc_seq, KVp, hd), dtype)
+            c["xv"] = mk((count, batch, cfg.enc_seq, KVp, hd), dtype)
+        cache[f"p{j}"] = c
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# attention layer
+# ---------------------------------------------------------------------------
+
+def _write_kv(cache_k, new_k, pos, ring: int):
+    """Scatter one-token kv into the ring at (pos % ring) — SPMD-safe
+    (select over iota; no dynamic slicing of possibly-sharded dims)."""
+    slot = (pos % ring).astype(jnp.int32)                  # (B,)
+    iota = jnp.arange(cache_k.shape[1], dtype=jnp.int32)   # (S,)
+    m = (iota[None, :] == slot[:, None])[..., None, None]
+    return jnp.where(m, new_k.astype(cache_k.dtype), cache_k)
+
+
+def attn_apply(x, p, cfg, hooks: Hooks, prefix, *, mode, positions, kvpos,
+               cache, causal=True, window=0, tprefix="", kv_src=None):
+    """GQA attention; ``kv_src`` switches to cross-attention over a source
+    sequence (keys/values from kv_src, no causal mask, no rope)."""
+    B, S, _ = x.shape
+    hd = cfg.hd
+    Hp, KVp, G = cfg.padded_heads, cfg.padded_kv_heads, cfg.group_size
+
+    q = (linear(x, p[prefix + "q"]) + hooks(tprefix + "q", x)
+         ).reshape(B, S, KVp, G, hd)
+    src = x if kv_src is None else kv_src
+    k = (linear(src, p[prefix + "k"]) + hooks(tprefix + "k", src)
+         ).reshape(B, src.shape[1], KVp, hd)
+    v = (linear(src, p[prefix + "v"]) + hooks(tprefix + "v", src)
+         ).reshape(B, src.shape[1], KVp, hd)
+
+    if cfg.pos_embed == "rope" and kv_src is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = {}
+    if mode in ("train", "prefill") or cache is None:
+        if kv_src is not None:
+            kvp = jnp.arange(k.shape[1], dtype=jnp.int32)
+            out = blockwise_attention(q, k, v, positions, kvp, causal=False,
+                                      q_chunk=cfg.attn_chunk,
+                                      kv_chunk=cfg.attn_chunk,
+                                      unroll=cfg.unroll_layers)
+        elif window > 0 and S > 2 * window:
+            out = banded_attention(q, k, v, positions, positions,
+                                   window=window, q_chunk=cfg.attn_chunk,
+                                   unroll=cfg.unroll_layers)
+        else:
+            out = blockwise_attention(q, k, v, positions, positions,
+                                      causal=causal, window=window,
+                                      q_chunk=cfg.attn_chunk,
+                                      kv_chunk=cfg.attn_chunk,
+                                      unroll=cfg.unroll_layers)
+        if mode == "prefill" and cache is not None and "k" in cache:
+            ring = cache["k"].shape[1]
+            kd, vd = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+            if ring >= k.shape[1]:
+                nk = jax.lax.dynamic_update_slice_in_dim(cache["k"], kd, 0, axis=1)
+                nv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vd, 0, axis=1)
+            else:                       # SWA ring < prefill: keep the tail
+                nk, nv = kd[:, -ring:], vd[:, -ring:]
+            new_cache = {"k": nk, "v": nv}
+    else:                               # decode over the ring
+        ring = cache["k"].shape[1]
+        pos_b = positions.reshape(B)
+        nk = _write_kv(cache["k"], k, pos_b, ring)
+        nv = _write_kv(cache["v"], v, pos_b, ring)
+        out = decode_attention(q, nk, nv, pos_b, kvpos, window=window)
+        new_cache = {"k": nk, "v": nv}
+
+    out = out.reshape(B, S, Hp * hd)
+    y = linear(out, p[prefix + "o"]) + hooks(tprefix + "o", out)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# one sublayer
+# ---------------------------------------------------------------------------
+
+def _res_add(x, y, cfg):
+    x = x + y
+    if cfg.psum_barrier:
+        x = jax.lax.optimization_barrier(x)
+    return x
+
+
+def layer_apply(x, p, cfg, hooks: Hooks, spec: LayerSpec, prefix, *, mode,
+                positions, kvpos, cache, enc_out):
+    new_cache = {}
+    h = norm_apply(cfg.norm, x, p, prefix + "mixer_norm.")
+    if spec.mixer == "attn":
+        y, nc = attn_apply(h, p, cfg, hooks, prefix, mode=mode,
+                           positions=positions, kvpos=kvpos, cache=cache,
+                           causal=spec.causal, window=cfg.sliding_window)
+        new_cache.update(nc)
+    else:
+        st = None
+        if mode == "decode" and cache is not None and "ssm" in cache:
+            st = {k: cache[k] for k in ("ssm", "conv_x", "conv_b", "conv_c")}
+        want_state = (mode == "prefill" and cache is not None and
+                      "ssm" in (cache or {}))
+        y, nst = mamba_mixer(h, p, cfg, hooks, hooks.factored, prefix,
+                             state=st, return_state=want_state)
+        if nst is not None:
+            new_cache.update(nst)
+    x = _res_add(x, y, cfg)
+
+    if spec.cross:
+        h = norm_apply(cfg.norm, x, p, prefix + "xattn_norm.")
+        if mode in ("train", "prefill"):
+            y, _ = attn_apply(h, p, cfg, hooks, prefix + "x", mode="train",
+                              positions=positions, kvpos=None, cache=None,
+                              causal=False, tprefix="x", kv_src=enc_out)
+            if mode == "prefill" and cache is not None:
+                KVp, hd = cfg.padded_kv_heads, cfg.hd
+                B, Se = enc_out.shape[0], enc_out.shape[1]
+                dt = cfg.dtype_jnp()
+                xk = (linear(enc_out, p[prefix + "xk"]) +
+                      hooks("xk", enc_out)).reshape(B, Se, KVp, hd)
+                xv = (linear(enc_out, p[prefix + "xv"]) +
+                      hooks("xv", enc_out)).reshape(B, Se, KVp, hd)
+                new_cache.update({"xk": xk.astype(dt), "xv": xv.astype(dt)})
+        else:                      # decode: cached cross kv, non-causal
+            B = h.shape[0]
+            Se = cache["xk"].shape[1]
+            q = (linear(h, p[prefix + "xq"]) + hooks("xq", h)).reshape(
+                B, 1, cfg.padded_kv_heads, cfg.group_size, cfg.hd)
+            kvp = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+            att = decode_attention(q, cache["xk"], cache["xv"],
+                                   jnp.full((B,), 2**30 - 2, jnp.int32), kvp)
+            att = att.reshape(B, 1, cfg.padded_heads * cfg.hd)
+            y = linear(att, p[prefix + "xo"]) + hooks("xo", att)
+            new_cache.update({"xk": cache["xk"], "xv": cache["xv"]})
+        x = _res_add(x, y, cfg)
+
+    if spec.ffn != "none":
+        h = norm_apply(cfg.norm, x, p, prefix + "ffn_norm.")
+        if spec.ffn == "mlp":
+            y = mlp(h, p, cfg.act, hooks, prefix)
+        else:
+            y = moe_ffn(h, p, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                        capacity_factor=cfg.capacity_factor, act=cfg.act,
+                        hook=hooks, prefix=prefix,
+                        expert_hook=(hooks.expert if getattr(
+                            hooks.plan.cfg, "adapt_experts", False) else None))
+        x = _res_add(x, y, cfg)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# stack scan
+# ---------------------------------------------------------------------------
+
+def stack_apply(x, stack_params, cfg, plan, ad_shared, ad_xs, stack_name,
+                count, pattern, *, mode, positions, kvpos, cache, enc_out,
+                remat: str, multi_stack: bool, hooks_factory=None,
+                stack_axes=None):
+    tpfx = f"{stack_name}." if multi_stack else ""
+    has_cache = cache is not None
+    factory = hooks_factory or Hooks
+
+    def group_body(h, gp, gad, gcache):
+        h = constrain_batch(h)
+        if stack_axes:
+            gp = {k: constrain_use(v, stack_axes[k][1:])
+                  for k, v in gp.items()}
+        new_gcache = {}
+        for j, spec in enumerate(pattern):
+            pj = f"p{j}"
+            sub = {k: v for k, v in gp.items() if k.startswith(pj + ".")}
+            node = gad.get(pj, {"trainable": {}, "static": {}})
+            hooks = factory(plan, ad_shared, node, tpfx)
+            h, nc = layer_apply(h, sub, cfg, hooks, spec, f"{pj}.",
+                                mode=mode, positions=positions, kvpos=kvpos,
+                                cache=(gcache or {}).get(pj), enc_out=enc_out)
+            if nc:
+                new_gcache[pj] = nc
+        return h, new_gcache
+
+    body = group_body
+    if remat == "full":
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            group_body, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    if cfg.unroll_layers:
+        # python loop (roofline depth-extrapolation mode; exact HLO counts)
+        caches = []
+        for g in range(count):
+            sl = lambda t: jax.tree.map(lambda v: v[g], t)
+            x, nc = body(x, sl(stack_params), sl(ad_xs),
+                         sl(cache) if has_cache else None)
+            caches.append(nc)
+        if has_cache:
+            new_cache = jax.tree.map(lambda *vs: jnp.stack(vs), *caches)
+            return x, new_cache
+        return x, None
+
+    if has_cache:
+        def scan_body(h, xs_in):
+            gp, gad, gcache = xs_in
+            h, nc = body(h, gp, gad, gcache)
+            return h, nc
+        x, new_cache = jax.lax.scan(scan_body, x, (stack_params, ad_xs, cache))
+        return x, new_cache
+
+    def scan_body(h, xs_in):
+        gp, gad = xs_in
+        h, _ = body(h, gp, gad, None)
+        return h, None
+    x, _ = jax.lax.scan(scan_body, x, (stack_params, ad_xs))
+    return x, None

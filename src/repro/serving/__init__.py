@@ -1,0 +1,3 @@
+"""Multi-tenant adapter serving (the paper's motivating scenario)."""
+from .engine import ServingEngine, Request, make_serve_step, make_prefill_step
+from .multi_tenant import stack_tenants, MTHooks, make_mt_factory

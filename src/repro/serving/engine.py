@@ -1,0 +1,166 @@
+"""Serving engine: jitted prefill/decode steps + a continuous-batching
+scheduler for multi-tenant adapter serving.
+
+The jitted steps are what the decode_* dry-run cells lower; the python-side
+``ServingEngine`` drives them for the runnable examples (admission, slot
+reuse, per-request positions, greedy sampling).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .multi_tenant import make_mt_factory, stack_tenants
+
+
+def make_serve_step(model, tenants: int = 0):
+    """One decode step.  tenants > 0 → multi-tenant BGMV application with
+    per-request ``adapter_ids``; otherwise single-adapter decode."""
+
+    if tenants > 0:
+        def serve_step(params, ad_stack, tokens, adapter_ids, cache):
+            fac = make_mt_factory(adapter_ids)
+            new_cache, h = model.decode_step(params, ad_stack, tokens, cache,
+                                             hooks_factory=fac)
+            logits = model.logits(params, h)[:, 0]
+            return new_cache, logits
+        return serve_step
+
+    def serve_step(params, ad_state, tokens, cache):
+        new_cache, h = model.decode_step(params, ad_state, tokens, cache)
+        logits = model.logits(params, h)[:, 0]
+        return new_cache, logits
+    return serve_step
+
+
+def make_prefill_step(model, tenants: int = 0):
+    if tenants > 0:
+        def prefill_step(params, ad_stack, batch, adapter_ids, cache):
+            fac = make_mt_factory(adapter_ids)
+            new_cache, h = model.prefill(params, ad_stack, batch, cache,
+                                         hooks_factory=fac)
+            logits = model.logits(params, h)[:, 0]
+            return new_cache, logits
+        return prefill_step
+
+    def prefill_step(params, ad_state, batch, cache):
+        new_cache, h = model.prefill(params, ad_state, batch, cache)
+        logits = model.logits(params, h)[:, 0]
+        return new_cache, logits
+    return prefill_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    adapter_id: int
+    max_new: int = 16
+    out: Optional[List[int]] = None
+    done: bool = False
+
+
+def batch_dim_of(leaf_name: str) -> int:
+    """Request-batch dim per cache leaf (stack caches lead with layer count)."""
+    return 0 if leaf_name in ("pos", "kvpos") else 1
+
+
+def insert_slot(batch_cache, single_cache, slot: int):
+    """Copy a (B=1) prefilled request cache into slot ``slot`` of the batch
+    cache — the standard prefill→decode-batch handoff of a serving engine."""
+
+    def one(path, b, s):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        dim = batch_dim_of(name)
+        idx = [slice(None)] * b.ndim
+        idx[dim] = slot
+        src = jnp.squeeze(s, axis=dim) if s.shape[dim] == 1 else s
+        return b.at[tuple(idx)].set(src.astype(b.dtype))
+
+    return jax.tree_util.tree_map_with_path(one, batch_cache, single_cache)
+
+
+class ServingEngine:
+    """Continuous-batching engine over the jitted steps.
+
+    Static decode batch of ``slots``.  Admission = single-request prefill
+    (its own jitted step) + ``insert_slot`` into the decode batch; finished
+    requests free their slot immediately.  Empty slots still run (their
+    writes land in slots that are fully overwritten on the next admission),
+    which keeps the decode step shape-static — the same trade production
+    engines make.
+    """
+
+    def __init__(self, model, params, tenant_states: Sequence[Any],
+                 slots: int = 4, max_len: int = 128):
+        self.model, self.params = model, params
+        self.tenants = len(tenant_states)
+        self.ad_stack = stack_tenants(model.plan, tenant_states)
+        self.slots, self.max_len = slots, max_len
+        self.serve = jax.jit(make_serve_step(model, tenants=self.tenants))
+        self.prefill = jax.jit(make_prefill_step(model, tenants=self.tenants))
+        self._queue: List[Request] = []
+        self._active: List[Optional[Request]] = [None] * slots
+        self.cache = model.init_cache(slots, max_len)
+        self.adapter_ids = np.zeros((slots,), np.int32)
+        self._pending: Dict[int, int] = {}   # slot → first generated token
+
+    def submit(self, req: Request):
+        req.out = []
+        self._queue.append(req)
+
+    def _admit(self):
+        for i in range(self.slots):
+            if self._active[i] is None and self._queue:
+                req = self._queue.pop(0)
+                self._active[i] = req
+                self.adapter_ids[i] = req.adapter_id
+                single = self.model.init_cache(1, self.max_len)
+                ids1 = jnp.asarray([req.adapter_id], jnp.int32)
+                single, logits = self.prefill(
+                    self.params, self.ad_stack,
+                    {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)},
+                    ids1, single)
+                self.cache = insert_slot(self.cache, single, i)
+                self._pending[i] = int(jnp.argmax(logits[0]))
+
+    def step(self):
+        """One engine tick: admit, then decode one token per active slot."""
+        self._admit()
+        # flush prefill-produced first tokens
+        for i, tok in list(self._pending.items()):
+            req = self._active[i]
+            if req is not None:
+                req.out.append(tok)
+        toks = np.zeros((self.slots, 1), np.int32)
+        for i, req in enumerate(self._active):
+            if req is None:
+                continue
+            toks[i, 0] = req.out[-1] if req.out else int(req.prompt[-1])
+        self.cache, logits = self.serve(
+            self.params, self.ad_stack, jnp.asarray(toks),
+            jnp.asarray(self.adapter_ids), self.cache)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, req in enumerate(self._active):
+            if req is None:
+                continue
+            if i in self._pending:            # token already appended above
+                del self._pending[i]
+            req.out.append(int(nxt[i]))
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self._active[i] = None
+
+    def run(self, max_ticks: int = 64) -> List[Request]:
+        finished: List[Request] = []
+        ticks = 0
+        while (self._queue or any(self._active)) and ticks < max_ticks:
+            before = [r for r in self._active if r]
+            self.step()
+            finished += [r for r in before if r.done]
+            ticks += 1
+        return finished

@@ -1,0 +1,130 @@
+"""Multi-tenant adapter serving — the paper's headline scenario (§1:
+thousands of per-user customizations served concurrently).
+
+Design decisions (DESIGN.md §3):
+  * tenants share the *routing plan* (index matrices); only pools differ.
+    One gather materializes all T tenants' (A, B) per layer, so serving cost
+    is O(T·r·(h+o)) memory and one batched gather — the MoS advantage: a
+    tenant costs e/r of a LoRA tenant in transfer/storage.
+  * per-request application is BGMV (Punica-style): gather each request's
+    (A, B) by adapter id and apply two small einsums.  The Pallas kernel in
+    ``repro.kernels.bgmv`` fuses this on TPU; this module is the jnp form.
+
+``stack_tenants`` stacks T adapter states tenant-major for shared keys and
+layer-major for per-layer keys, so the model's scan slicing stays unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core import adapters as ad
+from ..core.adapters import PER_LAYER_KEYS
+from ..models.transformer import Hooks
+
+
+def stack_tenants(plan: ad.AdapterPlan, states: Sequence[Any]):
+    """Stack T adapter states → one multi-tenant state.
+
+    Shared (pool) leaves: (T, ...) on axis 0.  Per-layer leaves: (L, T, ...)
+    — tenant axis *after* the layer axis so scan xs reshaping still sees L
+    leading.  Static (indices) must be identical across tenants (shared
+    routing plan) — asserted, and taken from tenant 0.
+    """
+    keys = PER_LAYER_KEYS[plan.method]
+    per_layer = set(keys.get("trainable", ()))
+    t0 = states[0]
+    out_tr: Dict[str, Any] = {}
+    for tname, leaves in t0["trainable"].items():
+        out_tr[tname] = {}
+        for k in leaves:
+            vals = [s["trainable"][tname][k] for s in states]
+            axis = 1 if k in per_layer else 0
+            out_tr[tname][k] = jnp.stack(vals, axis=axis)
+    import numpy as np
+    for tname, leaves in t0["static"].items():
+        for k in leaves:
+            for s in states[1:]:
+                assert (np.asarray(s["static"][tname][k]) ==
+                        np.asarray(leaves[k])).all(), \
+                    "multi-tenant serving requires a shared routing plan"
+    return {"trainable": out_tr, "static": t0["static"]}
+
+
+class MTHooks(Hooks):
+    """Per-request (BGMV) adapter application for decode/prefill.
+
+    x: (B, S, h); adapter_ids: (B,) into the tenant dim of the stacked
+    state.  Supports mos/pure (pools (T, n, s)) and lora ((T, r, h) slices).
+    """
+
+    def __init__(self, plan, shared, node, type_prefix, adapter_ids):
+        super().__init__(plan, shared, node, type_prefix)
+        self.ids = adapter_ids
+
+    def _ab(self, name):
+        cfg = self.plan.cfg
+        m = cfg.method
+        if m in ("mos", "pure"):
+            tr = self.shared["trainable"][name]
+            st = self.node["static"][name]
+            r = self.plan.geoms[name].r
+            a_all = jnp.take(tr["a_pool"], st["idx_a"].reshape(-1), axis=1)
+            a_all = a_all.reshape(tr["a_pool"].shape[0], r, -1)   # (T, r, h)
+            b_all = jnp.take(tr["b_pool"], st["idx_b"].reshape(-1), axis=1)
+            b_all = b_all.reshape(tr["b_pool"].shape[0], r, -1)   # (T, r, o)
+            return a_all, b_all, cfg.scaling(r)
+        if m == "lora":
+            tr = self.node["trainable"][name]
+            # per-layer slice leaves are (T, r, h) (layer axis consumed)
+            return tr["a"], tr["b"], cfg.scaling(cfg.rank)
+        raise NotImplementedError(
+            f"multi-tenant serving not implemented for {m!r}")
+
+    def __call__(self, local: str, x):
+        if self.plan.method == "none":
+            return jnp.zeros(x.shape[:-1] + (self.plan.spec(self.tp + local).o,),
+                             x.dtype)
+        a_all, b_all, scale = self._ab(self.tp + local)
+        a_req = jnp.take(a_all, self.ids, axis=0)      # (B, r, h)
+        b_req = jnp.take(b_all, self.ids, axis=0)      # (B, r, o)
+        squeeze = x.ndim == 2                          # flattened (B·S, h)
+        xb = x[:, None] if squeeze else x              # decode: S == 1
+        u = jnp.einsum("bsh,brh->bsr", xb, a_req.astype(x.dtype))
+        y = jnp.einsum("bsr,bro->bso", u, b_req.astype(x.dtype))
+        y = y * jnp.asarray(scale, x.dtype)
+        return y[:, 0] if squeeze else y
+
+    def factored(self, local: str, x):
+        if self.plan.method == "none":
+            return None
+        a_all, b_all, scale = self._ab(self.tp + local)
+        a_req = jnp.take(a_all, self.ids, axis=0)
+        b_req = jnp.take(b_all, self.ids, axis=0)
+        u = jnp.einsum("bsh,brh->bsr", x, a_req.astype(x.dtype))
+        return u, _PerRequestRows(b_req), scale, None
+
+    def expert(self, local: str, h):
+        raise NotImplementedError("expert adapters in MT serving")
+
+
+class _PerRequestRows:
+    """Duck-typed b_rows supporting column slicing for the factored path:
+    holds (B, r, o); slicing returns (B, r, o_slice) and einsum in
+    mamba.in_proj_apply dispatches on ndim."""
+
+    def __init__(self, b):
+        self.b = b
+
+    def __getitem__(self, idx):
+        # expected usage: b_rows[:, sl] — slice the output dim
+        _, sl = idx
+        return self.b[:, :, sl]
+
+
+def make_mt_factory(adapter_ids):
+    def factory(plan, shared, node, tpfx):
+        return MTHooks(plan, shared, node, tpfx, adapter_ids)
+    return factory

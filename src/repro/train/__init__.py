@@ -1,0 +1,6 @@
+"""Training substrate: optimizer, schedules, train steps, trainer loop."""
+from .optimizer import AdamWConfig, adamw_update, init_opt_state, abstract_opt_state
+from .train_step import (chunked_cross_entropy, loss_fn, make_train_step,
+                         make_compressed_train_step, make_full_train_step,
+                         pretrain_base)
+from .trainer import Trainer, TrainerConfig

@@ -1,0 +1,101 @@
+"""Optimizers + LR schedules, from scratch (no optax in this environment).
+
+AdamW with decoupled weight decay and global-norm clipping — the paper's
+finetuning setup uses (paged) AdamW with max-grad-norm 0.3 and a linear
+schedule with 3% warmup; those are the defaults here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 2e-4                 # paper: best of their sweep
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    max_grad_norm: float = 0.3       # paper: cap at 0.3
+    schedule: str = "linear"         # linear | cosine | constant
+    warmup_frac: float = 0.03        # paper: 3% warmup
+    total_steps: int = 10_000
+
+
+def schedule_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    t = step.astype(jnp.float32)
+    warm = jnp.maximum(cfg.warmup_frac * cfg.total_steps, 1.0)
+    warm_lr = t / warm
+    frac = jnp.clip((t - warm) / jnp.maximum(cfg.total_steps - warm, 1.0), 0.0, 1.0)
+    if cfg.schedule == "linear":
+        decay = 1.0 - frac
+    elif cfg.schedule == "cosine":
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    else:
+        decay = 1.0
+    return cfg.lr * jnp.where(t < warm, warm_lr, decay)
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros = lambda t: jax.tree.map(jnp.zeros_like, t)
+    return {"mu": zeros(params), "nu": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_opt_state(params) -> Dict[str, Any]:
+    like = lambda t: jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
+    return {"mu": like(params), "nu": like(params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree.map(lambda l: l * scale.astype(l.dtype), tree), g
+
+
+def adamw_update(cfg: AdamWConfig, grads, params, state):
+    """One AdamW step → (new_params, new_state, metrics)."""
+    if cfg.max_grad_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state["step"] + 1
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, p, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * jnp.square(g32)
+        mhat = mu / bc1
+        vhat = nu / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay > 0:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_p = tdef.flatten_up_to(params)
+    flat_mu = tdef.flatten_up_to(state["mu"])
+    flat_nu = tdef.flatten_up_to(state["nu"])
+    out = [upd(g, p, m, n) for g, p, m, n in
+           zip(flat_g, flat_p, flat_mu, flat_nu)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,200 @@
+"""Jitted training steps: loss, adapter-only grads, AdamW, microbatching.
+
+The loss never materializes (B, S, V) logits: the LM head runs inside a
+seq-chunked, rematerialized scan (``chunked_cross_entropy``) — essential for
+the 100k+-vocab archs at S=4k (a 16 GB fp32 logits buffer otherwise).
+
+``make_train_step`` builds the paper-faithful pjit step (base params frozen,
+adapter pools trainable).  ``make_compressed_train_step`` is the
+distributed-optimization variant: per-device grads inside ``shard_map``, an
+int8 + error-feedback ring all-reduce over the data axes (4× fewer wire
+bytes than fp32, 2× fewer than bf16), then the same AdamW.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+from ..distributed.collectives import ring_allreduce_int8
+
+
+def chunked_cross_entropy(x, head_w, labels, chunk: int = 512,
+                          vocab_real: int = 0, unroll: bool = False):
+    """Mean masked token xent.  x (B,S,d); head_w (V,d); labels (B,S) with
+    -100 = ignored.  Label logit via masked-iota reduction (no gather over
+    the vocab-sharded dim, no one-hot materialization).  ``vocab_real``
+    masks a Megatron-style padded vocab tail."""
+    B, S, d = x.shape
+    V = head_w.shape[0]
+    c = min(chunk, S)
+    nc = -(-S // c)
+    pad = nc * c - S
+    if pad:
+        x = jnp.pad(x, [(0, 0), (0, pad), (0, 0)])
+        labels = jnp.pad(labels, [(0, 0), (0, pad)], constant_values=-100)
+    xs = x.reshape(B, nc, c, d).swapaxes(0, 1)          # (nc,B,c,d)
+    ls = labels.reshape(B, nc, c).swapaxes(0, 1)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, inp):
+        xc, lc = inp
+        logits = jnp.einsum("bcd,vd->bcv", xc, head_w.astype(xc.dtype),
+                            preferred_element_type=jnp.float32)
+        if vocab_real and vocab_real != V:
+            vio = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+            logits = jnp.where(vio < vocab_real, logits, -1e30)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        pick = jnp.sum(jnp.where(iota == lc[..., None], logits, 0.0), axis=-1)
+        mask = (lc >= 0).astype(jnp.float32)
+        tot, cnt = carry
+        return (tot + jnp.sum((lse - pick) * mask), cnt + jnp.sum(mask)), None
+
+    if unroll:
+        carry = (jnp.zeros(()), jnp.zeros(()))
+        for i in range(nc):
+            carry, _ = body(carry, (xs[i], ls[i]))
+        tot, cnt = carry
+    else:
+        (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                     (xs, ls))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(model, params, ad_trainable, ad_static, batch):
+    from ..distributed.context import constrain_use
+    ad_state = {"trainable": ad_trainable, "static": ad_static}
+    h = model.forward_train(params, ad_state, batch)
+    head_name = "embed" if model.cfg.tie_embeddings else "lm_head"
+    head = constrain_use(params[head_name], model.axes[head_name])
+    labels = batch["labels"]
+    if model.cfg.family == "vlm":          # patch positions carry no loss
+        pad = h.shape[1] - labels.shape[1]
+        labels = jnp.pad(labels, [(0, 0), (pad, 0)], constant_values=-100)
+    # next-token shift
+    h_in = h[:, :-1]
+    tgt = labels[:, 1:]
+    return chunked_cross_entropy(h_in, head, tgt,
+                                 vocab_real=model.cfg.vocab_size,
+                                 unroll=model.cfg.unroll_layers)
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, microbatch: int = 0):
+    """Paper-faithful pjit train step (adapter-only gradients).
+
+    microbatch > 0 splits the local batch into that many sequential
+    accumulation steps (scan) — activation memory / straggler knob.
+    """
+
+    def step(params, ad_trainable, ad_static, opt_state, batch):
+        def lf(tr, b):
+            return loss_fn(model, params, tr, ad_static, b)
+
+        if microbatch > 1:
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(lf)(ad_trainable, mb)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+            mbs = jax.tree.map(
+                lambda t: t.reshape((microbatch, t.shape[0] // microbatch)
+                                    + t.shape[1:]), batch)
+            zero = jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32),
+                                ad_trainable)
+            (g, l), _ = jax.lax.scan(acc, (zero, jnp.zeros(())), mbs)
+            g = jax.tree.map(lambda t: t / microbatch, g)
+            loss = l / microbatch
+        else:
+            loss, g = jax.value_and_grad(lf)(ad_trainable, batch)
+
+        new_tr, new_opt, metrics = adamw_update(opt_cfg, g, ad_trainable,
+                                                opt_state)
+        metrics["loss"] = loss
+        return new_tr, new_opt, metrics
+
+    return step
+
+
+def make_full_train_step(model, opt_cfg: AdamWConfig):
+    """Full-parameter training step (the paper's full-finetuning baseline;
+    also used to 'pretrain' the synthetic-experiment base models)."""
+
+    def step(params, ad_static, opt_state, batch):
+        def lf(p):
+            empty = {"trainable": {}, "static": ad_static}
+            h = model.forward_train(p, empty, batch)
+            head = p["embed"] if model.cfg.tie_embeddings else p["lm_head"]
+            return chunked_cross_entropy(
+                h[:, :-1], head, batch["labels"][:, 1:],
+                vocab_real=model.cfg.vocab_size,
+                unroll=model.cfg.unroll_layers)
+
+        loss, g = jax.value_and_grad(lf)(params)
+        new_p, new_opt, metrics = adamw_update(opt_cfg, g, params, opt_state)
+        metrics["loss"] = loss
+        return new_p, new_opt, metrics
+
+    return step
+
+
+def pretrain_base(model_none, params, data_cfg, steps: int, lr: float = 1e-2,
+                  global_batch: int = 8):
+    """Convenience: quick full-param pretraining for synthetic experiments.
+    ``model_none`` must be built with AdapterConfig(method='none')."""
+    from ..data import ShardedLoader
+    loader = ShardedLoader(data_cfg, global_batch)
+    opt_cfg = AdamWConfig(lr=lr, total_steps=steps, schedule="constant",
+                          warmup_frac=0.0, max_grad_norm=1.0)
+    step = jax.jit(make_full_train_step(model_none, opt_cfg))
+    opt = init_opt_state(params)
+    losses = []
+    for i in range(steps):
+        params, opt, m = step(params, {}, opt, loader(i))
+        losses.append(float(m["loss"]))
+    return params, losses
+
+
+def make_compressed_train_step(model, opt_cfg: AdamWConfig, rules):
+    """shard_map variant: local grads + int8 error-feedback ring allreduce
+    over the data axes.  Adapter params/opt-state replicated; batch sharded
+    on dim 0.  Returns (step_fn, in_specs builder)."""
+    mesh = rules.mesh
+    data_axes = rules.data_axes
+
+    def step(params, ad_trainable, ad_static, opt_state, err_fb, batch):
+        def body(params, ad_tr, ad_st, opt, efb, local_batch):
+            loss, g = jax.value_and_grad(
+                lambda tr, b: loss_fn(model, params, tr, ad_st, b)
+            )(ad_tr, local_batch)
+            # int8 + error-feedback ring allreduce over the data axes
+            g, efb = ring_allreduce_int8(g, efb, data_axes)
+            loss = jax.lax.pmean(loss, data_axes)
+            new_tr, new_opt, metrics = adamw_update(opt_cfg, g, ad_tr, opt)
+            metrics["loss"] = loss
+            return new_tr, new_opt, efb, metrics
+
+        from jax import shard_map
+        da = data_axes if len(data_axes) > 1 else data_axes[0]
+        bspec = P(da)
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(_rep_spec(params, rules), P(), P(), P(), P(), bspec),
+            out_specs=(P(), P(), P(), P()),
+            check_vma=False,
+        )(params, ad_trainable, ad_static, opt_state, err_fb, batch)
+
+    return step
+
+
+def _rep_spec(params, rules):
+    """shard_map in_specs for base params: keep their pjit shardings by
+    declaring the model axis only (data-axis FSDP is gathered on entry)."""
+    # For the compressed step we keep base params replicated over data
+    # inside the shard_map body; model-axis sharding stays outside concerns
+    # because shard_map here only maps the data axes.
+    return P()

@@ -1,0 +1,25 @@
+"""Shared fixtures: a session-cached pretrained smoke base model.
+
+PEFT presumes a pretrained base — a random frozen network gives adapters no
+signal to steer.  Pretraining ~150 full-param steps on the synthetic task
+mixture once per session keeps the quality-trend tests meaningful and fast.
+"""
+import jax
+import pytest
+
+from repro.configs import get_config, smoke
+from repro.core import AdapterConfig
+from repro.data import DataConfig
+from repro.models import Model
+from repro.train import pretrain_base
+
+
+@pytest.fixture(scope="session")
+def pretrained_smoke_base():
+    cfg = smoke(get_config("granite-3-2b"))
+    none = Model(cfg, AdapterConfig(method="none"))
+    params, axes = none.init_params(jax.random.key(0))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=24, task="mixture")
+    params, losses = pretrain_base(none, params, dc, steps=150)
+    assert losses[-1] < losses[0]
+    return cfg, params, axes

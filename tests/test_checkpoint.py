@@ -1,0 +1,83 @@
+"""Checkpoint substrate: atomic I/O, rotation, sharded layout, elastic."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, load, load_sharded,
+                              reshard_checkpoint, save, save_sharded)
+
+
+def tree():
+    return {"a": jnp.arange(6.0).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16),
+                       "c": jnp.array(3, jnp.int32)}}
+
+
+def test_roundtrip_preserves_dtypes(tmp_path):
+    t = tree()
+    save(tmp_path / "ck", t, {"step": 7})
+    out, meta = load(tmp_path / "ck", like=t)
+    assert meta["step"] == 7
+    assert out["nested"]["b"].dtype == jnp.bfloat16
+    assert np.allclose(np.asarray(out["a"]), np.asarray(t["a"]))
+
+
+def test_atomicity_tmp_never_visible(tmp_path):
+    save(tmp_path / "ck", tree())
+    assert not (tmp_path / "ck.tmp").exists()
+    # overwrite is atomic too
+    save(tmp_path / "ck", tree())
+    assert (tmp_path / "ck" / "manifest.json").exists()
+
+
+def test_manager_rotation_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, max_to_keep=2)
+    for s in (10, 20, 30):
+        mgr.save(s, tree())
+    assert mgr.all_steps() == [20, 30]
+    step, out, meta = mgr.restore_latest(like=tree())
+    assert step == 30 and meta["step"] == 30
+
+
+def test_manager_async_save(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=True)
+    mgr.save(5, tree())
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+def _mesh_rules(shape, axes):
+    from repro.distributed.sharding import make_rules
+    from repro.launch.mesh import make_mesh
+    return make_rules(make_mesh(shape, axes))
+
+
+def test_sharded_roundtrip_and_elastic_reshard(tmp_path):
+    t = {"w": jnp.arange(32.0).reshape(4, 8),
+         "v": jnp.arange(8.0)}
+    axes = {"w": ("ff", "embed"), "v": ("embed_noshard",)}
+    r1 = _mesh_rules((1, 1), ("data", "model"))
+    save_sharded(tmp_path / "s1", t, r1, axes, {"step": 1})
+    out, meta = load_sharded(tmp_path / "s1")
+    assert np.allclose(out["w"], np.asarray(t["w"]))
+    # reshard to a "bigger mesh" layout and back
+    meta2 = reshard_checkpoint(tmp_path / "s1", tmp_path / "s2", r1, axes)
+    out2, _ = load_sharded(tmp_path / "s2")
+    assert np.allclose(out2["w"], np.asarray(t["w"]))
+    assert "resharded_to" in meta2
+
+
+def test_sharded_split_grid(tmp_path):
+    """Shard layout splits along rule-mapped dims (single-device mesh → the
+    grid is 1 but the code path is the multi-shard writer)."""
+    t = {"w": jnp.arange(64.0).reshape(8, 8)}
+    axes = {"w": ("ff", "embed")}
+    r = _mesh_rules((1, 1), ("data", "model"))
+    save_sharded(tmp_path / "s", t, r, axes)
+    man = json.loads((tmp_path / "s" / "manifest.json").read_text())
+    assert man["paths"]["w"]["grid"] == [1, 1]
+    assert man["mesh"] == {"data": 1, "model": 1}

@@ -1,0 +1,123 @@
+"""Core MoS mechanics: pools, routing, materialization, equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AdapterConfig, LinearTypeSpec, build_index_matrices,
+                        delta, init_state, layer_slice, lowrank_delta,
+                        make_plan, materialize, merge_weights, param_count,
+                        resolve_geometry, split_scan, validate_privatization,
+                        count_from_state)
+
+SPEC = LinearTypeSpec("q", 32, 48, 6)
+
+
+def mk(method="mos", **kw):
+    base = dict(method=method, equiv_rank=2, rank=4, shards_per_vector=2,
+                private_rank=1, dtype=jnp.float32)
+    base.update(kw)
+    return AdapterConfig(**base)
+
+
+def test_geometry_budget_matches_lora():
+    cfg = mk()
+    g = resolve_geometry(cfg, SPEC)
+    assert g.trainable_params == SPEC.lora_params(cfg.equiv_rank)
+    assert g.n_shards == cfg.equiv_rank * SPEC.n_instances * g.l
+    assert g.shard_len_a * g.l == SPEC.h
+    assert g.shard_len_b * g.l == SPEC.o
+
+
+def test_geometry_clamps_l_to_divisor():
+    spec = LinearTypeSpec("odd", 30, 42, 4)
+    g = resolve_geometry(mk(shards_per_vector=4), spec)
+    assert spec.h % g.l == 0 and spec.o % g.l == 0
+    assert g.l <= 4
+
+
+def test_privatization_unique_and_fixed():
+    cfg = mk(private_rank=2, rank=4, equiv_rank=3)
+    g = resolve_geometry(cfg, SPEC)
+    idx_a, idx_b = build_index_matrices(cfg, g, seed=0)
+    assert idx_a.shape == (SPEC.n_instances, g.r, g.l)
+    assert validate_privatization(idx_a, g)
+    assert validate_privatization(idx_b, g)
+    # private rows occupy the tail segment, one block each
+    priv = idx_a[:, :g.p].reshape(-1)
+    assert (priv >= g.n_public).all()
+    # public rows never touch the private segment
+    pub = idx_a[:, g.p:].reshape(-1)
+    assert (pub < g.n_public).all()
+
+
+def test_pair_dissociation_flag():
+    cfg = mk(pair_dissociation=False)
+    g = resolve_geometry(cfg, SPEC)
+    ia, ib = build_index_matrices(cfg, g, seed=0)
+    assert (ia == ib).all()
+    cfg2 = mk(pair_dissociation=True)
+    ia2, ib2 = build_index_matrices(cfg2, resolve_geometry(cfg2, SPEC), seed=0)
+    assert not (ia2 == ib2).all()
+
+
+def test_pure_sharing_identical_across_layers():
+    cfg = AdapterConfig(method="pure", equiv_rank=2, subset_selection=False)
+    plan = make_plan(cfg, [SPEC])
+    st = init_state(plan, jax.random.key(0))
+    idx = np.asarray(st["static"]["q"]["idx_a"])
+    assert (idx == idx[0]).all()          # every layer selects the whole pool
+    assert idx.shape[1] == cfg.equiv_rank * SPEC.n_instances
+
+
+def test_materialize_concat_semantics():
+    pool = jnp.arange(12.0).reshape(6, 2)
+    idx = jnp.array([[0, 2], [5, 1]], jnp.int32)
+    out = materialize(pool, idx)
+    expect = jnp.array([[0., 1., 4., 5.], [10., 11., 2., 3.]])
+    assert jnp.allclose(out, expect)
+
+
+def test_delta_zero_at_init_and_grad_flows():
+    plan = make_plan(mk(), [SPEC])
+    st = init_state(plan, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (5, SPEC.h))
+    sh, stk = split_scan(plan, st, ["q"])
+    sl = jax.tree.map(lambda v: v[3], stk)
+    assert jnp.all(delta(plan, sh, sl, "q", x) == 0)      # B pools start 0
+
+    def loss(tr):
+        st2 = {"trainable": tr, "static": st["static"]}
+        sh2, stk2 = split_scan(plan, st2, ["q"])
+        sl2 = jax.tree.map(lambda v: v[3], stk2)
+        return jnp.sum(delta(plan, sh2, sl2, "q", x) ** 2) + \
+            jnp.sum(delta(plan, sh2, sl2, "q", x))
+    g = jax.grad(loss)(st["trainable"])
+    # b_pool gradient nonzero (B multiplies A-path activations)
+    assert float(jnp.max(jnp.abs(g["q"]["b_pool"]))) > 0
+
+
+def test_merge_matches_delta():
+    plan = make_plan(mk(), [SPEC])
+    st = init_state(plan, jax.random.key(0))
+    st["trainable"]["q"]["b_pool"] = jax.random.normal(
+        jax.random.key(2), st["trainable"]["q"]["b_pool"].shape)
+    w = jax.random.normal(jax.random.key(3), (SPEC.o, SPEC.h))
+    x = jax.random.normal(jax.random.key(4), (3, SPEC.h))
+    k = 2
+    merged = merge_weights(plan, st, "q", k, w)
+    sh, stk = split_scan(plan, st, ["q"])
+    sl = jax.tree.map(lambda v: v[k], stk)
+    y1 = x @ merged.T
+    y2 = x @ w.T + delta(plan, sh, sl, "q", x)
+    assert jnp.allclose(y1, y2, atol=1e-5)
+
+
+def test_state_count_matches_closed_form_all_methods():
+    for method, kw in [("mos", {}), ("pure", {"subset_selection": False}),
+                       ("lora", {"rank": 3}), ("vera", {"rank": 8}),
+                       ("tied_lora", {"tied_rank": 5}),
+                       ("prolora", {"rank": 4, "prolora_m": 2})]:
+        plan = make_plan(mk(method, **kw), [SPEC])
+        st = init_state(plan, jax.random.key(0))
+        assert count_from_state(st) == param_count(plan)["total"], method

@@ -1,0 +1,136 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AdapterConfig, LinearTypeSpec, build_index_matrices,
+                        count_from_state, diversity, init_state, make_plan,
+                        param_count, resolve_geometry, validate_privatization)
+from repro.distributed.collectives import dequantize_int8, quantize_int8
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@SET
+@given(h=st.sampled_from([16, 32, 48, 64]),
+       o=st.sampled_from([16, 24, 64]),
+       L=st.integers(2, 8),
+       e=st.integers(1, 4),
+       r=st.integers(1, 12),
+       l=st.sampled_from([1, 2, 4, 8]),
+       p=st.integers(0, 4),
+       seed=st.integers(0, 5))
+def test_geometry_and_routing_invariants(h, o, L, e, r, l, p, seed):
+    cfg = AdapterConfig(method="mos", equiv_rank=e, rank=r,
+                        shards_per_vector=l, private_rank=p, seed=seed)
+    spec = LinearTypeSpec("t", h, o, L)
+    g = resolve_geometry(cfg, spec)
+    # budget always equals LoRA-at-e exactly
+    assert g.trainable_params == L * e * (h + o)
+    # shard geometry consistent
+    assert g.l * g.shard_len_a == h and g.l * g.shard_len_b == o
+    assert 0 <= g.p <= min(g.r, e)
+    ia, ib = build_index_matrices(cfg, g, seed=seed)
+    assert ia.min() >= 0 and ia.max() < g.n_shards
+    assert ib.min() >= 0 and ib.max() < g.n_shards
+    assert validate_privatization(ia, g)
+    assert validate_privatization(ib, g)
+    # state count always matches the closed form
+    plan = make_plan(cfg, [spec])
+    stt = init_state(plan, jax.random.key(0))
+    assert count_from_state(stt) == param_count(plan)["total"]
+
+
+@SET
+@given(L=st.integers(2, 16), e=st.integers(1, 4), r=st.integers(1, 8),
+       l=st.sampled_from([2, 4, 8]))
+def test_diversity_ordering_appendix_b1(L, e, r, l):
+    """Paper App. B.1: pure < subset ≤ dissociated ≤ sharded (strict when
+    r < Le and l > 1)."""
+    if r >= L * e:
+        return
+    pure = diversity(L, e, r, subset=False)
+    subset = diversity(L, e, r, l=1, dissociated=False)
+    dis = diversity(L, e, r, l=1, dissociated=True)
+    sharded = diversity(L, e, r, l=l, dissociated=True)
+    assert pure == 1
+    assert subset > pure
+    assert dis == subset ** 2 >= subset
+    assert sharded > dis
+
+
+@SET
+@given(arr=st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                    min_size=1, max_size=64),
+       scale=st.floats(1e-3, 10.0))
+def test_int8_quantization_error_bound(arr, scale):
+    g = jnp.asarray(np.array(arr, np.float32) * scale)
+    q, s = quantize_int8(g)
+    err = jnp.abs(dequantize_int8(q, s) - g)
+    # symmetric int8: |err| <= scale/2 with scale = max|g|/127
+    bound = float(jnp.max(jnp.abs(g))) / 127.0 * 0.5 + 1e-6
+    assert float(jnp.max(err)) <= bound
+    assert q.dtype == jnp.int8
+
+
+@SET
+@given(steps=st.integers(1, 4), seed=st.integers(0, 100))
+def test_error_feedback_compensates(steps, seed):
+    """Repeatedly quantizing the SAME gradient with error feedback must sum
+    to ~the true accumulated gradient (bias-free compression)."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=32).astype(np.float32))
+    e = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    for _ in range(steps * 4):
+        q, s = quantize_int8(g + e)
+        sent = dequantize_int8(q, s)
+        e = (g + e) - sent
+        acc = acc + sent
+    total_err = float(jnp.max(jnp.abs(acc - g * steps * 4)))
+    # residual is bounded by one quantization step, not growing with time
+    assert total_err <= float(jnp.max(jnp.abs(g))) / 127.0 + 1e-5
+
+
+@SET
+@given(n=st.integers(2, 40), s=st.sampled_from([8, 16]),
+       r=st.integers(1, 6), l=st.sampled_from([1, 2, 4]),
+       seed=st.integers(0, 50))
+def test_kernel_matches_oracle_property(n, s, r, l, seed):
+    from repro.kernels.mos_gather.ops import materialize, materialize_ref
+    pool = jax.random.normal(jax.random.key(seed), (n, s))
+    idx = jax.random.randint(jax.random.key(seed + 1), (r, l), 0, n)
+    np.testing.assert_allclose(materialize(pool, idx),
+                               materialize_ref(pool, idx))
+
+
+@SET
+@given(n=st.integers(1, 500), E=st.integers(1, 16),
+       chunk=st.sampled_from([32, 128, 256]), seed=st.integers(0, 20))
+def test_moe_chunked_positions_match_flat_cumsum(n, E, chunk, seed):
+    """The chunked dispatch ranking (§Perf Cell D) is exactly the flat
+    one-hot cumsum it replaces."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models.moe import _running_positions
+    fe = jax.random.randint(jax.random.key(seed), (n,), 0, E)
+    oh = jax.nn.one_hot(fe, E, dtype=jnp.int32)
+    ref = jnp.sum((jnp.cumsum(oh, axis=0) - 1) * oh, axis=-1)
+    got = _running_positions(fe, E, chunk=chunk)
+    assert (np.asarray(ref) == np.asarray(got)).all()
+
+
+@SET
+@given(seed=st.integers(0, 30), steps=st.integers(1, 3))
+def test_checkpoint_roundtrip_property(tmp_path_factory, seed, steps):
+    from repro.checkpoint import load, save
+    rng = np.random.default_rng(seed)
+    t = {"a": jnp.asarray(rng.normal(size=(3, 4)).astype(np.float32)),
+         "b": {"c": jnp.asarray(rng.integers(0, 10, size=5))}}
+    p = tmp_path_factory.mktemp("ck") / f"s{seed}"
+    save(p, t, {"seed": seed})
+    out, meta = load(p, like=t)
+    assert meta["seed"] == seed
+    for k1, v1 in zip(jax.tree.leaves(out), jax.tree.leaves(t)):
+        np.testing.assert_array_equal(np.asarray(k1), np.asarray(v1))
