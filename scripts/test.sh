@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Test lanes.
+#   scripts/test.sh        — fast lane: skip the slow interpret-mode kernel
+#                            sweeps (developer inner loop)
+#   scripts/test.sh tier1  — the canonical tier-1 command (ROADMAP.md)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-fast}" == "tier1" ]]; then
+    exec python -m pytest -x -q
+fi
+exec python -m pytest -q -m "not slow"

@@ -36,8 +36,10 @@ from .types import AdapterConfig, LinearTypeSpec, PoolGeometry
 
 # keys with a leading L (n_instances) dimension, per method
 PER_LAYER_KEYS = {
-    "mos": {"static": ("idx_a", "idx_b", "scale")},
-    "pure": {"static": ("idx_a", "idx_b", "scale")},
+    # mt_a/mt_b are the serving-time tenant-stack materialization cache
+    # (serving/multi_tenant.stack_tenants); absent from training states
+    "mos": {"static": ("idx_a", "idx_b", "scale", "mt_a", "mt_b")},
+    "pure": {"static": ("idx_a", "idx_b", "scale", "mt_a", "mt_b")},
     "lora": {"trainable": ("a", "b")},
     "vera": {"trainable": ("d", "bvec")},
     "tied_lora": {"trainable": ("u", "v")},

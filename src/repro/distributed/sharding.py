@@ -102,6 +102,19 @@ DEFAULT_RULES: Dict[str, Any] = {
 }
 
 
+def abstract_mesh(shape: Sequence[int], names: Sequence[str]):
+    """Version-portable ``jax.sharding.AbstractMesh`` constructor.
+
+    jax ≤ 0.4.x takes one tuple of (name, size) pairs; newer releases take
+    (sizes, names) positionally.  Rule/spec construction only needs
+    ``axis_names``, which both spellings provide.
+    """
+    try:
+        return jax.sharding.AbstractMesh(tuple(zip(names, shape)))
+    except (TypeError, ValueError):
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(names))
+
+
 def make_rules(mesh: Mesh, overrides: Optional[Dict[str, Any]] = None) -> AxisRules:
     rules = dict(DEFAULT_RULES)
     flags = {}

@@ -1,6 +1,9 @@
 """Pallas TPU kernels for the perf-critical ops (validated interpret=True).
 
-mos_gather       — shard-pool gather+concat materialization (the paper's op)
-bgmv             — multi-tenant batched LoRA apply (Punica BGMV, TPU form)
+mos_gather       — shard-pool gather+concat materialization (the paper's op),
+                   single-instance and batched (tenant-stack) forms
+bgmv             — multi-tenant batched LoRA apply (Punica BGMV, TPU form);
+                   *_mos variants read the MoS shard pools directly via
+                   double scalar-prefetch indirection (docs/serving.md)
 flash_attention  — blockwise causal attention with exact tile skipping
 """

@@ -63,6 +63,124 @@ def _expand_kernel(ids_ref, u_ref, b_ref, y_ref):
                           ).astype(y_ref.dtype)
 
 
+# ---------------------------------------------------------------------------
+# pool-resident MoS variants: double scalar-prefetch indirection
+# ---------------------------------------------------------------------------
+#
+# The plain kernels above need a materialized (T, r, h)/(T, r, o) adapter
+# stack.  For MoS that stack is itself a gather from the (T, n, s) shard
+# pools — materializing it per decode step re-pays the full O(T·r·(h+o))
+# traffic the paper's shared pools exist to avoid.  The *_mos kernels fuse
+# the shard gather into the BGMV DMA: two scalar-prefetch operands compose
+# in the BlockSpec index_map — ``ids_ref[b]`` picks the request's tenant
+# slab, ``idx_ref[i·l+j]`` picks the frozen pool row — so shrink/expand
+# stream (1, s) shards straight from the pools and no materialized A/B ever
+# exists.  Per-step adapter traffic is the B active requests' shards only.
+#
+# Grid layout: the shard dim is innermost-arbitrary so the (1, ·) output
+# block is revisited across consecutive steps and accumulates in VMEM.
+
+
+def _shrink_mos_kernel(ids_ref, idx_ref, x_ref, pool_ref, u_ref, acc_ref):
+    # x (1, s) shard-slice of the request row, pool (1, 1, s) → u (1, 1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0, :].astype(jnp.float32)
+    a = pool_ref[0, 0, :].astype(jnp.float32)
+    acc_ref[0] += jnp.sum(a * x)
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finalize():
+        u_ref[0, 0] = acc_ref[0].astype(u_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bgmv_shrink_mos(x, a_pool, ids, idx_a, interpret: bool = True):
+    """x (B, h), a_pool (T, n, s), ids (B,), idx_a (r, l) → u (B, r).
+
+    u[b, i] = Σ_j pool[ids[b], idx_a[i, j]] · x[b, j·s:(j+1)·s] — the MoS
+    row materialization fused into the shrink mat-vec (l·s == h).
+    """
+    B, h = x.shape
+    T, n, s = a_pool.shape
+    r, l = idx_a.shape
+    assert l * s == h, (l, s, h)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, r, l),
+        in_specs=[
+            pl.BlockSpec((1, s), lambda b, i, j, ids_ref, idx_ref: (b, j)),
+            pl.BlockSpec(
+                (1, 1, s),
+                lambda b, i, j, ids_ref, idx_ref:
+                    (ids_ref[b], idx_ref[i * l + j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, i, j, ids_ref, idx_ref:
+                               (b, i)),
+        scratch_shapes=[pltpu.VMEM((1,), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _shrink_mos_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, r), x.dtype),
+        interpret=interpret,
+    )(ids, idx_a.reshape(-1), x, a_pool)
+
+
+def _expand_mos_kernel(ids_ref, idx_ref, u_ref, pool_ref, y_ref, acc_ref):
+    # u (1, 1) rank coefficient, pool (1, 1, s) shard → y (1, s)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    u = u_ref[0, 0].astype(jnp.float32)
+    b = pool_ref[0, 0, :].astype(jnp.float32)
+    acc_ref[...] += u * b
+
+    @pl.when(i == pl.num_programs(2) - 1)
+    def _finalize():
+        y_ref[0, :] = acc_ref[...].astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bgmv_expand_mos(u, b_pool, ids, idx_b, interpret: bool = True):
+    """u (B, r), b_pool (T, n, s), ids (B,), idx_b (r, l) → y (B, l·s).
+
+    y[b, j·s:(j+1)·s] = Σ_i u[b, i] · pool[ids[b], idx_b[i, j]] — the MoS
+    column materialization fused into the expand outer-product.
+    """
+    B, r = u.shape
+    T, n, s = b_pool.shape
+    r2, l = idx_b.shape
+    assert r2 == r, (r2, r)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, l, r),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, j, i, ids_ref, idx_ref: (b, i)),
+            pl.BlockSpec(
+                (1, 1, s),
+                lambda b, j, i, ids_ref, idx_ref:
+                    (ids_ref[b], idx_ref[i * l + j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s), lambda b, j, i, ids_ref, idx_ref:
+                               (b, j)),
+        scratch_shapes=[pltpu.VMEM((s,), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _expand_mos_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, l * s), u.dtype),
+        interpret=interpret,
+    )(ids, idx_b.reshape(-1), u, b_pool)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "o_tile"))
 def bgmv_expand(u, b_stack, ids, interpret: bool = True, o_tile: int = 512):
     """u (B, r), b_stack (T, r, o), ids (B,) → (B, o)."""

@@ -1,4 +1,10 @@
-"""Jit wrapper for BGMV: full per-request LoRA delta (shrink → expand)."""
+"""Jit wrappers for BGMV: full per-request LoRA delta (shrink → expand).
+
+``bgmv`` applies a materialized (T, r, h)/(T, r, o) adapter stack;
+``bgmv_mos`` is the pool-resident form — it reads the (T, n, s) MoS shard
+pools directly through the double-indirect kernels and never materializes
+the per-tenant matrices.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,8 +12,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import bgmv_expand, bgmv_shrink
-from .ref import bgmv_expand_ref, bgmv_ref, bgmv_shrink_ref
+from .kernel import (bgmv_expand, bgmv_expand_mos, bgmv_shrink,
+                     bgmv_shrink_mos)
+from .ref import (bgmv_expand_mos_ref, bgmv_expand_ref, bgmv_mos_ref,
+                  bgmv_ref, bgmv_shrink_mos_ref, bgmv_shrink_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "scale"))
@@ -19,5 +27,21 @@ def bgmv(x, a_stack, b_stack, ids, scale: float = 1.0,
     return y * jnp.asarray(scale, y.dtype)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret", "scale"))
+def bgmv_mos(x, a_pool, b_pool, ids, idx_a, idx_b, scale: float = 1.0,
+             interpret: bool = True):
+    """Pool-resident per-request MoS delta.
+
+    x (B, h), a_pool/b_pool (T, n, s_a)/(T, n, s_b), ids (B,), idx (r, l):
+    y_b = scale · (x_b A[id_b]ᵀ) B[id_b] where A/B rows are gathered from
+    the shard pools inside the kernel DMA (never materialized in HBM).
+    """
+    u = bgmv_shrink_mos(x, a_pool, ids, idx_a, interpret=interpret)
+    y = bgmv_expand_mos(u, b_pool, ids, idx_b, interpret=interpret)
+    return y * jnp.asarray(scale, y.dtype)
+
+
 __all__ = ["bgmv", "bgmv_shrink", "bgmv_expand",
-           "bgmv_ref", "bgmv_shrink_ref", "bgmv_expand_ref"]
+           "bgmv_mos", "bgmv_shrink_mos", "bgmv_expand_mos",
+           "bgmv_ref", "bgmv_shrink_ref", "bgmv_expand_ref",
+           "bgmv_mos_ref", "bgmv_shrink_mos_ref", "bgmv_expand_mos_ref"]

@@ -20,3 +20,20 @@ def bgmv_expand_ref(u, b_stack, ids):
 def bgmv_ref(x, a_stack, b_stack, ids, scale: float = 1.0):
     return bgmv_expand_ref(bgmv_shrink_ref(x, a_stack, ids),
                            b_stack, ids) * scale
+
+
+def bgmv_shrink_mos_ref(x, a_pool, ids, idx_a):
+    """Pool-resident shrink oracle: materialize-then-BGMV."""
+    from ..mos_gather.ref import materialize_tenant_stack_ref
+    return bgmv_shrink_ref(x, materialize_tenant_stack_ref(a_pool, idx_a), ids)
+
+
+def bgmv_expand_mos_ref(u, b_pool, ids, idx_b):
+    """Pool-resident expand oracle: materialize-then-BGMV."""
+    from ..mos_gather.ref import materialize_tenant_stack_ref
+    return bgmv_expand_ref(u, materialize_tenant_stack_ref(b_pool, idx_b), ids)
+
+
+def bgmv_mos_ref(x, a_pool, b_pool, ids, idx_a, idx_b, scale: float = 1.0):
+    u = bgmv_shrink_mos_ref(x, a_pool, ids, idx_a)
+    return bgmv_expand_mos_ref(u, b_pool, ids, idx_b) * scale

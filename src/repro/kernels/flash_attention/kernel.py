@@ -22,6 +22,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+# jax ≤ 0.4.x exposes TPUCompilerParams; newer releases renamed it
+_CompilerParams = getattr(pltpu, "TPUCompilerParams", None) or \
+    getattr(pltpu, "CompilerParams")
+
 
 def _live_pred(q_start, k_start, bq, bk, causal, window):
     live = jnp.bool_(True)
@@ -109,7 +113,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, vf)

@@ -54,3 +54,40 @@ def materialize_pallas(pool: jax.Array, idx: jax.Array,
         interpret=interpret,
     )(flat_idx, pool)
     return out
+
+
+def _copy_stack_kernel(idx_ref, pools_ref, out_ref):
+    # pools_ref block: the (1, 1, s) shard of one tenant slab; write-through.
+    out_ref[...] = pools_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def materialize_stack_pallas(pools: jax.Array, idx: jax.Array,
+                             interpret: bool = True) -> jax.Array:
+    """pools (T, n, s), idx (R, l) → (T, R, l*s), via pl.pallas_call.
+
+    Batched form of :func:`materialize_pallas` over a leading tenant (or
+    instance) dim — one shared index matrix, T pool slabs.  This is the
+    multi-tenant *prefill* path: all T tenants' rows stream out of the pools
+    in a single kernel launch instead of T separate gathers.
+    """
+    T, n, s = pools.shape
+    R, l = idx.shape
+    flat_idx = idx.reshape(-1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T, R, l),
+        in_specs=[
+            pl.BlockSpec((1, 1, s),
+                         lambda t, i, j, idx_ref: (t, idx_ref[i * l + j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, s), lambda t, i, j, idx_ref: (t, i, j)),
+    )
+    out = pl.pallas_call(
+        _copy_stack_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, R, l * s), pools.dtype),
+        interpret=interpret,
+    )(flat_idx, pools)
+    return out

@@ -11,8 +11,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import materialize_pallas
-from .ref import materialize_ref
+from .kernel import materialize_pallas, materialize_stack_pallas
+from .ref import materialize_ref, materialize_tenant_stack_ref
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
@@ -34,4 +34,15 @@ def _bwd(interpret, res, g):
 
 materialize.defvjp(_fwd, _bwd)
 
-__all__ = ["materialize", "materialize_ref"]
+
+def materialize_tenant_stack(pools, idx, interpret: bool = True):
+    """Batched (serving-time) materialization: (T, n, s) × (R, l) → (T, R, l·s).
+
+    Forward-only — the multi-tenant prefill path never differentiates
+    through the stacked pools.
+    """
+    return materialize_stack_pallas(pools, idx, interpret=interpret)
+
+
+__all__ = ["materialize", "materialize_ref",
+           "materialize_tenant_stack", "materialize_tenant_stack_ref"]

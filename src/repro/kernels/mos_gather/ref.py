@@ -12,3 +12,10 @@ def materialize_ref(pool: jax.Array, idx: jax.Array) -> jax.Array:
     """
     r = idx.shape[0]
     return jnp.take(pool, idx.reshape(-1), axis=0).reshape(r, -1)
+
+
+def materialize_tenant_stack_ref(pools: jax.Array, idx: jax.Array) -> jax.Array:
+    """pools (T, n, s), idx (R, l) int32 → (T, R, l*s)."""
+    T = pools.shape[0]
+    R = idx.shape[0]
+    return jnp.take(pools, idx.reshape(-1), axis=1).reshape(T, R, -1)

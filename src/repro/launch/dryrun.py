@@ -270,7 +270,9 @@ def lower_cell(arch: str, shape_name: str, rules, *, tenants: int = 8,
             T = tenants
             ad_tr_mt = jax.tree.map(
                 lambda a: jax.ShapeDtypeStruct((T,) + a.shape, a.dtype), ad_tr)
-            serve = make_serve_step(model, tenants=T)
+            # jnp backend: the lowered decode cells must stay the BGMV
+            # einsum program, not interpret-mode Pallas emulation
+            serve = make_serve_step(model, tenants=T, backend="jnp")
             jitted = jax.jit(serve,
                              in_shardings=(p_sh, {"trainable": rep,
                                                   "static": rep},

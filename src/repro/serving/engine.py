@@ -4,6 +4,17 @@ scheduler for multi-tenant adapter serving.
 The jitted steps are what the decode_* dry-run cells lower; the python-side
 ``ServingEngine`` drives them for the runnable examples (admission, slot
 reuse, per-request positions, greedy sampling).
+
+Perf structure (docs/serving.md):
+  * ``backend="fused"`` (default) applies adapters through the
+    pool-resident Pallas BGMV kernels; ``"jnp"`` is the reference path.
+  * admission is **batched**: all queued requests with the same prompt
+    length prefill in ONE jitted call, then scatter into their decode
+    slots — instead of one jitted prefill per request.
+  * the decode-step cache argument is **donated**, so the (slots, ring)
+    KV/SSM buffers are reused in place across ticks instead of
+    reallocating per step.  (On backends without donation support XLA
+    falls back to a copy and warns — semantics are unchanged.)
 """
 from __future__ import annotations
 
@@ -17,13 +28,16 @@ import numpy as np
 from .multi_tenant import make_mt_factory, stack_tenants
 
 
-def make_serve_step(model, tenants: int = 0):
+def make_serve_step(model, tenants: int = 0, backend: str = "fused",
+                    interpret: bool = True):
     """One decode step.  tenants > 0 → multi-tenant BGMV application with
-    per-request ``adapter_ids``; otherwise single-adapter decode."""
+    per-request ``adapter_ids``; otherwise single-adapter decode.
+    ``interpret=False`` compiles the fused Pallas kernels (real TPU)."""
 
     if tenants > 0:
         def serve_step(params, ad_stack, tokens, adapter_ids, cache):
-            fac = make_mt_factory(adapter_ids)
+            fac = make_mt_factory(adapter_ids, backend=backend,
+                                  interpret=interpret)
             new_cache, h = model.decode_step(params, ad_stack, tokens, cache,
                                              hooks_factory=fac)
             logits = model.logits(params, h)[:, 0]
@@ -37,10 +51,12 @@ def make_serve_step(model, tenants: int = 0):
     return serve_step
 
 
-def make_prefill_step(model, tenants: int = 0):
+def make_prefill_step(model, tenants: int = 0, backend: str = "fused",
+                      interpret: bool = True):
     if tenants > 0:
         def prefill_step(params, ad_stack, batch, adapter_ids, cache):
-            fac = make_mt_factory(adapter_ids)
+            fac = make_mt_factory(adapter_ids, backend=backend,
+                                  interpret=interpret)
             new_cache, h = model.prefill(params, ad_stack, batch, cache,
                                          hooks_factory=fac)
             logits = model.logits(params, h)[:, 0]
@@ -69,40 +85,56 @@ def batch_dim_of(leaf_name: str) -> int:
     return 0 if leaf_name in ("pos", "kvpos") else 1
 
 
-def insert_slot(batch_cache, single_cache, slot: int):
-    """Copy a (B=1) prefilled request cache into slot ``slot`` of the batch
-    cache — the standard prefill→decode-batch handoff of a serving engine."""
+def insert_slot(batch_cache, src_cache, slot: int, src: int = 0):
+    """Copy row ``src`` of a prefilled request-batch cache into slot ``slot``
+    of the decode batch cache — the prefill→decode-batch handoff of a
+    serving engine.  ``src_cache`` may hold any number of requests."""
 
     def one(path, b, s):
         name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
         dim = batch_dim_of(name)
         idx = [slice(None)] * b.ndim
         idx[dim] = slot
-        src = jnp.squeeze(s, axis=dim) if s.shape[dim] == 1 else s
-        return b.at[tuple(idx)].set(src.astype(b.dtype))
+        row = jax.lax.index_in_dim(s, src, axis=dim, keepdims=False)
+        return b.at[tuple(idx)].set(row.astype(b.dtype))
 
-    return jax.tree_util.tree_map_with_path(one, batch_cache, single_cache)
+    return jax.tree_util.tree_map_with_path(one, batch_cache, src_cache)
 
 
 class ServingEngine:
     """Continuous-batching engine over the jitted steps.
 
-    Static decode batch of ``slots``.  Admission = single-request prefill
-    (its own jitted step) + ``insert_slot`` into the decode batch; finished
-    requests free their slot immediately.  Empty slots still run (their
-    writes land in slots that are fully overwritten on the next admission),
-    which keeps the decode step shape-static — the same trade production
-    engines make.
+    Static decode batch of ``slots``.  Admission = one multi-request prefill
+    per distinct prompt length (its own jitted step, shape-cached across
+    admissions) + ``insert_slot`` into the decode batch; finished requests
+    free their slot immediately.  Empty slots still run (their writes land
+    in slots that are fully overwritten on the next admission), which keeps
+    the decode step shape-static — the same trade production engines make.
     """
 
     def __init__(self, model, params, tenant_states: Sequence[Any],
-                 slots: int = 4, max_len: int = 128):
+                 slots: int = 4, max_len: int = 128,
+                 backend: str = "fused", interpret: bool = True,
+                 stack_cache: bool = True):
         self.model, self.params = model, params
         self.tenants = len(tenant_states)
-        self.ad_stack = stack_tenants(model.plan, tenant_states)
+        self.backend = backend
+        # stack_cache=False skips the (L, T, r, ·) mt_a/mt_b cache — for
+        # tenant counts where its footprint matters more than prefill
+        # speed (fused decode never reads it; prefill falls back to the
+        # per-call gather)
+        self.ad_stack = stack_tenants(model.plan, tenant_states,
+                                      with_cache=stack_cache,
+                                      interpret=interpret)
         self.slots, self.max_len = slots, max_len
-        self.serve = jax.jit(make_serve_step(model, tenants=self.tenants))
-        self.prefill = jax.jit(make_prefill_step(model, tenants=self.tenants))
+        # cache (arg 4) is donated: decode buffers are reused across ticks
+        self.serve = jax.jit(
+            make_serve_step(model, tenants=self.tenants, backend=backend,
+                            interpret=interpret),
+            donate_argnums=(4,))
+        self.prefill = jax.jit(
+            make_prefill_step(model, tenants=self.tenants, backend=backend,
+                              interpret=interpret))
         self._queue: List[Request] = []
         self._active: List[Optional[Request]] = [None] * slots
         self.cache = model.init_cache(slots, max_len)
@@ -114,19 +146,34 @@ class ServingEngine:
         self._queue.append(req)
 
     def _admit(self):
-        for i in range(self.slots):
-            if self._active[i] is None and self._queue:
-                req = self._queue.pop(0)
-                self._active[i] = req
-                self.adapter_ids[i] = req.adapter_id
-                single = self.model.init_cache(1, self.max_len)
-                ids1 = jnp.asarray([req.adapter_id], jnp.int32)
-                single, logits = self.prefill(
-                    self.params, self.ad_stack,
-                    {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)},
-                    ids1, single)
-                self.cache = insert_slot(self.cache, single, i)
-                self._pending[i] = int(jnp.argmax(logits[0]))
+        """Admit queued requests into free slots with batched prefill.
+
+        All admissible requests sharing a prompt length go through ONE
+        jitted prefill call (requests are rows of the batch); each row is
+        then scattered into its decode slot.
+        """
+        free = [i for i in range(self.slots) if self._active[i] is None]
+        take = min(len(free), len(self._queue))
+        if take == 0:
+            return
+        admitted = list(zip(free[:take],
+                            [self._queue.pop(0) for _ in range(take)]))
+        by_len: Dict[int, List] = {}
+        for slot, req in admitted:
+            by_len.setdefault(len(req.prompt), []).append((slot, req))
+        for S, group in by_len.items():
+            toks = np.stack([req.prompt for _, req in group]).astype(np.int32)
+            ids = jnp.asarray([req.adapter_id for _, req in group], jnp.int32)
+            group_cache = self.model.init_cache(len(group), self.max_len)
+            group_cache, logits = self.prefill(
+                self.params, self.ad_stack,
+                {"tokens": jnp.asarray(toks)}, ids, group_cache)
+            first = np.asarray(jnp.argmax(logits, axis=-1))
+            for j, (slot, req) in enumerate(group):
+                self._active[slot] = req
+                self.adapter_ids[slot] = req.adapter_id
+                self.cache = insert_slot(self.cache, group_cache, slot, src=j)
+                self._pending[slot] = int(first[j])
 
     def step(self):
         """One engine tick: admit, then decode one token per active slot."""

@@ -1,17 +1,22 @@
 """Multi-tenant adapter serving — the paper's headline scenario (§1:
 thousands of per-user customizations served concurrently).
 
-Design decisions (DESIGN.md §3):
+Design decisions (DESIGN.md §3, docs/serving.md):
   * tenants share the *routing plan* (index matrices); only pools differ.
-    One gather materializes all T tenants' (A, B) per layer, so serving cost
-    is O(T·r·(h+o)) memory and one batched gather — the MoS advantage: a
-    tenant costs e/r of a LoRA tenant in transfer/storage.
-  * per-request application is BGMV (Punica-style): gather each request's
-    (A, B) by adapter id and apply two small einsums.  The Pallas kernel in
-    ``repro.kernels.bgmv`` fuses this on TPU; this module is the jnp form.
-
-``stack_tenants`` stacks T adapter states tenant-major for shared keys and
-layer-major for per-layer keys, so the model's scan slicing stays unchanged.
+    ``stack_tenants`` stacks T adapter states tenant-major for shared keys
+    and layer-major for per-layer keys, so the model's scan slicing stays
+    unchanged — and materializes the **tenant-stack cache** (``mt_a``/
+    ``mt_b`` per-layer leaves) ONCE, so no per-layer-call pool gather ever
+    runs on the serving path.
+  * per-request application is BGMV (Punica-style).  Two backends:
+      - ``"fused"`` (default): decode reads the (T, n, s) shard pools
+        directly through the pool-resident Pallas kernels
+        (``repro.kernels.bgmv.bgmv_mos``) — double scalar-prefetch
+        indirection, no materialized A/B, per-step adapter traffic is the
+        B active requests' shards only.  Prefill (S > 1) applies the
+        precomputed tenant-stack cache with batched einsums.
+      - ``"jnp"``: the pure-jnp reference — same math over the hoisted
+        tenant-stack cache.  Kept as oracle and CPU fallback.
 """
 from __future__ import annotations
 
@@ -22,16 +27,27 @@ import jax.numpy as jnp
 
 from ..core import adapters as ad
 from ..core.adapters import PER_LAYER_KEYS
+from ..kernels.bgmv.ops import bgmv_mos
+from ..kernels.mos_gather.ops import materialize_tenant_stack
 from ..models.transformer import Hooks
 
 
-def stack_tenants(plan: ad.AdapterPlan, states: Sequence[Any]):
+def stack_tenants(plan: ad.AdapterPlan, states: Sequence[Any],
+                  with_cache: bool = True, interpret: bool = True):
     """Stack T adapter states → one multi-tenant state.
 
     Shared (pool) leaves: (T, ...) on axis 0.  Per-layer leaves: (L, T, ...)
     — tenant axis *after* the layer axis so scan xs reshaping still sees L
     leading.  Static (indices) must be identical across tenants (shared
     routing plan) — asserted, and taken from tenant 0.
+
+    ``with_cache`` (default) additionally materializes every tenant's
+    per-layer (A, B) from the stacked pools ONCE — via the batched Pallas
+    gather ``materialize_tenant_stack`` — and stores them as per-layer static
+    leaves ``mt_a`` (L, T, r, h) / ``mt_b`` (L, T, r, o).  This is the
+    tenant-stack materialization cache: the jnp serving backend and the
+    fused prefill path read it instead of re-gathering pools per layer
+    call.
     """
     keys = PER_LAYER_KEYS[plan.method]
     per_layer = set(keys.get("trainable", ()))
@@ -44,13 +60,35 @@ def stack_tenants(plan: ad.AdapterPlan, states: Sequence[Any]):
             axis = 1 if k in per_layer else 0
             out_tr[tname][k] = jnp.stack(vals, axis=axis)
     import numpy as np
+    out_st: Dict[str, Any] = {}
     for tname, leaves in t0["static"].items():
         for k in leaves:
             for s in states[1:]:
                 assert (np.asarray(s["static"][tname][k]) ==
                         np.asarray(leaves[k])).all(), \
                     "multi-tenant serving requires a shared routing plan"
-    return {"trainable": out_tr, "static": t0["static"]}
+        out_st[tname] = dict(leaves)
+    if with_cache and plan.method in ("mos", "pure"):
+        for tname, st in out_st.items():
+            tr = out_tr[tname]
+            st["mt_a"] = _materialize_tenant_stack(
+                tr["a_pool"], st["idx_a"], interpret)
+            st["mt_b"] = _materialize_tenant_stack(
+                tr["b_pool"], st["idx_b"], interpret)
+    return {"trainable": out_tr, "static": out_st}
+
+
+def _materialize_tenant_stack(pools, idx, interpret: bool):
+    """pools (T, n, s), idx (L, r, l) → (L, T, r, l·s) hoisted cache.
+
+    The gather is row-independent, so the L per-layer index matrices
+    flatten into one (L·r, l) batched-kernel launch.
+    """
+    T = pools.shape[0]
+    L, r, l = idx.shape
+    flat = materialize_tenant_stack(pools, idx.reshape(L * r, l),
+                                    interpret=interpret)  # (T, L·r, l·s)
+    return flat.reshape(T, L, r, -1).transpose(1, 0, 2, 3)
 
 
 class MTHooks(Hooks):
@@ -58,19 +96,32 @@ class MTHooks(Hooks):
 
     x: (B, S, h); adapter_ids: (B,) into the tenant dim of the stacked
     state.  Supports mos/pure (pools (T, n, s)) and lora ((T, r, h) slices).
+
+    ``backend="fused"`` routes decode-shaped calls (one row per request)
+    for mos/pure through the pool-resident Pallas kernels; everything else
+    — prefill, lora, the mamba factored path — applies the hoisted
+    tenant-stack cache with jnp einsums.  Neither path gathers from the
+    pools per layer call.
     """
 
-    def __init__(self, plan, shared, node, type_prefix, adapter_ids):
+    def __init__(self, plan, shared, node, type_prefix, adapter_ids,
+                 backend: str = "jnp", interpret: bool = True):
         super().__init__(plan, shared, node, type_prefix)
         self.ids = adapter_ids
+        self.backend = backend
+        self.interpret = interpret
 
     def _ab(self, name):
         cfg = self.plan.cfg
         m = cfg.method
         if m in ("mos", "pure"):
-            tr = self.shared["trainable"][name]
             st = self.node["static"][name]
             r = self.plan.geoms[name].r
+            if "mt_a" in st:          # hoisted cache (stack_tenants)
+                return st["mt_a"], st["mt_b"], cfg.scaling(r)
+            # reference fallback (stack_tenants(with_cache=False)): gather
+            # this layer's rows from the pools — the seed's per-call path
+            tr = self.shared["trainable"][name]
             a_all = jnp.take(tr["a_pool"], st["idx_a"].reshape(-1), axis=1)
             a_all = a_all.reshape(tr["a_pool"].shape[0], r, -1)   # (T, r, h)
             b_all = jnp.take(tr["b_pool"], st["idx_b"].reshape(-1), axis=1)
@@ -83,15 +134,33 @@ class MTHooks(Hooks):
         raise NotImplementedError(
             f"multi-tenant serving not implemented for {m!r}")
 
+    def _fused_decode(self, name, x2):
+        """Pool-resident BGMV: x2 (B, h) → (B, o), no materialized A/B."""
+        cfg = self.plan.cfg
+        tr = self.shared["trainable"][name]
+        st = self.node["static"][name]
+        r = self.plan.geoms[name].r
+        y = bgmv_mos(x2, tr["a_pool"], tr["b_pool"], self.ids,
+                     st["idx_a"], st["idx_b"],
+                     scale=cfg.scaling(r), interpret=self.interpret)
+        return y.astype(x2.dtype)
+
     def __call__(self, local: str, x):
         if self.plan.method == "none":
             return jnp.zeros(x.shape[:-1] + (self.plan.spec(self.tp + local).o,),
                              x.dtype)
-        a_all, b_all, scale = self._ab(self.tp + local)
-        a_req = jnp.take(a_all, self.ids, axis=0)      # (B, r, h)
-        b_req = jnp.take(b_all, self.ids, axis=0)      # (B, r, o)
+        name = self.tp + local
         squeeze = x.ndim == 2                          # flattened (B·S, h)
         xb = x[:, None] if squeeze else x              # decode: S == 1
+        B = self.ids.shape[0]
+        if (self.backend == "fused"
+                and self.plan.method in ("mos", "pure")
+                and xb.shape[0] == B and xb.shape[1] == 1):
+            y2 = self._fused_decode(name, xb[:, 0].astype(x.dtype))
+            return y2 if squeeze else y2[:, None]
+        a_all, b_all, scale = self._ab(name)
+        a_req = jnp.take(a_all, self.ids, axis=0)      # (B, r, h)
+        b_req = jnp.take(b_all, self.ids, axis=0)      # (B, r, o)
         u = jnp.einsum("bsh,brh->bsr", xb, a_req.astype(x.dtype))
         y = jnp.einsum("bsr,bro->bso", u, b_req.astype(x.dtype))
         y = y * jnp.asarray(scale, x.dtype)
@@ -124,7 +193,13 @@ class _PerRequestRows:
         return self.b[:, :, sl]
 
 
-def make_mt_factory(adapter_ids):
+def make_mt_factory(adapter_ids, backend: str = "jnp",
+                    interpret: bool = True):
+    """``interpret=False`` compiles the fused kernels for real TPUs;
+    the default runs them in Pallas interpret mode (CPU-correct)."""
+    assert backend in ("jnp", "fused"), f"unknown serving backend {backend!r}"
+
     def factory(plan, shared, node, tpfx):
-        return MTHooks(plan, shared, node, tpfx, adapter_ids)
+        return MTHooks(plan, shared, node, tpfx, adapter_ids,
+                       backend=backend, interpret=interpret)
     return factory

@@ -25,9 +25,8 @@ def run_sub(code: str) -> str:
 
 
 def test_rules_spec_mapping():
-    import jax
-    from repro.distributed.sharding import make_rules
-    mesh = jax.sharding.AbstractMesh((2, 4), ("data", "model"))
+    from repro.distributed.sharding import abstract_mesh, make_rules
+    mesh = abstract_mesh((2, 4), ("data", "model"))
     rules = make_rules(mesh)
     assert str(rules.spec_for(("ff", "embed"))) == \
         str(__import__("jax").sharding.PartitionSpec("model", "data"))

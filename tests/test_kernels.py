@@ -11,6 +11,7 @@ from repro.kernels.bgmv.ref import bgmv_shrink_ref, bgmv_expand_ref
 from repro.kernels.flash_attention.ops import attention_ref, flash_attention
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("n,s,r,l", [(16, 128, 4, 2), (64, 256, 8, 4),
                                      (128, 8, 16, 1), (32, 128, 2, 8)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -34,6 +35,7 @@ def test_mos_gather_grad_matches_ref():
                                rtol=1e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("B,h,o,r,T", [(4, 128, 256, 4, 2), (16, 512, 512, 8, 8),
                                        (8, 256, 1024, 16, 3)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -62,6 +64,7 @@ def test_bgmv_stages_match_refs():
     np.testing.assert_allclose(y, bgmv_expand_ref(u, b, ids), rtol=1e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("S,bq,bk", [(128, 64, 64), (256, 128, 64)])
 @pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 64)])
 def test_flash_attention_sweep(S, bq, bk, causal, window):
