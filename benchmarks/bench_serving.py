@@ -1,7 +1,12 @@
-"""Multi-tenant decode benchmark: jnp vs fused (pool-resident) backends.
+"""Multi-tenant decode benchmark: jnp vs fused (pool-resident) backends,
+dense-ring vs paged KV caches.
 
 Measures, for T tenants × B concurrent requests on the smoke model:
-  * decode tokens/sec and ms/step per serving backend;
+  * decode tokens/sec and ms/step per serving backend × cache layout
+    (``dense`` per-slot rings vs ``paged`` block-table page pool);
+  * resident KV-cache bytes per layout: dense preallocates
+    slots × max_len regardless of load, paged holds only the admitted
+    requests' pages (modelled at a reference in-flight length);
   * analytic per-step adapter gather traffic (bytes), distinguishing
       - ``seed_rematerialization``: the pre-PR-1 path — every layer call of
         every step re-gathers ALL T tenants' (r, h)/(r, o) matrices from
@@ -32,7 +37,12 @@ import numpy as np
 from repro.configs import get_config, smoke
 from repro.core import AdapterConfig
 from repro.models import Model
-from repro.serving import make_serve_step, stack_tenants
+from repro.models.transformer import arch_stacks, cache_seq_len
+from repro.serving import PagePool, make_serve_step, stack_tenants
+
+MAX_LEN = 32
+PAGE_SIZE = 8
+REF_INFLIGHT_LEN = 16      # modelled in-flight tokens for kv accounting
 
 ACFG = AdapterConfig(method="mos", equiv_rank=2, rank=4, shards_per_vector=2,
                      private_rank=1, dtype=jnp.float32)
@@ -59,10 +69,37 @@ def gather_bytes(model, static_state, T: int, B: int):
             "fused_pool_resident": fused}
 
 
+def kv_bytes(model, B: int) -> dict:
+    """Resident KV-cache bytes: dense per-slot rings vs pages actually held
+    for B requests in flight at REF_INFLIGHT_LEN tokens each."""
+    cfg = model.cfg
+    itemsize = np.dtype(cfg.dtype_jnp()).itemsize
+    per_tok = 0
+    for _, count, pattern in arch_stacks(cfg):
+        for spec in pattern:
+            if spec.mixer == "attn":
+                per_tok += count * 2 * cfg.padded_kv_heads * cfg.hd * itemsize
+    ring = cache_seq_len(cfg, MAX_LEN)
+    pages = -(-REF_INFLIGHT_LEN // PAGE_SIZE)
+    return {"dense_resident": B * ring * per_tok,
+            "paged_resident": B * pages * PAGE_SIZE * per_tok,
+            "per_token": per_tok,
+            "ref_inflight_len": REF_INFLIGHT_LEN}
+
+
 def bench_one(model, params, stack, T: int, B: int, backend: str,
-              steps: int, warmup: int = 2):
+              steps: int, warmup: int = 2, paged: bool = False):
     serve = jax.jit(make_serve_step(model, tenants=T, backend=backend))
-    cache = model.init_cache(B, 32)
+    if paged:
+        mp = -(-MAX_LEN // PAGE_SIZE)
+        pool = PagePool(num_pages=B * mp + 1, page_size=PAGE_SIZE,
+                        slots=B, max_pages_per_slot=mp)
+        for b in range(B):
+            pool.alloc(b, MAX_LEN)
+        cache = model.init_paged_cache(B, MAX_LEN, page_size=PAGE_SIZE)
+        cache["block_tables"] = jnp.asarray(pool.block_tables)
+    else:
+        cache = model.init_cache(B, MAX_LEN)
     ids = jnp.asarray(np.arange(B) % T, jnp.int32)
     toks = jnp.ones((B, 1), jnp.int32)
     for _ in range(warmup):
@@ -91,20 +128,27 @@ def main(fast: bool = False):
         stack = stack_tenants(model.plan, states)
         for B in batch_sweep:
             gb = gather_bytes(model, static_state, T=T, B=B)
+            kb = kv_bytes(model, B)
             for backend in ("jnp", "fused"):
-                r = bench_one(model, params, stack, T, B, backend,
-                              steps=steps)
-                rows.append({"T": T, "B": B, "backend": backend, **r,
-                             "gather_bytes_per_step": gb})
-                print(f"T={T:3d} B={B:3d} {backend:6s} "
-                      f"{r['ms_per_step']:9.2f} ms/step "
-                      f"{r['tokens_per_sec']:8.1f} tok/s  "
-                      f"seed={gb['seed_rematerialization']:>10d}B "
-                      f"fused={gb['fused_pool_resident']:>8d}B")
+                for cache_mode in ("dense", "paged"):
+                    r = bench_one(model, params, stack, T, B, backend,
+                                  steps=steps, paged=cache_mode == "paged")
+                    rows.append({"T": T, "B": B, "backend": backend,
+                                 "cache": cache_mode, **r,
+                                 "gather_bytes_per_step": gb,
+                                 "kv_bytes": kb,
+                                 "kv_resident_bytes":
+                                     kb[f"{cache_mode}_resident"]})
+                    print(f"T={T:3d} B={B:3d} {backend:6s} {cache_mode:5s} "
+                          f"{r['ms_per_step']:9.2f} ms/step "
+                          f"{r['tokens_per_sec']:8.1f} tok/s  "
+                          f"kv={kb[cache_mode + '_resident']:>8d}B "
+                          f"fused={gb['fused_pool_resident']:>8d}B")
     report = {
         "config": {"model": "granite-3-2b (smoke)", "adapter": "mos",
                    "equiv_rank": ACFG.equiv_rank, "rank": ACFG.rank,
                    "shards_per_vector": ACFG.shards_per_vector,
+                   "max_len": MAX_LEN, "page_size": PAGE_SIZE,
                    "decode_steps_timed": steps,
                    "note": ("Pallas kernels run in interpret mode off-TPU; "
                             "tokens/sec there reflects interpret overhead, "

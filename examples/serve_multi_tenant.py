@@ -3,7 +3,10 @@ many customized models served concurrently from one base.
 
 Trains two tiny MoS customizations (different tasks), then serves a mixed
 request stream through the continuous-batching engine: per-request adapter
-routing (BGMV), slot reuse, greedy decoding.
+routing (BGMV), paged KV cache (the default) with copy-free slot reuse,
+mixed-length single-call admission, greedy decoding.  Prompts here have
+*different lengths* on purpose — they all prefill in one left-padded call
+and each holds only the pages its tokens need.
 
 Run: PYTHONPATH=src python examples/serve_multi_tenant.py
 """
@@ -55,14 +58,23 @@ def main():
           f"({n * 4 / 1024:.1f} KiB/tenant at fp32)")
 
     eng = ServingEngine(model, params, [st_copy, st_sort], slots=4,
-                        max_len=64)
+                        max_len=64, page_size=8)   # paged=True is the default
+    total_pages = eng.pages.free_pages
     rng = np.random.default_rng(0)
     for i in range(6):
-        payload = rng.integers(10, 100, size=4).astype(np.int32)
+        payload = rng.integers(10, 100, size=int(rng.integers(2, 7))
+                               ).astype(np.int32)   # mixed prompt lengths
         prompt = np.concatenate([[USER], payload, [ASSISTANT]]).astype(np.int32)
         eng.submit(Request(rid=i, prompt=prompt, adapter_id=i % 2,
                            max_new=5))
+    eng.step()                                      # first tick admits
+    in_use = total_pages - eng.pages.free_pages
+    print(f"page pool: {in_use}/{total_pages} pages "
+          f"({eng.page_size} tokens each) in use after admission — "
+          f"a dense cache would hold {eng.slots} x {eng.max_len} tokens "
+          f"regardless of load")
     done = eng.run(max_ticks=64)
+    assert eng.pages.free_pages == total_pages      # all pages returned
     for r in sorted(done, key=lambda r: r.rid):
         tenant = ["copy", "sort"][r.adapter_id]
         print(f"req {r.rid} [tenant={tenant}] prompt={r.prompt[1:-1].tolist()}"

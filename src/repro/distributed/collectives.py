@@ -23,10 +23,23 @@ import jax
 import jax.numpy as jnp
 
 
+def _one_axis_size(a) -> int:
+    """Version-portable STATIC axis size inside shard_map bodies (it bounds
+    python loops, so it must be a concrete int, not ``psum(1, a)``).
+    ``jax.lax.axis_size`` is new; older jax answers from the core axis env
+    (same shim family as ``sharding.shard_map``)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(a)
+    from jax._src import core as jcore
+    if hasattr(jcore, "get_axis_env"):
+        return jcore.get_axis_env().axis_size(a)
+    return jcore.axis_frame(a).size
+
+
 def _axis_size(axis_names) -> int:
     n = 1
     for a in (axis_names if isinstance(axis_names, (tuple, list)) else [axis_names]):
-        n *= jax.lax.axis_size(a)
+        n *= _one_axis_size(a)
     return n
 
 
@@ -47,7 +60,7 @@ def ring_allreduce_quantized(q, scale, axis_name):
     Each hop forwards the int8 block it *received* (wire stays 1B/elem);
     accumulation is local fp32.  N-1 hops → every device holds the full sum.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = _one_axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     perm = [(i, (i + 1) % n) for i in range(n)]
     acc = dequantize_int8(q, scale)
@@ -89,5 +102,5 @@ def ring_allreduce_int8(grads, err_fb, axis_names):
 
 def psum_scatter_mean(x, axis_name):
     """Reduce-scatter + local mean — building block for sharded optimizers."""
-    n = jax.lax.axis_size(axis_name)
+    n = _one_axis_size(axis_name)
     return jax.lax.psum_scatter(x, axis_name, tiled=True) / n

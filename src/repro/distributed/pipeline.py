@@ -23,8 +23,9 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from .sharding import shard_map
 
 
 def pipeline_apply(

@@ -22,6 +22,27 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """Version-portable ``shard_map`` (same shim family as
+    :func:`abstract_mesh`).
+
+    Newer jax exposes ``jax.shard_map`` with a ``check_vma`` kwarg; older
+    releases have ``jax.experimental.shard_map.shard_map`` whose equivalent
+    kwarg is ``check_rep``.  Call sites always pass keywords, so only the
+    flag name needs translating.
+    """
+    try:
+        from jax import shard_map as sm
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
+    try:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    except TypeError:   # intermediate releases: jax.shard_map + check_rep
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)
+
+
 @dataclasses.dataclass(frozen=True)
 class AxisRules:
     rules: Dict[str, Any]

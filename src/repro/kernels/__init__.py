@@ -6,4 +6,7 @@ bgmv             — multi-tenant batched LoRA apply (Punica BGMV, TPU form);
                    *_mos variants read the MoS shard pools directly via
                    double scalar-prefetch indirection (docs/serving.md)
 flash_attention  — blockwise causal attention with exact tile skipping
+paged_attention  — decode attention over a block-table paged KV cache:
+                   scalar-prefetched page walk + page write/gather ops
+                   (docs/serving.md §Paged KV cache)
 """

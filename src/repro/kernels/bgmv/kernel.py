@@ -98,17 +98,38 @@ def _shrink_mos_kernel(ids_ref, idx_ref, x_ref, pool_ref, u_ref, acc_ref):
         u_ref[0, 0] = acc_ref[0].astype(u_ref.dtype)
 
 
+def _pad_lanes(s: int) -> int:
+    """Round a shard length up to the 128-lane TPU vector width."""
+    return -(-s // 128) * 128
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def bgmv_shrink_mos(x, a_pool, ids, idx_a, interpret: bool = True):
     """x (B, h), a_pool (T, n, s), ids (B,), idx_a (r, l) → u (B, r).
 
     u[b, i] = Σ_j pool[ids[b], idx_a[i, j]] · x[b, j·s:(j+1)·s] — the MoS
     row materialization fused into the shrink mat-vec (l·s == h).
+
+    Shard lengths that are not a multiple of 128 lanes run lane-padded so
+    every block DMA moves full vector registers; the padded tail
+    contributes exact zeros to the dot product.  Pass an ALREADY-padded
+    pool (``(T, n, pad128(s))``, e.g. the ``a_pool_lanes`` leaf built once
+    by ``stack_tenants``) to avoid re-padding the whole pool per call —
+    only the (B, h) activations are padded in-call then.
     """
     B, h = x.shape
-    T, n, s = a_pool.shape
+    T, n, s_pool = a_pool.shape
     r, l = idx_a.shape
+    s = h // l
     assert l * s == h, (l, s, h)
+    sp = _pad_lanes(s)
+    assert s_pool in (s, sp), (s_pool, s, sp)
+    if sp != s:
+        if s_pool == s:                  # fallback: pad the pool in-call
+            a_pool = jnp.pad(a_pool, ((0, 0), (0, 0), (0, sp - s)))
+        x = jnp.pad(x.reshape(B, l, s),
+                    ((0, 0), (0, 0), (0, sp - s))).reshape(B, l * sp)
+        s = sp
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, r, l),
@@ -148,17 +169,30 @@ def _expand_mos_kernel(ids_ref, idx_ref, u_ref, pool_ref, y_ref, acc_ref):
         y_ref[0, :] = acc_ref[...].astype(y_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def bgmv_expand_mos(u, b_pool, ids, idx_b, interpret: bool = True):
+@functools.partial(jax.jit, static_argnames=("interpret", "shard_len"))
+def bgmv_expand_mos(u, b_pool, ids, idx_b, interpret: bool = True,
+                    shard_len: int | None = None):
     """u (B, r), b_pool (T, n, s), ids (B,), idx_b (r, l) → y (B, l·s).
 
     y[b, j·s:(j+1)·s] = Σ_i u[b, i] · pool[ids[b], idx_b[i, j]] — the MoS
     column materialization fused into the expand outer-product.
+
+    Non-128-multiple shard lengths run lane-padded for full-register DMAs;
+    the padded output tail is sliced away at the end.  With a pre-padded
+    pool (``b_pool_lanes`` from ``stack_tenants``) pass the *logical*
+    ``shard_len`` so the output is sliced back — nothing is re-padded
+    in-call then.
     """
     B, r = u.shape
-    T, n, s = b_pool.shape
+    T, n, s_pool = b_pool.shape
     r2, l = idx_b.shape
     assert r2 == r, (r2, r)
+    s0 = shard_len if shard_len is not None else s_pool
+    sp = _pad_lanes(s0)
+    assert s_pool in (s0, sp), (s_pool, s0, sp)
+    if s_pool == s0 != sp:               # fallback: pad the pool in-call
+        b_pool = jnp.pad(b_pool, ((0, 0), (0, 0), (0, sp - s0)))
+    s = sp
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, l, r),
@@ -173,12 +207,15 @@ def bgmv_expand_mos(u, b_pool, ids, idx_b, interpret: bool = True):
                                (b, j)),
         scratch_shapes=[pltpu.VMEM((s,), jnp.float32)],
     )
-    return pl.pallas_call(
+    y = pl.pallas_call(
         _expand_mos_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, l * s), u.dtype),
         interpret=interpret,
     )(ids, idx_b.reshape(-1), u, b_pool)
+    if s != s0:
+        y = y.reshape(B, l, s)[:, :, :s0].reshape(B, l * s0)
+    return y
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "o_tile"))

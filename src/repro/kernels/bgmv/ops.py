@@ -27,17 +27,21 @@ def bgmv(x, a_stack, b_stack, ids, scale: float = 1.0,
     return y * jnp.asarray(scale, y.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "scale"))
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "scale", "shard_len_b"))
 def bgmv_mos(x, a_pool, b_pool, ids, idx_a, idx_b, scale: float = 1.0,
-             interpret: bool = True):
+             interpret: bool = True, shard_len_b: int | None = None):
     """Pool-resident per-request MoS delta.
 
     x (B, h), a_pool/b_pool (T, n, s_a)/(T, n, s_b), ids (B,), idx (r, l):
     y_b = scale · (x_b A[id_b]ᵀ) B[id_b] where A/B rows are gathered from
     the shard pools inside the kernel DMA (never materialized in HBM).
+    Pools may be pre-padded to 128 lanes (``*_pool_lanes`` leaves); pass
+    ``shard_len_b`` (the logical b-shard length) alongside a padded b_pool.
     """
     u = bgmv_shrink_mos(x, a_pool, ids, idx_a, interpret=interpret)
-    y = bgmv_expand_mos(u, b_pool, ids, idx_b, interpret=interpret)
+    y = bgmv_expand_mos(u, b_pool, ids, idx_b, interpret=interpret,
+                        shard_len=shard_len_b)
     return y * jnp.asarray(scale, y.dtype)
 
 

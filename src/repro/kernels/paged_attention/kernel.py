@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: paged-attention decode over a block-table KV cache.
+
+The serving engine's KV state lives in a global page pool — fixed-size
+``(page_size, KVp, hd)`` pages of a ``(P, page_size, KVp, hd)`` slab per
+layer — and each request owns an ordered page list (its *block table* row).
+Logical token ``i`` of request ``b`` lives in page
+``block_tables[b, i // page_size]`` at offset ``i % page_size``, so a
+request's KV is physically scattered but logically contiguous.
+
+vLLM's GPU PagedAttention walks the block table with per-warp pointer
+chasing; the TPU adaptation makes the page walk a *scalar-prefetch block
+redirect*, the same move as the BGMV-MoS kernels: the flattened block table
+(and the per-request positions) live in SMEM, and the K/V BlockSpec
+index_maps point each grid step's DMA at the page it needs —
+``bt_ref[b * max_pages + j]`` — so the kernel body only ever sees dense
+(page_size, KVp, hd) tiles.  Pages stream innermost over a streaming
+(m, l, acc) softmax held in fp32 VMEM scratch; the (1, ·) output block is
+revisited across the page dim and written once on the last page.
+
+Pages past the request's length are masked (and their compute skipped with
+``pl.when``), but their DMA still issues — the engine keeps every unused
+block-table entry pointing at the reserved trash page 0 so those DMAs stay
+in bounds and never alias live data.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, page_size: int,
+                         window: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos_b = pos_ref[b]                                   # query position
+
+    @pl.when(j * page_size <= pos_b)                     # page holds live kv
+    def _update():
+        q = q_ref[0].astype(jnp.float32)                 # (KVp, G, hd)
+        k = k_ref[0].astype(jnp.float32)                 # (ps, KVp, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.einsum("kgd,skd->kgs", q, k,
+                       preferred_element_type=jnp.float32) * scale
+        idx = (j * page_size +
+               jax.lax.broadcasted_iota(jnp.int32, (1, 1, page_size), 2))
+        mask = idx <= pos_b                              # causal over pages
+        if window > 0:
+            mask &= (pos_b - idx) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_page = jnp.max(s, axis=-1)                     # (KVp, G)
+        m_new = jnp.maximum(m_ref[...], m_page)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        c = jnp.exp(m_ref[...] - m_new)
+        l_ref[...] = l_ref[...] * c + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * c[..., None] +
+                        jnp.einsum("kgs,skd->kgd", p, v,
+                                   preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_pallas(q, k_pages, v_pages, block_tables, pos,
+                        window: int = 0, interpret: bool = True):
+    """q (B, KVp, G, hd), k/v_pages (P, ps, KVp, hd), block_tables
+    (B, max_pages), pos (B,) → (B, KVp, G, hd).
+
+    One decode step of attention over a paged KV cache: request ``b``
+    attends logical positions ``0 .. pos[b]`` gathered page-by-page through
+    its block-table row.  ``interpret=False`` compiles for real TPUs.
+    """
+    B, KVp, G, hd = q.shape
+    P, ps, KVp2, hd2 = k_pages.shape
+    assert (KVp2, hd2) == (KVp, hd), (k_pages.shape, q.shape)
+    B2, max_pages = block_tables.shape
+    assert B2 == B, (B2, B)
+    scale = 1.0 / math.sqrt(hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, KVp, G, hd),
+                         lambda b, j, bt_ref, pos_ref: (b, 0, 0, 0)),
+            pl.BlockSpec(
+                (1, ps, KVp, hd),
+                lambda b, j, bt_ref, pos_ref:
+                    (bt_ref[b * max_pages + j], 0, 0, 0)),
+            pl.BlockSpec(
+                (1, ps, KVp, hd),
+                lambda b, j, bt_ref, pos_ref:
+                    (bt_ref[b * max_pages + j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, KVp, G, hd),
+                               lambda b, j, bt_ref, pos_ref: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KVp, G), jnp.float32),
+            pltpu.VMEM((KVp, G), jnp.float32),
+            pltpu.VMEM((KVp, G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_decode_kernel, page_size=ps, window=window,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVp, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.reshape(-1), pos, q, k_pages, v_pages)

@@ -1,0 +1,100 @@
+"""Paged KV-cache ops: block-table page writes/gathers + the decode kernel
+entry point.
+
+Layout contract (shared with ``serving.paging``):
+  * page pool slab per layer instance: ``(P, page_size, KVp, hd)``;
+  * block table: ``(B, max_pages)`` int32 — page ids, row-ordered, with
+    every unused entry pointing at the reserved **trash page 0** (never
+    allocated to a request) so stray writes/DMAs never alias live pages;
+  * logical token ``i`` of request ``b`` lives at
+    ``(block_tables[b, i // ps], i % ps)`` — written *compactly*, so
+    logical index == token position and decode masking needs no kvpos
+    array, just ``iota <= pos``.
+
+The writes are jnp scatters (XLA lowers them to efficient dynamic-update
+streams); the attention read is the Pallas kernel in ``kernel.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import paged_decode_pallas
+
+INVALID_POS = 2**30     # matches models.attention.INVALID_POS
+
+
+def _flat_slots(block_tables, positions, num_pages: int, page_size: int):
+    """positions (..., ) logical indices → flat pool slot ids, with invalid
+    (negative / INVALID_POS-marked / overflowing) positions mapped OUT OF
+    BOUNDS so a ``mode="drop"`` scatter discards them."""
+    max_pages = block_tables.shape[-1]
+    valid = (positions >= 0) & (positions < max_pages * page_size)
+    page_idx = jnp.clip(positions // page_size, 0, max_pages - 1)
+    pages = jnp.take_along_axis(block_tables, page_idx, axis=-1)
+    flat = pages * page_size + positions % page_size
+    return jnp.where(valid, flat, num_pages * page_size)     # OOB → dropped
+
+
+def write_prefill_pages(pool, new, block_tables, positions):
+    """Scatter a prefill's K or V rows into the page pool, compactly.
+
+    pool (P, ps, KVp, hd); new (B, S, KVp, hd); block_tables (B, max_pages);
+    positions (B, S) logical token indices — left-pad slots carry
+    ``INVALID_POS`` (or any negative/overflow value) and are dropped, which
+    is what makes one left-padded mixed-length prefill write only the real
+    tokens of every request.
+    """
+    P, ps = pool.shape[0], pool.shape[1]
+    flat = _flat_slots(block_tables, positions, P, ps)       # (B, S)
+    pool_flat = pool.reshape((P * ps,) + pool.shape[2:])
+    pool_flat = pool_flat.at[flat.reshape(-1)].set(
+        new.astype(pool.dtype).reshape((-1,) + new.shape[2:]), mode="drop")
+    return pool_flat.reshape(pool.shape)
+
+
+def write_decode_page(pool, new, block_tables, pos):
+    """Scatter one decode token per request into its page.
+
+    pool (P, ps, KVp, hd); new (B, KVp, hd); pos (B,) write positions.
+    Requests parked on the trash block-table row (retired/empty slots)
+    write into page 0 by construction — never into live data.
+    """
+    P, ps = pool.shape[0], pool.shape[1]
+    flat = _flat_slots(block_tables, pos[:, None], P, ps)[:, 0]  # (B,)
+    # out-of-range pos (idle slots that kept counting) → trash page 0
+    flat = jnp.where(flat >= P * ps, pos % ps, flat)
+    pool_flat = pool.reshape((P * ps,) + pool.shape[2:])
+    pool_flat = pool_flat.at[flat].set(new.astype(pool.dtype))
+    return pool_flat.reshape(pool.shape)
+
+
+def gather_pages(pool, block_tables):
+    """Materialize each request's logical KV sequence from the pool.
+
+    pool (P, ps, ...), block_tables (B, max_pages) → (B, max_pages·ps, ...)
+    — the dense view a non-paged cache would hold.  Reference/debug path;
+    the Pallas kernel never materializes this.
+    """
+    ps = pool.shape[1]
+    out = jnp.take(pool, block_tables, axis=0)     # (B, mp, ps, ...)
+    return out.reshape((out.shape[0], out.shape[1] * ps) + out.shape[3:])
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention_decode(q, k_pages, v_pages, block_tables, pos,
+                           window: int = 0, interpret: bool = True):
+    """Decode-step paged attention, (B, 1, KVp, G, hd) in/out.
+
+    Thin shape adapter over :func:`kernel.paged_decode_pallas` matching the
+    ``decode_attention`` calling convention (S == 1 kept explicit).
+    """
+    out = paged_decode_pallas(q[:, 0], k_pages, v_pages, block_tables, pos,
+                              window=window, interpret=interpret)
+    return out[:, None]
+
+
+__all__ = ["paged_attention_decode", "paged_decode_pallas", "gather_pages",
+           "write_prefill_pages", "write_decode_page", "INVALID_POS"]

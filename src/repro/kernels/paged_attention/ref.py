@@ -1,0 +1,43 @@
+"""Pure-jnp references for the paged-attention decode kernel.
+
+Self-contained (no model imports) so kernel parity tests can oracle against
+them directly.  ``paged_attention_decode_ref`` gathers the block-table view
+dense and runs the identical masked-softmax math the Pallas kernel streams
+page-by-page.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from .ops import gather_pages
+
+NEG_INF = -1e30
+
+
+def paged_attention_decode_ref(q, k_pages, v_pages, block_tables, pos,
+                               window: int = 0):
+    """q (B, 1, KVp, G, hd), pools (P, ps, KVp, hd), block_tables
+    (B, max_pages), pos (B,) → (B, 1, KVp, G, hd)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    k = gather_pages(k_pages, block_tables)          # (B, S, KVp, hd)
+    v = gather_pages(v_pages, block_tables)
+    S = k.shape[1]
+    idx = jnp.arange(S, dtype=jnp.int32)[None, :]    # logical == position
+    mask = idx <= pos[:, None]
+    if window > 0:
+        mask &= (pos[:, None] - idx) < window
+    s = jnp.einsum("bokgd,bskd->bokgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[:, None, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bokgs,bskd->bokgd", p / jnp.maximum(l, 1e-30),
+                     v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+__all__ = ["paged_attention_decode_ref"]

@@ -10,21 +10,30 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _auto_kwargs(n):
+    """``axis_types=`` kwargs for ``jax.make_mesh``, version-portable.
+
+    ``jax.sharding.AxisType`` only exists on newer jax releases; older ones
+    default every axis to Auto, which is exactly what we want — so omit the
+    kwarg there (same shim pattern as ``distributed.sharding.abstract_mesh``).
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_auto_kwargs(len(axes)))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests / elastic rescale)."""
-    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=_auto(len(axes)))
+    return jax.make_mesh(tuple(shape), tuple(axes), **_auto_kwargs(len(axes)))
 
 
 def make_host_mesh():
     """1-device mesh for CPU smoke paths."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+    return jax.make_mesh((1, 1), ("data", "model"), **_auto_kwargs(2))

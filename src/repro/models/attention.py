@@ -203,6 +203,36 @@ def banded_attention(
     return out[:, :Sq]
 
 
+def paged_decode_attention(
+    q: jax.Array,            # (B, 1, KVp, G, hd)
+    k_pages: jax.Array,      # (P, page_size, KVp, hd) — global page pool
+    v_pages: jax.Array,
+    block_tables: jax.Array, # (B, max_pages) int32 page ids
+    pos: jax.Array,          # (B,) query positions
+    *, window: int = 0, backend: str = "pallas", interpret: bool = True,
+) -> jax.Array:
+    """Single-token decode over a paged (block-table) KV cache.
+
+    ``backend="pallas"`` streams pages through the scalar-prefetch kernel
+    (``kernels.paged_attention``); ``"ref"`` gathers the block-table view
+    dense and reuses :func:`decode_attention` — by construction *bitwise*
+    identical to a dense-ring cache holding the same tokens, because pages
+    are written compactly (logical index == position) and masked slots
+    contribute exact zeros either way.
+    """
+    from ..kernels.paged_attention.ops import (gather_pages,
+                                               paged_attention_decode)
+    if backend == "pallas":
+        return paged_attention_decode(q, k_pages, v_pages, block_tables, pos,
+                                      window=window, interpret=interpret)
+    assert backend == "ref", f"unknown paged attention backend {backend!r}"
+    k = gather_pages(k_pages, block_tables)           # (B, S, KVp, hd)
+    v = gather_pages(v_pages, block_tables)
+    iota = jnp.arange(k.shape[1], dtype=jnp.int32)[None, :]
+    kvpos = jnp.where(iota <= pos[:, None], iota, INVALID_POS)
+    return decode_attention(q, k, v, pos, kvpos, window=window)
+
+
 def decode_attention(
     q: jax.Array,            # (B, 1, KV, G, hd)
     k: jax.Array,            # (B, S, KV, hd) — may be sequence-sharded

@@ -19,8 +19,8 @@ from ..configs.base import ModelConfig
 from .attention import INVALID_POS
 from .layers import ParamFactory, linear, norm_apply, init_norm
 from .transformer import (Hooks, adapter_specs, arch_stacks, cache_seq_len,
-                          init_stack_cache, init_stack_params,
-                          organize_adapter_xs, stack_apply)
+                          init_paged_stack_cache, init_stack_cache,
+                          init_stack_params, organize_adapter_xs, stack_apply)
 from ..distributed.context import constrain_batch, constrain_use
 
 
@@ -87,6 +87,39 @@ class Model:
                 continue  # encoder output lives in the cross-kv caches
             cache[name] = init_stack_cache(cfg, count, pattern, batch,
                                            max_len, abstract)
+        return cache
+
+    def init_paged_cache(self, batch: int, max_len: int, *,
+                         page_size: int = 8, num_pages: Optional[int] = None,
+                         abstract: bool = False):
+        """Paged KV cache: a global page pool per attention layer plus
+        per-request block tables (docs/serving.md §Paged KV cache).
+
+        ``num_pages`` defaults to full capacity (every slot can reach
+        ``max_len``) plus the reserved trash page 0; pass less to make the
+        serving engine's admission memory-bounded.  Mamba SSM state and
+        cross-attention KV stay per-slot (O(1)/O(enc_seq) per request).
+        """
+        cfg = self.cfg
+        max_pages = -(-max_len // page_size)
+        if num_pages is None:
+            num_pages = batch * max_pages + 1
+
+        def mk(shape, dt, fill=0):
+            if abstract:
+                return jax.ShapeDtypeStruct(shape, dt)
+            return jnp.full(shape, fill, dt)
+
+        cache: Dict[str, Any] = {
+            "pos": mk((batch,), jnp.int32),
+            "block_tables": mk((batch, max_pages), jnp.int32),
+        }
+        for name, count, pattern in self.stacks:
+            if cfg.family == "encdec" and name == "enc":
+                continue
+            cache[name] = init_paged_stack_cache(cfg, count, pattern, batch,
+                                                 num_pages, page_size,
+                                                 abstract)
         return cache
 
     def adapter_param_count(self) -> Dict[str, int]:
@@ -175,41 +208,79 @@ class Model:
         return self._head_inputs(params, x)
 
     def prefill(self, params, ad_state, batch, cache, hooks_factory=None):
-        """Prefill: build caches, return (new_cache, last-position hidden)."""
+        """Prefill: build caches, return (new_cache, last-position hidden).
+
+        With a paged cache (``block_tables`` present), ``batch`` may carry
+        ``"lengths"`` (B,): tokens are then treated as LEFT-padded to a
+        common S and every request's real tokens get true positions
+        ``0..len-1`` — one jitted call prefills a mixed-length admission
+        batch, writing each request's K/V compactly into its own pages.
+        Pad slots carry ``INVALID_POS`` so attention masks (and the page
+        scatter drops) them exactly.
+        """
         cfg = self.cfg
         ad_shared, _ = ad.split_scan(self.plan, ad_state,
                                      [s.name for s in self.specs])
         ad_xs = organize_adapter_xs(self.plan, ad_state, cfg)
         tokens = batch["tokens"]
         B = tokens.shape[0]
+        paged = "block_tables" in cache
+        lengths = batch.get("lengths")
+        if lengths is not None:
+            assert paged, "mixed-length (left-padded) prefill needs a " \
+                "paged cache — the dense ring assumes slot p%ring == pos p"
+            # mamba state is a scan over ALL tokens — left-pads would
+            # contaminate it, so mixed-length admission is attention-only
+            assert cfg.family in ("dense", "moe"), cfg.family
+            lengths = jnp.asarray(lengths, jnp.int32)
         x = self._embed(params, tokens)
         if cfg.family == "vlm":
             pe = batch["patch_embeds"].astype(x.dtype)
             pe = linear(pe, params["patch_proj"])
             pe = norm_apply(cfg.norm, pe, params, "patch_norm.")
             x = jnp.concatenate([pe, x], axis=1)
+
+        S = x.shape[1]
+        if lengths is not None:
+            pos = jnp.arange(S, dtype=jnp.int32)[None] - (S - lengths)[:, None]
+            pos = jnp.where(pos >= 0, pos, INVALID_POS)
+        else:
+            pos = jnp.arange(S, dtype=jnp.int32)[None]
+
         if cfg.pos_embed == "learned" and cfg.family != "encdec":
-            x = x + params["pos_embed"].astype(x.dtype)[None, : x.shape[1]]
+            emb = params["pos_embed"].astype(x.dtype)
+            if lengths is not None:
+                x = x + jnp.take(emb, jnp.clip(pos, 0, emb.shape[0] - 1),
+                                 axis=0)
+            else:
+                x = x + emb[None, :S]
 
         enc_out = None
         if cfg.family == "encdec":
             enc_out = self._encoder(params, ad_shared, ad_xs, batch["frames"])
             if cfg.pos_embed == "learned":
-                x = x + params["pos_embed"].astype(x.dtype)[None, : x.shape[1]]
+                x = x + params["pos_embed"].astype(x.dtype)[None, :S]
 
-        S = x.shape[1]
-        ring = cache["kvpos"].shape[1]
-        assert S % ring == 0 or ring >= S, "ring must divide prefill length"
-        pos = jnp.arange(S, dtype=jnp.int32)[None]
-        new_cache = {"pos": jnp.full((B,), S, jnp.int32)}
-        # ring slot p%ring holds position p for the last `ring` tokens
-        tail = jnp.arange(S - ring, S, dtype=jnp.int32) if ring <= S else None
-        if ring <= S:
-            new_cache["kvpos"] = jnp.broadcast_to(tail, (B, ring))
+        page = None
+        if paged:
+            new_cache = {
+                "pos": lengths if lengths is not None
+                else jnp.full((B,), S, jnp.int32),
+                "block_tables": cache["block_tables"],
+            }
+            page = {"bt": cache["block_tables"]}
         else:
-            kv = jnp.full((B, ring), 2**30, jnp.int32)
-            new_cache["kvpos"] = kv.at[:, :S].set(
-                jnp.broadcast_to(pos, (B, S)))
+            ring = cache["kvpos"].shape[1]
+            assert S % ring == 0 or ring >= S, "ring must divide prefill length"
+            new_cache = {"pos": jnp.full((B,), S, jnp.int32)}
+            # ring slot p%ring holds position p for the last `ring` tokens
+            if ring <= S:
+                tail = jnp.arange(S - ring, S, dtype=jnp.int32)
+                new_cache["kvpos"] = jnp.broadcast_to(tail, (B, ring))
+            else:
+                kv = jnp.full((B, ring), 2**30, jnp.int32)
+                new_cache["kvpos"] = kv.at[:, :S].set(
+                    jnp.broadcast_to(pos, (B, S)))
 
         dec_stacks = [s for s in self.stacks
                       if not (cfg.family == "encdec" and s[0] == "enc")]
@@ -221,31 +292,49 @@ class Model:
                                 enc_out=enc_out, remat=cfg.remat,
                                 multi_stack=self.multi_stack,
                                 hooks_factory=hooks_factory,
-                                stack_axes=_subtree(self.axes, name))
+                                stack_axes=_subtree(self.axes, name),
+                                page=page)
             new_cache[name] = nc
         return new_cache, self._head_inputs(params, x[:, -1:])
 
     def decode_step(self, params, ad_state, tokens, cache,
-                    hooks_factory=None):
-        """One decode step.  tokens (B,1) at positions cache["pos"]."""
+                    hooks_factory=None, attn_backend: str = "pallas",
+                    attn_interpret: bool = True):
+        """One decode step.  tokens (B,1) at positions cache["pos"].
+
+        With a paged cache, the step writes each request's token into its
+        block-table page and attends through ``paged_decode_attention``
+        (``attn_backend``: "pallas" streams pages via the scalar-prefetch
+        kernel, "ref" is the gather-dense oracle; both ignore the dense
+        ring machinery).
+        """
         cfg = self.cfg
         ad_shared, _ = ad.split_scan(self.plan, ad_state,
                                      [s.name for s in self.specs])
         ad_xs = organize_adapter_xs(self.plan, ad_state, cfg)
         B = tokens.shape[0]
         pos = cache["pos"]                                     # (B,)
-        ring = cache["kvpos"].shape[1]
+        paged = "block_tables" in cache
         x = self._embed(params, tokens)
         if cfg.pos_embed == "learned":
             x = x + jnp.take(params["pos_embed"],
                              jnp.clip(pos, 0, params["pos_embed"].shape[0] - 1),
                              axis=0)[:, None].astype(x.dtype)
 
-        slot = (pos % ring).astype(jnp.int32)
-        iota = jnp.arange(ring, dtype=jnp.int32)
-        kvpos = jnp.where(iota[None, :] == slot[:, None], pos[:, None],
-                          cache["kvpos"])
-        new_cache = {"pos": pos + 1, "kvpos": kvpos}
+        page = None
+        if paged:
+            kvpos = None
+            page = {"bt": cache["block_tables"], "backend": attn_backend,
+                    "interpret": attn_interpret}
+            new_cache = {"pos": pos + 1,
+                         "block_tables": cache["block_tables"]}
+        else:
+            ring = cache["kvpos"].shape[1]
+            slot = (pos % ring).astype(jnp.int32)
+            iota = jnp.arange(ring, dtype=jnp.int32)
+            kvpos = jnp.where(iota[None, :] == slot[:, None], pos[:, None],
+                              cache["kvpos"])
+            new_cache = {"pos": pos + 1, "kvpos": kvpos}
 
         dec_stacks = [s for s in self.stacks
                       if not (cfg.family == "encdec" and s[0] == "enc")]
@@ -257,7 +346,8 @@ class Model:
                                 enc_out=None, remat="none",
                                 multi_stack=self.multi_stack,
                                 hooks_factory=hooks_factory,
-                                stack_axes=_subtree(self.axes, name))
+                                stack_axes=_subtree(self.axes, name),
+                                page=page)
             new_cache[name] = nc
         return new_cache, self._head_inputs(params, x)
 

@@ -27,7 +27,9 @@ from ..core.types import LinearTypeSpec
 from ..distributed.context import (constrain_batch, constrain_delta_out,
                                    constrain_use)
 from .attention import (INVALID_POS, banded_attention, blockwise_attention,
-                        decode_attention)
+                        decode_attention, paged_decode_attention)
+from ..kernels.paged_attention.ops import (write_decode_page,
+                                           write_prefill_pages)
 from .layers import ParamFactory, apply_rope, linear, norm_apply, init_norm
 from .mamba import init_mamba, init_mamba_state, mamba_mixer
 from .mlp import init_mlp, mlp
@@ -269,6 +271,37 @@ def init_stack_cache(cfg, count: int, pattern: List[LayerSpec],
     return cache
 
 
+def init_paged_stack_cache(cfg, count: int, pattern: List[LayerSpec],
+                           batch: int, num_pages: int, page_size: int,
+                           abstract: bool):
+    """Paged-cache variant of :func:`init_stack_cache`: self-attention K/V
+    become per-layer page-pool slabs ``kp``/``vp`` (count, P, ps, KVp, hd)
+    shared by every request through the block tables, while mamba SSM state
+    (O(1) per request) and whisper cross-KV (fixed enc_seq) stay per-slot.
+    """
+    KVp, hd = cfg.padded_kv_heads, cfg.hd
+    dtype = cfg.dtype_jnp()
+
+    def mk(shape, dt):
+        return jax.ShapeDtypeStruct(shape, dt) if abstract else jnp.zeros(shape, dt)
+
+    cache = {}
+    for j, spec in enumerate(pattern):
+        c = {}
+        if spec.mixer == "attn":
+            c["kp"] = mk((count, num_pages, page_size, KVp, hd), dtype)
+            c["vp"] = mk((count, num_pages, page_size, KVp, hd), dtype)
+        else:
+            st = init_mamba_state(cfg, batch, dtype, abstract=True)
+            for k, v in st.items():
+                c[k] = mk((count,) + tuple(v.shape), v.dtype)
+        if spec.cross:
+            c["xk"] = mk((count, batch, cfg.enc_seq, KVp, hd), dtype)
+            c["xv"] = mk((count, batch, cfg.enc_seq, KVp, hd), dtype)
+        cache[f"p{j}"] = c
+    return cache
+
+
 # ---------------------------------------------------------------------------
 # attention layer
 # ---------------------------------------------------------------------------
@@ -283,9 +316,17 @@ def _write_kv(cache_k, new_k, pos, ring: int):
 
 
 def attn_apply(x, p, cfg, hooks: Hooks, prefix, *, mode, positions, kvpos,
-               cache, causal=True, window=0, tprefix="", kv_src=None):
+               cache, causal=True, window=0, tprefix="", kv_src=None,
+               page=None):
     """GQA attention; ``kv_src`` switches to cross-attention over a source
-    sequence (keys/values from kv_src, no causal mask, no rope)."""
+    sequence (keys/values from kv_src, no causal mask, no rope).
+
+    A cache holding ``kp``/``vp`` leaves is a *paged* KV cache (page pool +
+    block tables, docs/serving.md): prefill scatters its rope'd K/V rows
+    compactly into the request's pages (left-pad slots dropped), decode
+    writes one token per request and attends through
+    :func:`paged_decode_attention`.  ``page`` carries the block tables and
+    the paged-attention backend choice."""
     B, S, _ = x.shape
     hd = cfg.hd
     Hp, KVp, G = cfg.padded_heads, cfg.padded_kv_heads, cfg.group_size
@@ -320,7 +361,15 @@ def attn_apply(x, p, cfg, hooks: Hooks, prefix, *, mode, positions, kvpos,
                                       q_chunk=cfg.attn_chunk,
                                       kv_chunk=cfg.attn_chunk,
                                       unroll=cfg.unroll_layers)
-        if mode == "prefill" and cache is not None and "k" in cache:
+        if mode == "prefill" and cache is not None and "kp" in cache:
+            # paged: scatter the real tokens' K/V into the request's pages
+            # (positions are logical token indices; left-pad slots carry
+            # INVALID_POS and drop out of the scatter)
+            pos2 = jnp.broadcast_to(positions, (B, S)).astype(jnp.int32)
+            nk = write_prefill_pages(cache["kp"], k, page["bt"], pos2)
+            nv = write_prefill_pages(cache["vp"], v, page["bt"], pos2)
+            new_cache = {"kp": nk, "vp": nv}
+        elif mode == "prefill" and cache is not None and "k" in cache:
             ring = cache["k"].shape[1]
             kd, vd = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
             if ring >= k.shape[1]:
@@ -329,6 +378,15 @@ def attn_apply(x, p, cfg, hooks: Hooks, prefix, *, mode, positions, kvpos,
             else:                       # SWA ring < prefill: keep the tail
                 nk, nv = kd[:, -ring:], vd[:, -ring:]
             new_cache = {"k": nk, "v": nv}
+    elif "kp" in cache:                 # decode over the page pool
+        pos_b = positions.reshape(B)
+        nk = write_decode_page(cache["kp"], k[:, 0], page["bt"], pos_b)
+        nv = write_decode_page(cache["vp"], v[:, 0], page["bt"], pos_b)
+        out = paged_decode_attention(q, nk, nv, page["bt"], pos_b,
+                                     window=window,
+                                     backend=page.get("backend", "pallas"),
+                                     interpret=page.get("interpret", True))
+        new_cache = {"kp": nk, "vp": nv}
     else:                               # decode over the ring
         ring = cache["k"].shape[1]
         pos_b = positions.reshape(B)
@@ -354,13 +412,14 @@ def _res_add(x, y, cfg):
 
 
 def layer_apply(x, p, cfg, hooks: Hooks, spec: LayerSpec, prefix, *, mode,
-                positions, kvpos, cache, enc_out):
+                positions, kvpos, cache, enc_out, page=None):
     new_cache = {}
     h = norm_apply(cfg.norm, x, p, prefix + "mixer_norm.")
     if spec.mixer == "attn":
         y, nc = attn_apply(h, p, cfg, hooks, prefix, mode=mode,
                            positions=positions, kvpos=kvpos, cache=cache,
-                           causal=spec.causal, window=cfg.sliding_window)
+                           causal=spec.causal, window=cfg.sliding_window,
+                           page=page)
         new_cache.update(nc)
     else:
         st = None
@@ -423,7 +482,7 @@ def layer_apply(x, p, cfg, hooks: Hooks, spec: LayerSpec, prefix, *, mode,
 def stack_apply(x, stack_params, cfg, plan, ad_shared, ad_xs, stack_name,
                 count, pattern, *, mode, positions, kvpos, cache, enc_out,
                 remat: str, multi_stack: bool, hooks_factory=None,
-                stack_axes=None):
+                stack_axes=None, page=None):
     tpfx = f"{stack_name}." if multi_stack else ""
     has_cache = cache is not None
     factory = hooks_factory or Hooks
@@ -441,7 +500,8 @@ def stack_apply(x, stack_params, cfg, plan, ad_shared, ad_xs, stack_name,
             hooks = factory(plan, ad_shared, node, tpfx)
             h, nc = layer_apply(h, sub, cfg, hooks, spec, f"{pj}.",
                                 mode=mode, positions=positions, kvpos=kvpos,
-                                cache=(gcache or {}).get(pj), enc_out=enc_out)
+                                cache=(gcache or {}).get(pj), enc_out=enc_out,
+                                page=page)
             if nc:
                 new_gcache[pj] = nc
         return h, new_gcache

@@ -1,3 +1,4 @@
 """Multi-tenant adapter serving (the paper's motivating scenario)."""
 from .engine import ServingEngine, Request, make_serve_step, make_prefill_step
 from .multi_tenant import stack_tenants, MTHooks, make_mt_factory
+from .paging import PagePool, paginate_cache

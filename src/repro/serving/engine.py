@@ -8,13 +8,22 @@ reuse, per-request positions, greedy sampling).
 Perf structure (docs/serving.md):
   * ``backend="fused"`` (default) applies adapters through the
     pool-resident Pallas BGMV kernels; ``"jnp"`` is the reference path.
-  * admission is **batched**: all queued requests with the same prompt
-    length prefill in ONE jitted call, then scatter into their decode
-    slots — instead of one jitted prefill per request.
-  * the decode-step cache argument is **donated**, so the (slots, ring)
-    KV/SSM buffers are reused in place across ticks instead of
-    reallocating per step.  (On backends without donation support XLA
-    falls back to a copy and warns — semantics are unchanged.)
+  * ``paged=True`` (default) keeps KV state in a global **page pool**
+    behind per-request block tables instead of dense per-slot rings, so KV
+    memory scales with admitted tokens, admission is gated on free pages
+    (the whole prompt+max_new trajectory must fit — never OOM mid-decode),
+    and slot reuse is copy-free.  One decode step then streams *both*
+    pools: adapter shards via BGMV-MoS and KV pages via the
+    paged-attention kernel, each through scalar-prefetch block redirects.
+  * admission is **batched**: on attention-only archs every queued
+    admissible request — regardless of prompt length — prefills in ONE
+    left-padded jitted call that scatters K/V directly into the admitted
+    requests' pages (mamba-bearing archs group by length: left-pads would
+    contaminate the scanned SSM state).  The dense path groups by length.
+  * the decode-step cache argument is **donated**, so the KV pools / SSM
+    buffers are reused in place across ticks instead of reallocating per
+    step.  (On backends without donation support XLA falls back to a copy
+    and warns — semantics are unchanged.)
 """
 from __future__ import annotations
 
@@ -26,26 +35,34 @@ import jax.numpy as jnp
 import numpy as np
 
 from .multi_tenant import make_mt_factory, stack_tenants
+from .paging import PagePool
 
 
 def make_serve_step(model, tenants: int = 0, backend: str = "fused",
-                    interpret: bool = True):
+                    interpret: bool = True, attn_backend: str = "pallas"):
     """One decode step.  tenants > 0 → multi-tenant BGMV application with
     per-request ``adapter_ids``; otherwise single-adapter decode.
-    ``interpret=False`` compiles the fused Pallas kernels (real TPU)."""
+    ``interpret=False`` compiles the fused Pallas kernels (real TPU);
+    ``attn_backend`` picks the paged-attention path when the cache is paged
+    ("pallas" kernel vs "ref" gather-dense oracle) and is ignored for dense
+    ring caches."""
 
     if tenants > 0:
         def serve_step(params, ad_stack, tokens, adapter_ids, cache):
             fac = make_mt_factory(adapter_ids, backend=backend,
                                   interpret=interpret)
             new_cache, h = model.decode_step(params, ad_stack, tokens, cache,
-                                             hooks_factory=fac)
+                                             hooks_factory=fac,
+                                             attn_backend=attn_backend,
+                                             attn_interpret=interpret)
             logits = model.logits(params, h)[:, 0]
             return new_cache, logits
         return serve_step
 
     def serve_step(params, ad_state, tokens, cache):
-        new_cache, h = model.decode_step(params, ad_state, tokens, cache)
+        new_cache, h = model.decode_step(params, ad_state, tokens, cache,
+                                         attn_backend=attn_backend,
+                                         attn_interpret=interpret)
         logits = model.logits(params, h)[:, 0]
         return new_cache, logits
     return serve_step
@@ -82,7 +99,11 @@ class Request:
 
 def batch_dim_of(leaf_name: str) -> int:
     """Request-batch dim per cache leaf (stack caches lead with layer count)."""
-    return 0 if leaf_name in ("pos", "kvpos") else 1
+    return 0 if leaf_name in ("pos", "kvpos", "block_tables") else 1
+
+
+def _leaf_name(path) -> str:
+    return path[-1].key if hasattr(path[-1], "key") else str(path[-1])
 
 
 def insert_slot(batch_cache, src_cache, slot: int, src: int = 0):
@@ -91,8 +112,7 @@ def insert_slot(batch_cache, src_cache, slot: int, src: int = 0):
     serving engine.  ``src_cache`` may hold any number of requests."""
 
     def one(path, b, s):
-        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
-        dim = batch_dim_of(name)
+        dim = batch_dim_of(_leaf_name(path))
         idx = [slice(None)] * b.ndim
         idx[dim] = slot
         row = jax.lax.index_in_dim(s, src, axis=dim, keepdims=False)
@@ -104,18 +124,25 @@ def insert_slot(batch_cache, src_cache, slot: int, src: int = 0):
 class ServingEngine:
     """Continuous-batching engine over the jitted steps.
 
-    Static decode batch of ``slots``.  Admission = one multi-request prefill
-    per distinct prompt length (its own jitted step, shape-cached across
-    admissions) + ``insert_slot`` into the decode batch; finished requests
-    free their slot immediately.  Empty slots still run (their writes land
-    in slots that are fully overwritten on the next admission), which keeps
-    the decode step shape-static — the same trade production engines make.
+    Static decode batch of ``slots``; empty slots still run (their KV
+    writes land in the reserved trash page — paged — or in slots fully
+    overwritten on the next admission — dense), which keeps the decode
+    step shape-static — the same trade production engines make.
+
+    Paged mode (default): ``PagePool`` gates admission on free pages for
+    the request's whole prompt+max_new trajectory, prefill writes pages
+    in place (copy-free admission), retirement returns pages to the free
+    list (copy-free slot reuse).  ``num_pages`` defaults to full capacity;
+    pass less to make the engine memory-bounded — queued requests then
+    wait for pages, not just for slots.
     """
 
     def __init__(self, model, params, tenant_states: Sequence[Any],
                  slots: int = 4, max_len: int = 128,
                  backend: str = "fused", interpret: bool = True,
-                 stack_cache: bool = True):
+                 stack_cache: bool = True, paged: bool = True,
+                 page_size: int = 8, num_pages: Optional[int] = None,
+                 attn_backend: str = "pallas"):
         self.model, self.params = model, params
         self.tenants = len(tenant_states)
         self.backend = backend
@@ -127,37 +154,156 @@ class ServingEngine:
                                       with_cache=stack_cache,
                                       interpret=interpret)
         self.slots, self.max_len = slots, max_len
+        self.paged = paged
         # cache (arg 4) is donated: decode buffers are reused across ticks
         self.serve = jax.jit(
             make_serve_step(model, tenants=self.tenants, backend=backend,
-                            interpret=interpret),
+                            interpret=interpret, attn_backend=attn_backend),
             donate_argnums=(4,))
         self.prefill = jax.jit(
             make_prefill_step(model, tenants=self.tenants, backend=backend,
                               interpret=interpret))
         self._queue: List[Request] = []
         self._active: List[Optional[Request]] = [None] * slots
-        self.cache = model.init_cache(slots, max_len)
+        if paged:
+            self.page_size = page_size
+            max_pages = -(-max_len // page_size)
+            if num_pages is None:
+                num_pages = slots * max_pages + 1      # + trash page 0
+            self.num_pages = num_pages
+            self.pages = PagePool(num_pages=num_pages, page_size=page_size,
+                                  slots=slots, max_pages_per_slot=max_pages)
+            self.cache = model.init_paged_cache(slots, max_len,
+                                                page_size=page_size,
+                                                num_pages=num_pages)
+        else:
+            self.cache = model.init_cache(slots, max_len)
         self.adapter_ids = np.zeros((slots,), np.int32)
         self._pending: Dict[int, int] = {}   # slot → first generated token
+        # mixed-length single-call admission needs maskable (attention-only)
+        # mixers; mamba state is a scan over all tokens incl. pads
+        self._mixed_ok = model.cfg.family in ("dense", "moe")
 
     def submit(self, req: Request):
         req.out = []
+        if self.paged:
+            need = len(req.prompt) + req.max_new
+            if need > self.max_len:
+                raise ValueError(
+                    f"request {req.rid}: prompt+max_new {need} > max_len "
+                    f"{self.max_len}")
+            # reject trajectories that could NEVER fit — otherwise the FIFO
+            # head would wait forever and livelock everything behind it
+            cap = min(self.pages.max_pages_per_slot, self.num_pages - 1)
+            if self.pages.pages_for(need) > cap:
+                raise ValueError(
+                    f"request {req.rid}: needs {self.pages.pages_for(need)} "
+                    f"pages but the pool can ever free at most {cap}")
         self._queue.append(req)
 
-    def _admit(self):
-        """Admit queued requests into free slots with batched prefill.
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
 
-        All admissible requests sharing a prompt length go through ONE
-        jitted prefill call (requests are rows of the batch); each row is
-        then scattered into its decode slot.
-        """
+    def _take_admissible(self):
+        """Pop (slot, request) pairs for every queued request that fits —
+        FIFO, no reordering: the head of the queue blocks admission when
+        its trajectory doesn't fit in the free pages (paged mode)."""
         free = [i for i in range(self.slots) if self._active[i] is None]
-        take = min(len(free), len(self._queue))
-        if take == 0:
+        admitted = []
+        while self._queue and free:
+            req = self._queue[0]
+            if self.paged:
+                need = len(req.prompt) + req.max_new
+                if not self.pages.can_admit(need):
+                    break
+                slot = free.pop(0)
+                self.pages.alloc(slot, need)
+            else:
+                slot = free.pop(0)
+            admitted.append((slot, self._queue.pop(0)))
+        return admitted
+
+    def _admit(self):
+        if self.paged:
+            admitted = self._take_admissible()
+            if not admitted:
+                return
+            if self._mixed_ok:
+                self._prefill_paged(admitted)
+            else:
+                by_len: Dict[int, List] = {}
+                for slot, req in admitted:
+                    by_len.setdefault(len(req.prompt), []).append((slot, req))
+                for group in by_len.values():
+                    self._prefill_paged(group, mixed=False)
             return
-        admitted = list(zip(free[:take],
-                            [self._queue.pop(0) for _ in range(take)]))
+        self._admit_dense()
+
+    def _prefill_paged(self, admitted, mixed: bool = True):
+        """ONE left-padded prefill call for the admitted group: K/V rows
+        scatter straight into each request's freshly-allocated pages (no
+        per-slot copy); SSM/cross-KV rows insert per slot afterwards."""
+        S = max(len(req.prompt) for _, req in admitted)
+        toks = np.zeros((len(admitted), S), np.int32)
+        lengths = np.zeros((len(admitted),), np.int32)
+        for j, (_, req) in enumerate(admitted):
+            L = len(req.prompt)
+            toks[j, S - L:] = req.prompt
+            lengths[j] = L
+        ids = jnp.asarray([req.adapter_id for _, req in admitted], jnp.int32)
+        bt_rows = self.pages.block_tables[[slot for slot, _ in admitted]]
+
+        # prefill view: global KV pools + fresh per-request rows for the
+        # per-slot leaves (SSM state, cross-KV).  The fresh pool slabs are
+        # placeholders (num_pages=2) — prefill reads/writes the global ones.
+        fresh = self.model.init_paged_cache(len(admitted), self.max_len,
+                                            page_size=self.page_size,
+                                            num_pages=2)
+
+        def pick(path, f, g):
+            return g if _leaf_name(path) in ("kp", "vp") else f
+
+        pcache = jax.tree_util.tree_map_with_path(pick, fresh, self.cache)
+        pcache["block_tables"] = jnp.asarray(bt_rows)
+        batch = {"tokens": jnp.asarray(toks)}
+        if mixed:
+            batch["lengths"] = jnp.asarray(lengths)
+        new_cache, logits = self.prefill(self.params, self.ad_stack, batch,
+                                         ids, pcache)
+        first = np.asarray(jnp.argmax(logits, axis=-1))
+
+        # merge: KV pools were updated in place (page-disjoint writes);
+        # per-slot leaves scatter row-by-row; host block tables are
+        # authoritative
+        def merge(path, cur, new):
+            name = _leaf_name(path)
+            if name in ("kp", "vp"):
+                return new
+            if name == "block_tables":
+                return jnp.asarray(self.pages.block_tables)
+            dim = batch_dim_of(name)
+            for j, (slot, _) in enumerate(admitted):
+                row = jax.lax.index_in_dim(new, j, axis=dim, keepdims=False)
+                idx = [slice(None)] * cur.ndim
+                idx[dim] = slot
+                cur = cur.at[tuple(idx)].set(row.astype(cur.dtype))
+            return cur
+
+        self.cache = jax.tree_util.tree_map_with_path(merge, self.cache,
+                                                      new_cache)
+        for j, (slot, req) in enumerate(admitted):
+            self._active[slot] = req
+            self.adapter_ids[slot] = req.adapter_id
+            self._pending[slot] = int(first[j])
+
+    def _admit_dense(self):
+        """Dense-ring admission: one batched prefill per distinct prompt
+        length (requests are rows of the batch), then scatter each row into
+        its decode slot."""
+        admitted = self._take_admissible()
+        if not admitted:
+            return
         by_len: Dict[int, List] = {}
         for slot, req in admitted:
             by_len.setdefault(len(req.prompt), []).append((slot, req))
@@ -175,8 +321,14 @@ class ServingEngine:
                 self.cache = insert_slot(self.cache, group_cache, slot, src=j)
                 self._pending[slot] = int(first[j])
 
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+
     def step(self):
-        """One engine tick: admit, then decode one token per active slot."""
+        """One engine tick: admit, then decode one token per active slot.
+        Returns the requests that finished this tick (a request admitted
+        and retired within one tick — max_new == 1 — appears only here)."""
         self._admit()
         # flush prefill-produced first tokens
         for i, tok in list(self._pending.items()):
@@ -192,6 +344,8 @@ class ServingEngine:
             self.params, self.ad_stack, jnp.asarray(toks),
             jnp.asarray(self.adapter_ids), self.cache)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        retired: List[int] = []
+        finished: List[Request] = []
         for i, req in enumerate(self._active):
             if req is None:
                 continue
@@ -201,13 +355,21 @@ class ServingEngine:
             if len(req.out) >= req.max_new:
                 req.done = True
                 self._active[i] = None
+                retired.append(i)
+                finished.append(req)
+        if self.paged and retired:
+            for i in retired:
+                self.pages.release(i)         # copy-free: free list + table
+            pos = np.array(self.cache["pos"])
+            pos[retired] = 0                  # idle slots write trash page 0
+            self.cache["pos"] = jnp.asarray(pos)
+            self.cache["block_tables"] = jnp.asarray(self.pages.block_tables)
+        return finished
 
     def run(self, max_ticks: int = 64) -> List[Request]:
         finished: List[Request] = []
         ticks = 0
         while (self._queue or any(self._active)) and ticks < max_ticks:
-            before = [r for r in self._active if r]
-            self.step()
-            finished += [r for r in before if r.done]
+            finished += self.step()
             ticks += 1
         return finished

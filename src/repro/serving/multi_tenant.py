@@ -17,6 +17,10 @@ Design decisions (DESIGN.md §3, docs/serving.md):
         precomputed tenant-stack cache with batched einsums.
       - ``"jnp"``: the pure-jnp reference — same math over the hoisted
         tenant-stack cache.  Kept as oracle and CPU fallback.
+  * with the paged KV cache (engine default) a fused decode step streams
+    BOTH pools through scalar-prefetch indirection: adapter shards via
+    ``bgmv_*_mos`` and KV pages via ``kernels.paged_attention`` — no
+    per-request adapter matrices and no per-slot KV rings in HBM.
 """
 from __future__ import annotations
 
@@ -27,6 +31,7 @@ import jax.numpy as jnp
 
 from ..core import adapters as ad
 from ..core.adapters import PER_LAYER_KEYS
+from ..kernels.bgmv.kernel import _pad_lanes
 from ..kernels.bgmv.ops import bgmv_mos
 from ..kernels.mos_gather.ops import materialize_tenant_stack
 from ..models.transformer import Hooks
@@ -75,6 +80,19 @@ def stack_tenants(plan: ad.AdapterPlan, states: Sequence[Any],
                 tr["a_pool"], st["idx_a"], interpret)
             st["mt_b"] = _materialize_tenant_stack(
                 tr["b_pool"], st["idx_b"], interpret)
+    if plan.method in ("mos", "pure"):
+        # lane-pad the pools ONCE for the fused kernels (shared-static
+        # derived leaves, like mt_a/mt_b) — otherwise every decode step
+        # would re-pad the whole (T, n, s) pool in-call
+        for tname, st in out_st.items():
+            tr = out_tr[tname]
+            for pk, lk in (("a_pool", "a_pool_lanes"),
+                           ("b_pool", "b_pool_lanes")):
+                s = tr[pk].shape[-1]
+                sp = _pad_lanes(s)   # the width the kernels assert against
+                if sp != s:
+                    st[lk] = jnp.pad(tr[pk],
+                                     ((0, 0), (0, 0), (0, sp - s)))
     return {"trainable": out_tr, "static": out_st}
 
 
@@ -135,14 +153,20 @@ class MTHooks(Hooks):
             f"multi-tenant serving not implemented for {m!r}")
 
     def _fused_decode(self, name, x2):
-        """Pool-resident BGMV: x2 (B, h) → (B, o), no materialized A/B."""
+        """Pool-resident BGMV: x2 (B, h) → (B, o), no materialized A/B.
+        Reads the lane-padded pool copies when ``stack_tenants`` built them
+        (non-128-multiple shard lengths) so nothing re-pads per step."""
         cfg = self.plan.cfg
         tr = self.shared["trainable"][name]
+        sst = self.shared["static"].get(name, {})
         st = self.node["static"][name]
-        r = self.plan.geoms[name].r
-        y = bgmv_mos(x2, tr["a_pool"], tr["b_pool"], self.ids,
-                     st["idx_a"], st["idx_b"],
-                     scale=cfg.scaling(r), interpret=self.interpret)
+        g = self.plan.geoms[name]
+        y = bgmv_mos(x2,
+                     sst.get("a_pool_lanes", tr["a_pool"]),
+                     sst.get("b_pool_lanes", tr["b_pool"]),
+                     self.ids, st["idx_a"], st["idx_b"],
+                     scale=cfg.scaling(g.r), interpret=self.interpret,
+                     shard_len_b=g.shard_len_b)
         return y.astype(x2.dtype)
 
     def __call__(self, local: str, x):

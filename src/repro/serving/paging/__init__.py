@@ -1,0 +1,10 @@
+"""Paged KV-cache subsystem: block-table page-pool management for the
+serving engine (docs/serving.md §Paged KV cache).
+
+Device layout and kernels live in ``repro.kernels.paged_attention``; this
+package owns the host-side policy (free lists, admission gating, block
+tables) plus dense↔paged cache conversion.
+"""
+from .manager import PagePool, TRASH_PAGE, paginate_cache
+
+__all__ = ["PagePool", "TRASH_PAGE", "paginate_cache"]

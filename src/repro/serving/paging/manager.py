@@ -1,0 +1,148 @@
+"""Host-side page-pool manager for the paged KV cache.
+
+The device side is dumb on purpose — a ``(P, page_size, KVp, hd)`` slab per
+attention layer plus int32 block tables — so all allocation policy lives
+here, in plain python, where the serving engine's admission loop runs:
+
+  * a LIFO free list over page ids ``1..P-1`` (page **0 is the reserved
+    trash page**: every unused block-table entry points at it, so decode
+    writes from idle/retired slots and masked kernel DMAs land somewhere
+    harmless and in-bounds);
+  * per-slot ownership — ``alloc(slot, n_tokens)`` carves out
+    ``ceil(n_tokens / page_size)`` pages and writes the slot's block-table
+    row; ``release(slot)`` returns them and re-points the row at trash;
+  * admission gating — the engine admits a request only when its *whole
+    trajectory* (prompt + max_new tokens) fits in the free list
+    (``can_admit``), vLLM-style, so decode can never run out of pages
+    mid-flight.
+
+Slot reuse is copy-free: retirement only edits the free list and the block
+table; no KV bytes move.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+TRASH_PAGE = 0
+
+
+@dataclasses.dataclass
+class PagePool:
+    """Free-list allocator over a global KV page pool."""
+
+    num_pages: int          # total pages P (including trash page 0)
+    page_size: int
+    slots: int
+    max_pages_per_slot: int
+
+    def __post_init__(self):
+        assert self.num_pages >= 2, "need at least one page past trash"
+        # LIFO: lowest ids pop first (makes traces deterministic/testable)
+        self._free: List[int] = list(range(self.num_pages - 1, 0, -1))
+        self._owned: Dict[int, List[int]] = {}
+        self.block_tables = np.full(
+            (self.slots, self.max_pages_per_slot), TRASH_PAGE, np.int32)
+
+    # ------------------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 1) // self.page_size)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        n = self.pages_for(n_tokens)
+        return n <= self.free_pages and n <= self.max_pages_per_slot
+
+    def alloc(self, slot: int, n_tokens: int) -> List[int]:
+        """Carve pages for ``n_tokens`` and point ``slot``'s block-table row
+        at them.  The caller must have checked :meth:`can_admit`."""
+        assert slot not in self._owned, f"slot {slot} already owns pages"
+        n = self.pages_for(n_tokens)
+        assert n <= self.free_pages, (n, self.free_pages)
+        assert n <= self.max_pages_per_slot, (n, self.max_pages_per_slot)
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned[slot] = pages
+        self.block_tables[slot, :] = TRASH_PAGE
+        self.block_tables[slot, :n] = pages
+        return pages
+
+    def release(self, slot: int) -> List[int]:
+        """Return ``slot``'s pages to the free list (no-op if it owns none)
+        and park its block-table row on the trash page."""
+        pages = self._owned.pop(slot, [])
+        self._free.extend(reversed(pages))
+        self.block_tables[slot, :] = TRASH_PAGE
+        return pages
+
+    # ------------------------------------------------------------------
+
+    def check_invariants(self):
+        """Every page is either free or owned by exactly one slot; trash
+        page 0 is neither; block-table rows agree with ownership."""
+        free = set(self._free)
+        owned = [p for pages in self._owned.values() for p in pages]
+        assert len(owned) == len(set(owned)), "page owned twice"
+        assert not (free & set(owned)), "page both free and owned"
+        assert TRASH_PAGE not in free and TRASH_PAGE not in owned
+        assert free | set(owned) == set(range(1, self.num_pages))
+        for slot, pages in self._owned.items():
+            row = self.block_tables[slot]
+            assert list(row[:len(pages)]) == pages, (slot, row, pages)
+            assert (row[len(pages):] == TRASH_PAGE).all()
+        for slot in range(self.slots):
+            if slot not in self._owned:
+                assert (self.block_tables[slot] == TRASH_PAGE).all()
+
+
+def paginate_cache(cache, page_size: int):
+    """Convert a dense engine cache into an equivalent paged one.
+
+    Scatters each slot's ring K/V into freshly-assigned pages (slot-major:
+    slot ``b`` owns pages ``1 + b·mp .. (b+1)·mp``) and returns
+    ``(paged_cache, pool)``.  Requires the full ring layout (slot i == pos
+    i, i.e. no SWA wraparound): ring length must be a multiple of
+    ``page_size``.  Migration/debug utility — also what lets tests compare
+    paged decode against a dense cache holding bit-identical KV.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    ring = cache["kvpos"].shape[1]
+    B = cache["pos"].shape[0]
+    assert ring % page_size == 0, (ring, page_size)
+    mp = ring // page_size
+    pool = PagePool(num_pages=B * mp + 1, page_size=page_size, slots=B,
+                    max_pages_per_slot=mp)
+    for b in range(B):
+        pool.alloc(b, ring)
+
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name not in ("k", "v"):
+            return leaf
+        # (count, B, ring, KVp, hd) → pool (count, 1+B·mp, ps, KVp, hd)
+        count = leaf.shape[0]
+        pages = leaf.reshape((count, B * mp, page_size) + leaf.shape[3:])
+        trash = jnp.zeros((count, 1, page_size) + leaf.shape[3:], leaf.dtype)
+        return jnp.concatenate([trash, pages], axis=1)
+
+    paged = jax.tree_util.tree_map_with_path(one, cache)
+    del paged["kvpos"]
+
+    def rename(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                out[{"k": "kp", "v": "vp"}.get(k, k)] = rename(v)
+            return out
+        return node
+
+    paged = rename(paged)
+    paged["block_tables"] = jnp.asarray(pool.block_tables)
+    return paged, pool

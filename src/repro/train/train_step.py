@@ -178,7 +178,7 @@ def make_compressed_train_step(model, opt_cfg: AdamWConfig, rules):
             metrics["loss"] = loss
             return new_tr, new_opt, efb, metrics
 
-        from jax import shard_map
+        from ..distributed.sharding import shard_map
         da = data_axes if len(data_axes) > 1 else data_axes[0]
         bspec = P(da)
         return shard_map(

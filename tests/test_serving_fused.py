@@ -52,6 +52,33 @@ def test_bgmv_mos_parity(B, T, dtype, tol):
                                rtol=tol, atol=tol * 10)
 
 
+@pytest.mark.parametrize("s_a,s_b", [(24, 20), (13, 7), (128, 130)])
+def test_bgmv_mos_lane_padding_parity(s_a, s_b):
+    """Shard lengths that are not 128-lane multiples go through the
+    zero-pad-to-lane-width wrapper path and must still match the refs."""
+    T, n, r, l, B = 3, 10, 5, 4, 4
+    h = l * s_a
+    a_pool = jax.random.normal(jax.random.key(0), (T, n, s_a))
+    b_pool = jax.random.normal(jax.random.key(1), (T, n, s_b))
+    x = jax.random.normal(jax.random.key(2), (B, h))
+    ids = jax.random.randint(jax.random.key(3), (B,), 0, T)
+    idx_a = jax.random.randint(jax.random.key(4), (r, l), 0, n)
+    idx_b = jax.random.randint(jax.random.key(5), (r, l), 0, n)
+    u = bgmv_shrink_mos(x, a_pool, ids, idx_a)
+    ur = bgmv_shrink_mos_ref(x, a_pool, ids, idx_a)
+    np.testing.assert_allclose(np.asarray(u), np.asarray(ur),
+                               rtol=1e-5, atol=1e-4)
+    y = bgmv_expand_mos(u, b_pool, ids, idx_b)
+    yr = bgmv_expand_mos_ref(u, b_pool, ids, idx_b)
+    assert y.shape == (B, l * s_b)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-5, atol=1e-4)
+    yy = bgmv_mos(x, a_pool, b_pool, ids, idx_a, idx_b, scale=0.5)
+    yyr = bgmv_mos_ref(x, a_pool, b_pool, ids, idx_a, idx_b, scale=0.5)
+    np.testing.assert_allclose(np.asarray(yy), np.asarray(yyr),
+                               rtol=1e-5, atol=1e-4)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_materialize_stack_parity(dtype):
     T, n, s, r, l = 3, 16, 32, 5, 4
