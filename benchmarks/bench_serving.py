@@ -18,6 +18,19 @@ Measures, for T tenants × B concurrent requests on the smoke model:
         the B active requests' *unique pool shards* stream from HBM:
         O(B·e·s)-class traffic (shared shards are fetched once per row).
 
+Also runs a **staggered-arrival sweep** over the full engine: requests
+with mixed prompt lengths arrive over time and are served by either the
+unified token-budget step (chunked prefill packed alongside decode, one
+jitted executable) or the legacy two-phase scheduler (shape-varying
+prefill per admission group).  Recorded per scheduling mode:
+  * time-to-first-token (TTFT) from arrival, mean/max over requests —
+    the legacy path pays a recompile for every new (group, S) shape and
+    stalls decoders for a full-prompt prefill; the unified path admits
+    in page chunks at a fixed shape;
+  * inter-token latency (ITL) — mean tick-to-tick gap between a
+    request's generated tokens;
+  * jitted-step compilations observed across the workload.
+
 Writes BENCH_serving.json at the repo root so the perf trajectory is
 recorded from PR 1 onward.
 
@@ -38,7 +51,8 @@ from repro.configs import get_config, smoke
 from repro.core import AdapterConfig
 from repro.models import Model
 from repro.models.transformer import arch_stacks, cache_seq_len
-from repro.serving import PagePool, make_serve_step, stack_tenants
+from repro.serving import (PagePool, Request, ServingEngine, make_serve_step,
+                           stack_tenants)
 
 MAX_LEN = 32
 PAGE_SIZE = 8
@@ -113,6 +127,65 @@ def bench_one(model, params, stack, T: int, B: int, backend: str,
     return {"ms_per_step": dt * 1e3, "tokens_per_sec": B / dt}
 
 
+def bench_staggered(model, params, states, unified: bool, fast: bool = False):
+    """Staggered arrivals through the real engine: per-request TTFT and
+    inter-token latency under unified vs legacy scheduling."""
+    slots, max_len = 4, 48
+    lens = [3, 9, 14, 26] if not fast else [3, 9]
+    arrivals = {}          # rid → (arrival wall-clock, Request)
+    first_tok = {}
+    tok_times = {}
+    eng = ServingEngine(model, params, states, slots=slots, max_len=max_len,
+                        page_size=PAGE_SIZE, unified=unified)
+    schedule = []          # (tick, Request) — one new request every 2 ticks
+    for i, L in enumerate(lens * 2):
+        schedule.append((2 * i, Request(
+            rid=i, prompt=(np.arange(L, dtype=np.int32) % 90) + 4,
+            adapter_id=i % len(states), max_new=6)))
+    pf_traces = []
+    orig_prefill = eng.prefill
+    eng.prefill = lambda *a, **k: (pf_traces.append(1), orig_prefill(*a, **k))[1]
+    done, tick = [], 0
+    t0 = time.perf_counter()
+    while (schedule or eng._queue or any(eng._active)) and tick < 400:
+        while schedule and schedule[0][0] <= tick:
+            _, req = schedule.pop(0)
+            arrivals[req.rid] = (time.perf_counter(), req)
+            eng.submit(req)
+        done += eng.step()
+        now = time.perf_counter()
+        for rid, (t_arr, req) in arrivals.items():
+            if req.out and rid not in first_tok:
+                first_tok[rid] = now - t_arr
+            if req.out:
+                tok_times.setdefault(rid, []).append((len(req.out), now))
+        tick += 1
+    wall = time.perf_counter() - t0
+    itls = []
+    for rid, seen in tok_times.items():
+        # tick timestamps where the token count advanced
+        stamps = []
+        last = 0
+        for n, t in seen:
+            if n > last:
+                stamps.append(t)
+                last = n
+        itls += [b - a for a, b in zip(stamps, stamps[1:])]
+    ttfts = list(first_tok.values())
+    compiles = (len(eng.unified_traces) if unified
+                else len(pf_traces))   # legacy: distinct prefill launches
+    return {
+        "mode": "unified" if unified else "legacy",
+        "requests": len(arrivals), "completed": len(done),
+        "wall_s": wall, "ticks": tick,
+        "ttft_ms_mean": 1e3 * float(np.mean(ttfts)),
+        "ttft_ms_max": 1e3 * float(np.max(ttfts)),
+        "itl_ms_mean": 1e3 * float(np.mean(itls)),
+        "itl_ms_max": 1e3 * float(np.max(itls)),
+        "step_compilations" if unified else "prefill_calls": compiles,
+    }
+
+
 def main(fast: bool = False):
     cfg = smoke(get_config("granite-3-2b"))
     model = Model(cfg, ACFG)
@@ -144,6 +217,15 @@ def main(fast: bool = False):
                           f"{r['tokens_per_sec']:8.1f} tok/s  "
                           f"kv={kb[cache_mode + '_resident']:>8d}B "
                           f"fused={gb['fused_pool_resident']:>8d}B")
+    stag_states = [model.init_adapter(jax.random.key(100 + t))
+                   for t in range(2)]
+    staggered = []
+    for unified in (True, False):
+        r = bench_staggered(model, params, stag_states, unified, fast=fast)
+        staggered.append(r)
+        print(f"staggered {r['mode']:7s} ttft={r['ttft_ms_mean']:8.1f} ms "
+              f"(max {r['ttft_ms_max']:8.1f})  itl={r['itl_ms_mean']:7.1f} ms"
+              f"  ticks={r['ticks']}")
     report = {
         "config": {"model": "granite-3-2b (smoke)", "adapter": "mos",
                    "equiv_rank": ACFG.equiv_rank, "rank": ACFG.rank,
@@ -155,6 +237,7 @@ def main(fast: bool = False):
                             "gather_bytes_per_step is the analytic HBM "
                             "traffic model that holds on hardware.")},
         "sweep": rows,
+        "staggered_arrival": staggered,
     }
     OUT.write_text(json.dumps(report, indent=2) + "\n")
     print(f"wrote {OUT}")

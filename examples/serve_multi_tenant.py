@@ -4,9 +4,10 @@ many customized models served concurrently from one base.
 Trains two tiny MoS customizations (different tasks), then serves a mixed
 request stream through the continuous-batching engine: per-request adapter
 routing (BGMV), paged KV cache (the default) with copy-free slot reuse,
-mixed-length single-call admission, greedy decoding.  Prompts here have
-*different lengths* on purpose — they all prefill in one left-padded call
-and each holds only the pages its tokens need.
+unified token-budget scheduling, greedy decoding.  Prompts here have
+*different lengths* on purpose — each tick packs their prefill chunks
+alongside the active decode tokens in ONE shape-static jitted call, and
+each request holds only the pages its tokens need.
 
 Run: PYTHONPATH=src python examples/serve_multi_tenant.py
 """

@@ -21,6 +21,13 @@ Pages past the request's length are masked (and their compute skipped with
 ``pl.when``), but their DMA still issues — the engine keeps every unused
 block-table entry pointing at the reserved trash page 0 so those DMAs stay
 in bounds and never alias live data.
+
+One kernel owns the page walk: ``paged_chunk_pallas`` streams a static
+Q-token query block per request with per-query positions — the unified
+serving step's chunked-prefill + decode walk (causal within the chunk,
+one page stream per row instead of one per token).  ``paged_decode_pallas``
+is its ``q_len == 1`` specialization (one decode token per request), kept
+as the thin entry point the legacy decode path and tests call.
 """
 from __future__ import annotations
 
@@ -37,11 +44,17 @@ except ImportError:  # pragma: no cover
     pltpu = None
 
 NEG_INF = -1e30
+INVALID_POS = 2**30     # matches models.attention.INVALID_POS
 
 
-def _paged_decode_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_ref, l_ref, acc_ref, *, page_size: int,
-                         window: int, scale: float):
+def _paged_chunk_kernel(bt_ref, maxpos_ref, pos_ref, q_ref, k_ref, v_ref,
+                        o_ref, m_ref, l_ref, acc_ref, *, page_size: int,
+                        window: int, scale: float, invalid_pos: int):
+    """Multi-query-token generalization of the decode kernel: the (1, Q)
+    query block holds one request's packed chunk span (or its single decode
+    token, Q-1 pads).  Per-query positions ride in a VMEM int32 block;
+    ``maxpos`` (the row's largest valid position) is a scalar-prefetch
+    operand so fully-future pages still skip compute via ``pl.when``."""
     b = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -51,29 +64,33 @@ def _paged_decode_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    pos_b = pos_ref[b]                                   # query position
+    max_b = maxpos_ref[b]                  # largest valid query position
 
-    @pl.when(j * page_size <= pos_b)                     # page holds live kv
+    @pl.when(j * page_size <= max_b)       # page holds kv some query sees
     def _update():
-        q = q_ref[0].astype(jnp.float32)                 # (KVp, G, hd)
+        q = q_ref[0].astype(jnp.float32)                 # (Q, KVp, G, hd)
         k = k_ref[0].astype(jnp.float32)                 # (ps, KVp, hd)
         v = v_ref[0].astype(jnp.float32)
-        s = jnp.einsum("kgd,skd->kgs", q, k,
+        posq = pos_ref[0]                                # (Q,) int32
+        s = jnp.einsum("qkgd,skd->qkgs", q, k,
                        preferred_element_type=jnp.float32) * scale
         idx = (j * page_size +
-               jax.lax.broadcasted_iota(jnp.int32, (1, 1, page_size), 2))
-        mask = idx <= pos_b                              # causal over pages
+               jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, page_size), 3))
+        pq = posq[:, None, None, None]
+        # causal within the chunk AND against the paged history; pad
+        # queries (pos == invalid) mask everything → exact zero rows
+        mask = (idx <= pq) & (pq < invalid_pos)
         if window > 0:
-            mask &= (pos_b - idx) < window
+            mask &= (pq - idx) < window
         s = jnp.where(mask, s, NEG_INF)
-        m_page = jnp.max(s, axis=-1)                     # (KVp, G)
+        m_page = jnp.max(s, axis=-1)                     # (Q, KVp, G)
         m_new = jnp.maximum(m_ref[...], m_page)
         p = jnp.exp(s - m_new[..., None])
         p = jnp.where(mask, p, 0.0)
         c = jnp.exp(m_ref[...] - m_new)
         l_ref[...] = l_ref[...] * c + jnp.sum(p, axis=-1)
         acc_ref[...] = (acc_ref[...] * c[..., None] +
-                        jnp.einsum("kgs,skd->kgd", p, v,
+                        jnp.einsum("qkgs,skd->qkgd", p, v,
                                    preferred_element_type=jnp.float32))
         m_ref[...] = m_new
 
@@ -84,6 +101,63 @@ def _paged_decode_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_chunk_pallas(q, k_pages, v_pages, block_tables, pos,
+                       window: int = 0, interpret: bool = True):
+    """q (B, Q, KVp, G, hd), k/v_pages (P, ps, KVp, hd), block_tables
+    (B, max_pages), pos (B, Q) per-query positions → (B, Q, KVp, G, hd).
+
+    The unified serving step's page walk: each grid row streams one
+    request's pages once for its whole Q-token chunk span (vs Q separate
+    decode walks), applying causal-within-chunk masking of the multi-token
+    query span against the paged KV at the request's offsets.  Pad queries
+    carry ``INVALID_POS`` and produce exact zero rows.  ``Q == 1`` with
+    valid positions is exactly :func:`paged_decode_pallas`.
+    """
+    B, Q, KVp, G, hd = q.shape
+    P, ps, KVp2, hd2 = k_pages.shape
+    assert (KVp2, hd2) == (KVp, hd), (k_pages.shape, q.shape)
+    B2, max_pages = block_tables.shape
+    assert B2 == B, (B2, B)
+    scale = 1.0 / math.sqrt(hd)
+    valid = pos < INVALID_POS
+    maxpos = jnp.max(jnp.where(valid, pos, -1), axis=1).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, Q),
+                         lambda b, j, bt_ref, mp_ref: (b, 0)),
+            pl.BlockSpec((1, Q, KVp, G, hd),
+                         lambda b, j, bt_ref, mp_ref: (b, 0, 0, 0, 0)),
+            pl.BlockSpec(
+                (1, ps, KVp, hd),
+                lambda b, j, bt_ref, mp_ref:
+                    (bt_ref[b * max_pages + j], 0, 0, 0)),
+            pl.BlockSpec(
+                (1, ps, KVp, hd),
+                lambda b, j, bt_ref, mp_ref:
+                    (bt_ref[b * max_pages + j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, KVp, G, hd),
+                               lambda b, j, bt_ref, mp_ref: (b, 0, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Q, KVp, G), jnp.float32),
+            pltpu.VMEM((Q, KVp, G), jnp.float32),
+            pltpu.VMEM((Q, KVp, G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_chunk_kernel, page_size=ps, window=window,
+                          scale=scale, invalid_pos=INVALID_POS),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Q, KVp, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.reshape(-1), maxpos, pos.astype(jnp.int32), q,
+      k_pages, v_pages)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
 def paged_decode_pallas(q, k_pages, v_pages, block_tables, pos,
                         window: int = 0, interpret: bool = True):
     """q (B, KVp, G, hd), k/v_pages (P, ps, KVp, hd), block_tables
@@ -91,42 +165,13 @@ def paged_decode_pallas(q, k_pages, v_pages, block_tables, pos,
 
     One decode step of attention over a paged KV cache: request ``b``
     attends logical positions ``0 .. pos[b]`` gathered page-by-page through
-    its block-table row.  ``interpret=False`` compiles for real TPUs.
+    its block-table row.  The ``q_len == 1`` specialization of
+    :func:`paged_chunk_pallas` — one kernel owns the page walk, so
+    masking/rescale/finalize logic can never diverge between decode and
+    chunk serving (``tests/test_unified.py`` pins the equivalence).
+    ``interpret=False`` compiles for real TPUs.
     """
-    B, KVp, G, hd = q.shape
-    P, ps, KVp2, hd2 = k_pages.shape
-    assert (KVp2, hd2) == (KVp, hd), (k_pages.shape, q.shape)
-    B2, max_pages = block_tables.shape
-    assert B2 == B, (B2, B)
-    scale = 1.0 / math.sqrt(hd)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(B, max_pages),
-        in_specs=[
-            pl.BlockSpec((1, KVp, G, hd),
-                         lambda b, j, bt_ref, pos_ref: (b, 0, 0, 0)),
-            pl.BlockSpec(
-                (1, ps, KVp, hd),
-                lambda b, j, bt_ref, pos_ref:
-                    (bt_ref[b * max_pages + j], 0, 0, 0)),
-            pl.BlockSpec(
-                (1, ps, KVp, hd),
-                lambda b, j, bt_ref, pos_ref:
-                    (bt_ref[b * max_pages + j], 0, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, KVp, G, hd),
-                               lambda b, j, bt_ref, pos_ref: (b, 0, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((KVp, G), jnp.float32),
-            pltpu.VMEM((KVp, G), jnp.float32),
-            pltpu.VMEM((KVp, G, hd), jnp.float32),
-        ],
-    )
-    return pl.pallas_call(
-        functools.partial(_paged_decode_kernel, page_size=ps, window=window,
-                          scale=scale),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, KVp, G, hd), q.dtype),
-        interpret=interpret,
-    )(block_tables.reshape(-1), pos, q, k_pages, v_pages)
+    out = paged_chunk_pallas(q[:, None], k_pages, v_pages, block_tables,
+                             pos[:, None].astype(jnp.int32),
+                             window=window, interpret=interpret)
+    return out[:, 0]

@@ -21,9 +21,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import paged_decode_pallas
-
-INVALID_POS = 2**30     # matches models.attention.INVALID_POS
+from .kernel import INVALID_POS, paged_chunk_pallas, paged_decode_pallas
 
 
 def _flat_slots(block_tables, positions, num_pages: int, page_size: int):
@@ -96,5 +94,21 @@ def paged_attention_decode(q, k_pages, v_pages, block_tables, pos,
     return out[:, None]
 
 
-__all__ = ["paged_attention_decode", "paged_decode_pallas", "gather_pages",
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention_chunk(q, k_pages, v_pages, block_tables, pos,
+                          window: int = 0, interpret: bool = True):
+    """Chunk-span paged attention: q (B, Q, KVp, G, hd), pos (B, Q)
+    per-query positions (``INVALID_POS`` marks pads → exact zero rows).
+
+    The unified serving step's attention read: request ``b``'s queries
+    attend logical positions ``0 .. pos[b, i]`` through one block-table
+    page stream shared by the whole chunk (causal within the chunk comes
+    for free because the chunk's K/V is scattered into the pages first).
+    """
+    return paged_chunk_pallas(q, k_pages, v_pages, block_tables, pos,
+                              window=window, interpret=interpret)
+
+
+__all__ = ["paged_attention_decode", "paged_attention_chunk",
+           "paged_decode_pallas", "paged_chunk_pallas", "gather_pages",
            "write_prefill_pages", "write_decode_page", "INVALID_POS"]

@@ -40,4 +40,35 @@ def paged_attention_decode_ref(q, k_pages, v_pages, block_tables, pos,
     return out.astype(q.dtype)
 
 
-__all__ = ["paged_attention_decode_ref"]
+def paged_attention_chunk_ref(q, k_pages, v_pages, block_tables, pos,
+                              window: int = 0, invalid_pos: int = 2**30):
+    """q (B, Q, KVp, G, hd), pools (P, ps, KVp, hd), block_tables
+    (B, max_pages), pos (B, Q) per-query positions → (B, Q, KVp, G, hd).
+
+    Oracle for ``paged_chunk_pallas``: gathers the block-table view dense
+    and applies the same causal-within-chunk mask ``idx <= pos[b, i]``;
+    pad queries (``pos == invalid_pos``) mask everything and return exact
+    zero rows.
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    k = gather_pages(k_pages, block_tables)          # (B, S, KVp, hd)
+    v = gather_pages(v_pages, block_tables)
+    S = k.shape[1]
+    idx = jnp.arange(S, dtype=jnp.int32)[None, None, :]      # (1, 1, S)
+    pq = pos[:, :, None]                                     # (B, Q, 1)
+    mask = (idx <= pq) & (pq < invalid_pos)
+    if window > 0:
+        mask &= (pq - idx) < window
+    s = jnp.einsum("bqkgd,bskd->bqkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[:, :, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bqkgs,bskd->bqkgd", p / jnp.maximum(l, 1e-30),
+                     v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+__all__ = ["paged_attention_decode_ref", "paged_attention_chunk_ref"]

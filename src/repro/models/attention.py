@@ -233,6 +233,36 @@ def paged_decode_attention(
     return decode_attention(q, k, v, pos, kvpos, window=window)
 
 
+def paged_chunk_attention(
+    q: jax.Array,            # (B, Q, KVp, G, hd) — packed chunk spans
+    k_pages: jax.Array,      # (P, page_size, KVp, hd) — global page pool
+    v_pages: jax.Array,
+    block_tables: jax.Array, # (B, max_pages) int32 page ids
+    pos: jax.Array,          # (B, Q) per-query positions; INVALID_POS pads
+    *, window: int = 0, backend: str = "pallas", interpret: bool = True,
+) -> jax.Array:
+    """Multi-token chunk-span attention over a paged KV cache — the
+    unified serving step's read path (decode rows are chunks of length 1).
+
+    The chunk's own K/V is scattered into the pages *before* this call, so
+    the mask ``idx <= pos[b, i]`` is simultaneously causal-within-chunk
+    and causal against the request's paged history.  ``backend="pallas"``
+    streams each request's pages ONCE for the whole span
+    (``kernels.paged_attention.paged_chunk_pallas``); ``"ref"`` is the
+    dense-gather oracle (``paged_attention_chunk_ref`` — the same one the
+    kernel parity tests pin against).  Pad queries return exact zero rows.
+    """
+    from ..kernels.paged_attention.ops import paged_attention_chunk
+    from ..kernels.paged_attention.ref import paged_attention_chunk_ref
+    if backend == "pallas":
+        return paged_attention_chunk(q, k_pages, v_pages, block_tables, pos,
+                                     window=window, interpret=interpret)
+    assert backend == "ref", f"unknown paged attention backend {backend!r}"
+    return paged_attention_chunk_ref(q, k_pages, v_pages, block_tables, pos,
+                                     window=window,
+                                     invalid_pos=int(INVALID_POS))
+
+
 def decode_attention(
     q: jax.Array,            # (B, 1, KV, G, hd)
     k: jax.Array,            # (B, S, KV, hd) — may be sequence-sharded

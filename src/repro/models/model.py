@@ -1,5 +1,6 @@
 """Model facade: parameter init (concrete or abstract), train forward,
-prefill, and decode — for every assigned architecture family.
+prefill, decode, and the unified token-budget serving forward — for every
+assigned architecture family.
 
 All entry points are pure functions over pytrees; ``Model`` only binds the
 configs and the adapter plan.  ``abstract=True`` init paths return
@@ -344,6 +345,63 @@ class Model:
                                 name, count, pattern, mode="decode",
                                 positions=pos[:, None], kvpos=kvpos, cache=cache[name],
                                 enc_out=None, remat="none",
+                                multi_stack=self.multi_stack,
+                                hooks_factory=hooks_factory,
+                                stack_axes=_subtree(self.axes, name),
+                                page=page)
+            new_cache[name] = nc
+        return new_cache, self._head_inputs(params, x)
+
+
+    def unified_forward(self, params, ad_state, tokens, positions, cache,
+                        hooks_factory=None, attn_backend: str = "pallas",
+                        attn_interpret: bool = True):
+        """Unified token-budget step: chunked prefill + decode in ONE
+        shape-static forward over a paged cache.
+
+        ``tokens``/``positions`` are (B, Q) packed spans — row ``b`` holds
+        slot ``b``'s tokens for this tick: a page-aligned prefill chunk
+        (positions ``cursor .. cursor+q-1``), a single decode token at
+        column 0 (position ``len so far``), or all pads.  Pads carry
+        ``INVALID_POS``: their K/V writes drop out of the page scatter and
+        their attention rows come back exact zero.  Every span's K/V is
+        scattered into the request's pages before the span attends, so the
+        single mask ``kv_idx <= pos`` is causal within the chunk and
+        against the paged history simultaneously.
+
+        Attention-only families only (mamba state is a scan over all
+        tokens — a packed multi-request buffer would contaminate it; those
+        archs keep the legacy two-phase path).  Returns
+        ``(new_cache, hidden (B, Q, d))`` — the engine reads the logits
+        column of each row's last valid token.
+        """
+        cfg = self.cfg
+        assert "block_tables" in cache, "unified step needs a paged cache"
+        assert cfg.family in ("dense", "moe"), cfg.family
+        ad_shared, _ = ad.split_scan(self.plan, ad_state,
+                                     [s.name for s in self.specs])
+        ad_xs = organize_adapter_xs(self.plan, ad_state, cfg)
+        B, Q = tokens.shape
+        positions = jnp.asarray(positions, jnp.int32)
+        x = self._embed(params, tokens)
+        if cfg.pos_embed == "learned":
+            emb = params["pos_embed"].astype(x.dtype)
+            x = x + jnp.take(emb, jnp.clip(positions, 0, emb.shape[0] - 1),
+                             axis=0)
+
+        page = {"bt": cache["block_tables"], "backend": attn_backend,
+                "interpret": attn_interpret}
+        valid = positions < INVALID_POS
+        new_pos = jnp.maximum(
+            cache["pos"],
+            jnp.max(jnp.where(valid, positions + 1, 0), axis=1))
+        new_cache = {"pos": new_pos, "block_tables": cache["block_tables"]}
+        for name, count, pattern in self.stacks:
+            sp = _subtree(params, name)
+            x, nc = stack_apply(x, sp, cfg, self.plan, ad_shared, ad_xs[name],
+                                name, count, pattern, mode="unified",
+                                positions=positions, kvpos=None,
+                                cache=cache[name], enc_out=None, remat="none",
                                 multi_stack=self.multi_stack,
                                 hooks_factory=hooks_factory,
                                 stack_axes=_subtree(self.axes, name),

@@ -27,7 +27,8 @@ from ..core.types import LinearTypeSpec
 from ..distributed.context import (constrain_batch, constrain_delta_out,
                                    constrain_use)
 from .attention import (INVALID_POS, banded_attention, blockwise_attention,
-                        decode_attention, paged_decode_attention)
+                        decode_attention, paged_chunk_attention,
+                        paged_decode_attention)
 from ..kernels.paged_attention.ops import (write_decode_page,
                                            write_prefill_pages)
 from .layers import ParamFactory, apply_rope, linear, norm_apply, init_norm
@@ -344,7 +345,22 @@ def attn_apply(x, p, cfg, hooks: Hooks, prefix, *, mode, positions, kvpos,
         k = apply_rope(k, positions, cfg.rope_theta)
 
     new_cache = {}
-    if mode in ("train", "prefill") or cache is None:
+    if mode == "unified":
+        # unified token-budget step: each row is one request's packed span
+        # (a prefill chunk, a single decode token at column 0, or all
+        # pads).  Scatter the span's K/V into the request's pages FIRST
+        # (INVALID_POS pads drop out), then attend the whole span through
+        # one block-table page walk — the mask ``idx <= pos`` is causal
+        # within the chunk and against the paged history at once.
+        pos2 = jnp.broadcast_to(positions, (B, S)).astype(jnp.int32)
+        nk = write_prefill_pages(cache["kp"], k, page["bt"], pos2)
+        nv = write_prefill_pages(cache["vp"], v, page["bt"], pos2)
+        out = paged_chunk_attention(q, nk, nv, page["bt"], pos2,
+                                    window=window,
+                                    backend=page.get("backend", "pallas"),
+                                    interpret=page.get("interpret", True))
+        new_cache = {"kp": nk, "vp": nv}
+    elif mode in ("train", "prefill") or cache is None:
         if kv_src is not None:
             kvp = jnp.arange(k.shape[1], dtype=jnp.int32)
             out = blockwise_attention(q, k, v, positions, kvp, causal=False,

@@ -1,29 +1,33 @@
-"""Serving engine: jitted prefill/decode steps + a continuous-batching
-scheduler for multi-tenant adapter serving.
+"""Serving engine: one shape-static jitted token-budget step + a
+continuous-batching scheduler for multi-tenant adapter serving.
 
-The jitted steps are what the decode_* dry-run cells lower; the python-side
-``ServingEngine`` drives them for the runnable examples (admission, slot
-reuse, per-request positions, greedy sampling).
+The engine's default serving path is the **unified step**: every tick runs
+ONE jitted call over a fixed ``(slots, chunk)`` token buffer that packs,
+per slot, either the slot's single decode token (column 0) or a
+page-aligned prefill *chunk* of its prompt — so prefill streams in
+alongside decode instead of ahead of it.  Shapes never depend on the
+admitted group or the prompt-length mix, so the engine traces exactly one
+executable per lifetime, long prompts cannot stall active decoders for a
+full-prompt prefill, and prompts larger than the instantaneous free-page
+span admit chunk-by-chunk as pages free up.
+
+The legacy two-phase jitted steps (``make_prefill_step`` /
+``make_serve_step``) remain the path for mamba-bearing archs (a packed
+multi-request buffer would contaminate the scanned SSM state), for dense
+ring caches, and as the parity oracle for the unified step.
 
 Perf structure (docs/serving.md):
   * ``backend="fused"`` (default) applies adapters through the
-    pool-resident Pallas BGMV kernels; ``"jnp"`` is the reference path.
+    pool-resident Pallas BGMV kernels — the unified step flattens its
+    packed (slots, chunk) buffer to slots·chunk single-token rows so the
+    same kernels serve chunked prefill; ``"jnp"`` is the reference path.
   * ``paged=True`` (default) keeps KV state in a global **page pool**
-    behind per-request block tables instead of dense per-slot rings, so KV
-    memory scales with admitted tokens, admission is gated on free pages
-    (the whole prompt+max_new trajectory must fit — never OOM mid-decode),
-    and slot reuse is copy-free.  One decode step then streams *both*
-    pools: adapter shards via BGMV-MoS and KV pages via the
-    paged-attention kernel, each through scalar-prefetch block redirects.
-  * admission is **batched**: on attention-only archs every queued
-    admissible request — regardless of prompt length — prefills in ONE
-    left-padded jitted call that scatters K/V directly into the admitted
-    requests' pages (mamba-bearing archs group by length: left-pads would
-    contaminate the scanned SSM state).  The dense path groups by length.
-  * the decode-step cache argument is **donated**, so the KV pools / SSM
-    buffers are reused in place across ticks instead of reallocating per
-    step.  (On backends without donation support XLA falls back to a copy
-    and warns — semantics are unchanged.)
+    behind per-request block tables.  Pages are **reserved** as counts at
+    admission and **backed incrementally** as chunks/decode tokens
+    actually need them, so a fully-admitted request can never OOM
+    mid-flight while memory tracks tokens actually written.
+  * the jitted step's cache argument is **donated**, so the KV pools /
+    slot buffers are reused in place across ticks.
 """
 from __future__ import annotations
 
@@ -34,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..models.attention import INVALID_POS
 from .multi_tenant import make_mt_factory, stack_tenants
 from .paging import PagePool
 
@@ -87,6 +92,48 @@ def make_prefill_step(model, tenants: int = 0, backend: str = "fused",
     return prefill_step
 
 
+def make_unified_step(model, tenants: int = 0, backend: str = "fused",
+                      interpret: bool = True, attn_backend: str = "pallas"):
+    """The unified token-budget step: chunked prefill + decode in one
+    shape-static call.  ``tokens``/``positions`` are the packed
+    (slots, chunk) buffer; ``last_col`` (slots,) int32 names each row's
+    last valid column — only that hidden state is projected to the vocab
+    (logits (slots, V)), so decode ticks don't pay chunk× the LM head.
+
+    The returned function carries ``._traces``, a list appended to on
+    every jit trace — the compile-count regression hook: its length must
+    stay 1 for an engine lifetime regardless of the prompt-length mix.
+    """
+    traces: List[int] = []
+
+    def _head(params, h, last_col):
+        sel = h[jnp.arange(h.shape[0]), last_col]          # (slots, d)
+        return model.logits(params, sel[:, None])[:, 0]
+
+    if tenants > 0:
+        def unified_step(params, ad_stack, tokens, positions, last_col,
+                         adapter_ids, cache):
+            traces.append(1)
+            fac = make_mt_factory(adapter_ids, backend=backend,
+                                  interpret=interpret, fuse_tokens=True)
+            new_cache, h = model.unified_forward(
+                params, ad_stack, tokens, positions, cache,
+                hooks_factory=fac, attn_backend=attn_backend,
+                attn_interpret=interpret)
+            return new_cache, _head(params, h, last_col)
+        unified_step._traces = traces
+        return unified_step
+
+    def unified_step(params, ad_state, tokens, positions, last_col, cache):
+        traces.append(1)
+        new_cache, h = model.unified_forward(
+            params, ad_state, tokens, positions, cache,
+            attn_backend=attn_backend, attn_interpret=interpret)
+        return new_cache, _head(params, h, last_col)
+    unified_step._traces = traces
+    return unified_step
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -122,19 +169,42 @@ def insert_slot(batch_cache, src_cache, slot: int, src: int = 0):
 
 
 class ServingEngine:
-    """Continuous-batching engine over the jitted steps.
+    """Continuous-batching engine, unified token-budget scheduler.
 
-    Static decode batch of ``slots``; empty slots still run (their KV
-    writes land in the reserved trash page — paged — or in slots fully
-    overwritten on the next admission — dense), which keeps the decode
-    step shape-static — the same trade production engines make.
+    **Unified mode** (default on paged attention-only archs): every tick
+    is ONE jitted ``unified_step`` over a fixed ``(slots, chunk)`` token
+    buffer.  Each slot contributes its packed span for the tick:
 
-    Paged mode (default): ``PagePool`` gates admission on free pages for
-    the request's whole prompt+max_new trajectory, prefill writes pages
-    in place (copy-free admission), retirement returns pages to the free
-    list (copy-free slot reuse).  ``num_pages`` defaults to full capacity;
-    pass less to make the engine memory-bounded — queued requests then
-    wait for pages, not just for slots.
+      * a *decode* slot puts its one fed token in column 0 (position =
+        tokens written so far);
+      * an *admitting* slot puts its next prompt chunk — a page-aligned
+        ``(start, len)`` span tracked by a per-request **chunk cursor**,
+        bounded by the chunk budget and by the pages the pool can back
+        this tick;
+      * an idle/stalled slot contributes only pads (``INVALID_POS``
+        positions: page writes drop, attention rows come back zero, and
+        its logits column is never read).
+
+    Admission assigns a slot and *reserves* the trajectory's pages as a
+    count (``PagePool.reserve``); pages are *backed* chunk-by-chunk
+    (``ensure``), so a prompt larger than the instantaneous free-page span
+    still admits — the FIFO head may **oversubscribe** (reserve more than
+    is currently available) and streams in as other requests retire.  At
+    most one oversubscribed request is in flight, which keeps every
+    fully-reserved request deadlock-free.  A request's first generated
+    token falls out of the logits column of its final prompt chunk, so
+    admission→first-token needs no separate prefill call — and the engine
+    traces exactly ONE executable per lifetime (``unified._traces``).
+
+    On sliding-window archs the scheduler releases pages whose every
+    token has slid out of the window (trash-pointing their block-table
+    entries) and re-credits the reservation, so a long trajectory only
+    ever holds ~window worth of pages.
+
+    **Legacy mode** (``unified=False``, mamba-bearing archs, or
+    ``paged=False``) keeps the two-phase path: batched admission prefills
+    (one left-padded call on attention-only archs, per-length groups
+    otherwise) followed by one-token decode steps.
     """
 
     def __init__(self, model, params, tenant_states: Sequence[Any],
@@ -142,7 +212,8 @@ class ServingEngine:
                  backend: str = "fused", interpret: bool = True,
                  stack_cache: bool = True, paged: bool = True,
                  page_size: int = 8, num_pages: Optional[int] = None,
-                 attn_backend: str = "pallas"):
+                 attn_backend: str = "pallas", unified: bool = True,
+                 chunk: Optional[int] = None):
         self.model, self.params = model, params
         self.tenants = len(tenant_states)
         self.backend = backend
@@ -155,7 +226,13 @@ class ServingEngine:
                                       interpret=interpret)
         self.slots, self.max_len = slots, max_len
         self.paged = paged
-        # cache (arg 4) is donated: decode buffers are reused across ticks
+        self.window = model.cfg.sliding_window
+        # mixed-length packed/left-padded admission needs maskable
+        # (attention-only) mixers; mamba state is a scan over all tokens
+        self._mixed_ok = model.cfg.family in ("dense", "moe")
+        self.unified = bool(unified and paged and self._mixed_ok)
+        self.chunk = chunk if chunk is not None else 2 * page_size
+        # cache (last arg) is donated: decode buffers reused across ticks
         self.serve = jax.jit(
             make_serve_step(model, tenants=self.tenants, backend=backend,
                             interpret=interpret, attn_backend=attn_backend),
@@ -163,6 +240,12 @@ class ServingEngine:
         self.prefill = jax.jit(
             make_prefill_step(model, tenants=self.tenants, backend=backend,
                               interpret=interpret))
+        if self.unified:
+            ufn = make_unified_step(model, tenants=self.tenants,
+                                    backend=backend, interpret=interpret,
+                                    attn_backend=attn_backend)
+            self.unified_traces = ufn._traces
+            self.ustep = jax.jit(ufn, donate_argnums=(6,))
         self._queue: List[Request] = []
         self._active: List[Optional[Request]] = [None] * slots
         if paged:
@@ -180,29 +263,67 @@ class ServingEngine:
             self.cache = model.init_cache(slots, max_len)
         self.adapter_ids = np.zeros((slots,), np.int32)
         self._pending: Dict[int, int] = {}   # slot → first generated token
-        # mixed-length single-call admission needs maskable (attention-only)
-        # mixers; mamba state is a scan over all tokens incl. pads
-        self._mixed_ok = model.cfg.family in ("dense", "moe")
+        self._cursor: Dict[int, int] = {}    # slot → prompt tokens written
+        self._len: Dict[int, int] = {}       # slot → total tokens written
+        self._oversub_slot: Optional[int] = None
+
+    # ------------------------------------------------------------------
+    # admission bookkeeping
+    # ------------------------------------------------------------------
+
+    def _swa_cap_pages(self) -> Optional[int]:
+        """Standing page-reservation ceiling under sliding-window freeing:
+        resident pages never exceed ~window + one in-flight chunk."""
+        if self.window <= 0 or not self._mixed_ok:
+            return None
+        return (self.window + self.chunk) // self.page_size + 2
+
+    def _effective_tokens(self, need: int) -> int:
+        """Resident-token bound for a ``need``-token trajectory under the
+        unified scheduler (the full need unless the sliding window lets
+        pages recycle).  The legacy path backs whole trajectories upfront
+        (``alloc``) and must gate on the full need."""
+        cap = self._swa_cap_pages()
+        if cap is None or not self.unified:
+            return need
+        return min(need, cap * self.page_size)
+
+    @staticmethod
+    def _traj_tokens(req: Request) -> int:
+        """Tokens a request ever WRITES: the prompt plus the fed generated
+        tokens — the final generated token is appended but never fed, so
+        it needs no page."""
+        return len(req.prompt) + req.max_new - 1
 
     def submit(self, req: Request):
         req.out = []
+        need = len(req.prompt) + req.max_new
+        if need > self.max_len and (self.paged or self.window <= 0):
+            # a paged block table runs out of columns past max_len, and a
+            # FULL-attention dense ring would silently wrap and overwrite
+            # the oldest KV mid-decode.  A sliding-window dense ring is
+            # exempt: it is window-sized and wraps by design.
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new {need} > max_len "
+                f"{self.max_len}")
         if self.paged:
-            need = len(req.prompt) + req.max_new
-            if need > self.max_len:
-                raise ValueError(
-                    f"request {req.rid}: prompt+max_new {need} > max_len "
-                    f"{self.max_len}")
             # reject trajectories that could NEVER fit — otherwise the FIFO
-            # head would wait forever and livelock everything behind it
+            # head would wait forever and livelock everything behind it.
+            # (Unified mode gates on tokens actually written and, under a
+            # sliding window, on the resident bound; legacy admission
+            # backs the full trajectory upfront and must gate on it.)
             cap = min(self.pages.max_pages_per_slot, self.num_pages - 1)
-            if self.pages.pages_for(need) > cap:
+            eff = self._effective_tokens(self._traj_tokens(req)
+                                         if self.unified else need)
+            if self.pages.pages_for(eff) > cap:
                 raise ValueError(
-                    f"request {req.rid}: needs {self.pages.pages_for(need)} "
-                    f"pages but the pool can ever free at most {cap}")
+                    f"request {req.rid}: needs {self.pages.pages_for(eff)} "
+                    f"resident pages but the pool can ever free at most "
+                    f"{cap}")
         self._queue.append(req)
 
     # ------------------------------------------------------------------
-    # admission
+    # legacy admission (two-phase path)
     # ------------------------------------------------------------------
 
     def _take_admissible(self):
@@ -296,6 +417,7 @@ class ServingEngine:
             self._active[slot] = req
             self.adapter_ids[slot] = req.adapter_id
             self._pending[slot] = int(first[j])
+            self._len[slot] = len(req.prompt)
 
     def _admit_dense(self):
         """Dense-ring admission: one batched prefill per distinct prompt
@@ -320,15 +442,150 @@ class ServingEngine:
                 self.adapter_ids[slot] = req.adapter_id
                 self.cache = insert_slot(self.cache, group_cache, slot, src=j)
                 self._pending[slot] = int(first[j])
+                self._len[slot] = len(req.prompt)
 
     # ------------------------------------------------------------------
-    # decode
+    # unified token-budget scheduling
     # ------------------------------------------------------------------
 
-    def step(self):
-        """One engine tick: admit, then decode one token per active slot.
-        Returns the requests that finished this tick (a request admitted
-        and retired within one tick — max_new == 1 — appears only here)."""
+    def _admit_unified(self):
+        """Assign slots + page reservations, FIFO.  No prefill call: the
+        chunk cursor starts at 0 and the token buffer streams the prompt
+        in.  When the queue head's trajectory exceeds the available pages
+        it still admits — **oversubscribed**: it reserves only what's
+        available and backs the rest opportunistically (allowance: truly
+        uncommitted pages only) as other requests retire.  At most one
+        oversubscribed request at a time, and admission holds (strict
+        FIFO) until its trajectory is fully backed."""
+        if self._oversub_slot is not None:
+            s = self._oversub_slot
+            req = self._active[s]
+            if req is not None:
+                traj = self._traj_tokens(req)
+                if self.pages.covered_cols(s) < self.pages.pages_for(traj):
+                    return               # stream the head before admitting
+            self._oversub_slot = None
+        free = [i for i in range(self.slots) if self._active[i] is None]
+        while self._queue and free:
+            req = self._queue[0]
+            traj = self._traj_tokens(req)
+            cap = self._swa_cap_pages()
+            eff_pages = self.pages.pages_for(self._effective_tokens(traj))
+            if eff_pages <= self.pages.available:
+                slot = free.pop(0)
+            else:
+                # FIFO head doesn't fit: admit it oversubscribed and stop
+                slot = free.pop(0)
+                self._oversub_slot = slot
+                cap = min(cap, max(0, self.pages.available)) \
+                    if cap is not None else max(0, self.pages.available)
+            self._queue.pop(0)
+            self.pages.reserve(slot, traj, cap_pages=cap)
+            self._active[slot] = req
+            self.adapter_ids[slot] = req.adapter_id
+            self._cursor[slot] = 0
+            self._len[slot] = 0
+            if self._oversub_slot is not None:
+                break
+
+    def _free_swa_pages(self):
+        """Release pages whose every token has slid out of the attention
+        window: their block-table entries re-point at trash page 0 and the
+        freed pages re-credit the slot's reservation."""
+        if not (self.paged and self.window > 0 and self._mixed_ok):
+            return
+        changed = False
+        for s, req in enumerate(self._active):
+            if req is None:
+                continue
+            written = self._len.get(s, 0)
+            if s in self._cursor and self._cursor[s] < len(req.prompt):
+                written = self._cursor[s]
+            # future queries sit at position >= written; kv index i stays
+            # visible iff written - i < window, so block-table column j is
+            # dead once (j+1)*ps - 1 <= written - window
+            dead = (written - self.window + 1) // self.page_size
+            if dead > 0 and self.pages.free_prefix(s, dead):
+                changed = True
+        if changed and not self.unified:
+            self.cache["block_tables"] = jnp.asarray(self.pages.block_tables)
+
+    def _unified_tick(self) -> List[Request]:
+        self._admit_unified()
+        Q = self.chunk
+        toks = np.zeros((self.slots, Q), np.int32)
+        pos = np.full((self.slots, Q), int(INVALID_POS), np.int32)
+        last_col = np.zeros((self.slots,), np.int32)
+        spans: Dict[int, int] = {}   # slot → chunk len (0 = decode token)
+        for s, req in enumerate(self._active):
+            if req is None:
+                continue
+            cur, L = self._cursor[s], len(req.prompt)
+            if cur < L:
+                # page-aligned prefill chunk: bounded by the budget, the
+                # prompt remainder, and the pages the pool can back NOW
+                cap_tok = (self.pages.covered_tokens(s) +
+                           self.pages.allowance(s) * self.page_size)
+                q = min(Q, L - cur, cap_tok - cur)
+                if q <= 0:
+                    continue             # stalled on pages this tick
+                self.pages.ensure(s, cur + q)
+                toks[s, :q] = req.prompt[cur:cur + q]
+                pos[s, :q] = np.arange(cur, cur + q)
+                last_col[s] = q - 1
+                spans[s] = q
+            else:
+                n = self._len[s]
+                if self.pages.covered_tokens(s) < n + 1:
+                    if self.pages.allowance(s) < 1:
+                        continue         # oversubscribed decode stall
+                    self.pages.ensure(s, n + 1)
+                toks[s, 0] = req.out[-1] if req.out else int(req.prompt[-1])
+                pos[s, 0] = n
+                spans[s] = 0
+        self.cache["block_tables"] = jnp.asarray(self.pages.block_tables)
+        self.cache, logits = self.ustep(
+            self.params, self.ad_stack, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(last_col), jnp.asarray(self.adapter_ids), self.cache)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))      # (slots,)
+        finished: List[Request] = []
+        for s, q in spans.items():
+            req = self._active[s]
+            if q > 0:
+                self._cursor[s] += q
+                if self._cursor[s] == len(req.prompt):
+                    # the chunk held the last prompt token: its last-column
+                    # logits are the first generated token (no prefill call)
+                    req.out.append(int(nxt[s]))
+                    self._len[s] = len(req.prompt)
+                else:
+                    continue             # still prefilling
+            else:
+                req.out.append(int(nxt[s]))
+                self._len[s] += 1
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self._active[s] = None
+                self.pages.release(s)
+                for d in (self._cursor, self._len):
+                    d.pop(s, None)
+                if self._oversub_slot == s:
+                    self._oversub_slot = None
+                finished.append(req)
+        self._free_swa_pages()
+        return finished
+
+    # ------------------------------------------------------------------
+    # engine tick
+    # ------------------------------------------------------------------
+
+    def step(self) -> List[Request]:
+        """One engine tick.  Unified mode: one shape-static jitted call
+        packs this tick's token budget (decode tokens + prefill chunks).
+        Legacy mode: admit (prefill), then decode one token per active
+        slot.  Returns the requests that finished this tick."""
+        if self.unified:
+            return self._unified_tick()
         self._admit()
         # flush prefill-produced first tokens
         for i, tok in list(self._pending.items()):
@@ -352,9 +609,11 @@ class ServingEngine:
             if i in self._pending:            # token already appended above
                 del self._pending[i]
             req.out.append(int(nxt[i]))
+            self._len[i] = self._len.get(i, len(req.prompt)) + 1
             if len(req.out) >= req.max_new:
                 req.done = True
                 self._active[i] = None
+                self._len.pop(i, None)
                 retired.append(i)
                 finished.append(req)
         if self.paged and retired:
@@ -364,6 +623,7 @@ class ServingEngine:
             pos[retired] = 0                  # idle slots write trash page 0
             self.cache["pos"] = jnp.asarray(pos)
             self.cache["block_tables"] = jnp.asarray(self.pages.block_tables)
+        self._free_swa_pages()
         return finished
 
     def run(self, max_ticks: int = 64) -> List[Request]:

@@ -123,11 +123,17 @@ class MTHooks(Hooks):
     """
 
     def __init__(self, plan, shared, node, type_prefix, adapter_ids,
-                 backend: str = "jnp", interpret: bool = True):
+                 backend: str = "jnp", interpret: bool = True,
+                 fuse_tokens: bool = False):
         super().__init__(plan, shared, node, type_prefix)
         self.ids = adapter_ids
         self.backend = backend
         self.interpret = interpret
+        # fuse_tokens: also route multi-token rows (the unified step's
+        # packed (B, Q) chunk buffer) through the pool-resident kernels by
+        # flattening to B·Q single-token rows with repeated adapter ids —
+        # prefill proper keeps the hoisted-cache einsum path
+        self.fuse_tokens = fuse_tokens
 
     def _ab(self, name):
         cfg = self.plan.cfg
@@ -152,10 +158,11 @@ class MTHooks(Hooks):
         raise NotImplementedError(
             f"multi-tenant serving not implemented for {m!r}")
 
-    def _fused_decode(self, name, x2):
-        """Pool-resident BGMV: x2 (B, h) → (B, o), no materialized A/B.
-        Reads the lane-padded pool copies when ``stack_tenants`` built them
-        (non-128-multiple shard lengths) so nothing re-pads per step."""
+    def _fused_decode(self, name, x2, ids):
+        """Pool-resident BGMV: x2 (rows, h) → (rows, o), no materialized
+        A/B.  Reads the lane-padded pool copies when ``stack_tenants``
+        built them (non-128-multiple shard lengths) so nothing re-pads per
+        step."""
         cfg = self.plan.cfg
         tr = self.shared["trainable"][name]
         sst = self.shared["static"].get(name, {})
@@ -164,7 +171,7 @@ class MTHooks(Hooks):
         y = bgmv_mos(x2,
                      sst.get("a_pool_lanes", tr["a_pool"]),
                      sst.get("b_pool_lanes", tr["b_pool"]),
-                     self.ids, st["idx_a"], st["idx_b"],
+                     ids, st["idx_a"], st["idx_b"],
                      scale=cfg.scaling(g.r), interpret=self.interpret,
                      shard_len_b=g.shard_len_b)
         return y.astype(x2.dtype)
@@ -179,9 +186,17 @@ class MTHooks(Hooks):
         B = self.ids.shape[0]
         if (self.backend == "fused"
                 and self.plan.method in ("mos", "pure")
-                and xb.shape[0] == B and xb.shape[1] == 1):
-            y2 = self._fused_decode(name, xb[:, 0].astype(x.dtype))
-            return y2 if squeeze else y2[:, None]
+                and xb.shape[0] == B
+                and (xb.shape[1] == 1 or self.fuse_tokens)):
+            Q = xb.shape[1]
+            if Q == 1:
+                y2 = self._fused_decode(name, xb[:, 0].astype(x.dtype),
+                                        self.ids)
+                return y2 if squeeze else y2[:, None]
+            # packed token buffer: every token of row b shares adapter b
+            x2 = xb.reshape(B * Q, xb.shape[-1]).astype(x.dtype)
+            y2 = self._fused_decode(name, x2, jnp.repeat(self.ids, Q))
+            return y2.reshape(B, Q, -1)
         a_all, b_all, scale = self._ab(name)
         a_req = jnp.take(a_all, self.ids, axis=0)      # (B, r, h)
         b_req = jnp.take(b_all, self.ids, axis=0)      # (B, r, o)
@@ -218,12 +233,15 @@ class _PerRequestRows:
 
 
 def make_mt_factory(adapter_ids, backend: str = "jnp",
-                    interpret: bool = True):
+                    interpret: bool = True, fuse_tokens: bool = False):
     """``interpret=False`` compiles the fused kernels for real TPUs;
-    the default runs them in Pallas interpret mode (CPU-correct)."""
+    the default runs them in Pallas interpret mode (CPU-correct).
+    ``fuse_tokens`` routes multi-token packed buffers (the unified step)
+    through the pool-resident kernels too."""
     assert backend in ("jnp", "fused"), f"unknown serving backend {backend!r}"
 
     def factory(plan, shared, node, tpfx):
         return MTHooks(plan, shared, node, tpfx, adapter_ids,
-                       backend=backend, interpret=interpret)
+                       backend=backend, interpret=interpret,
+                       fuse_tokens=fuse_tokens)
     return factory

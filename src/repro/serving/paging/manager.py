@@ -8,13 +8,21 @@ here, in plain python, where the serving engine's admission loop runs:
     trash page**: every unused block-table entry points at it, so decode
     writes from idle/retired slots and masked kernel DMAs land somewhere
     harmless and in-bounds);
-  * per-slot ownership — ``alloc(slot, n_tokens)`` carves out
-    ``ceil(n_tokens / page_size)`` pages and writes the slot's block-table
-    row; ``release(slot)`` returns them and re-points the row at trash;
-  * admission gating — the engine admits a request only when its *whole
-    trajectory* (prompt + max_new tokens) fits in the free list
-    (``can_admit``), vLLM-style, so decode can never run out of pages
-    mid-flight.
+  * per-slot ownership with **incremental backing** — ``reserve(slot,
+    n_tokens)`` promises the trajectory's pages as a *count* without
+    popping any, ``ensure(slot, n_tokens)`` pops just enough pages to
+    cover the next chunk/decode token, and ``release(slot)`` returns
+    everything.  ``alloc(slot, n_tokens)`` (reserve + full ensure) keeps
+    the one-shot PR 2 behaviour for the legacy prefill path and tests;
+  * admission gating — ``can_admit`` / ``available`` count free pages
+    minus every slot's **unbacked reservation**, so a fully-reserved
+    request can never be starved mid-flight by later admissions
+    (vLLM-style no-OOM guarantee, kept under chunked prefill);
+  * sliding-window freeing — ``free_prefix(slot, upto_col)`` returns
+    pages whose every token has slid out of the attention window and
+    re-points their block-table entries at trash.  Freed pages *re-credit*
+    the slot's reservation (capped at its remaining trajectory need), so a
+    long SWA trajectory only ever reserves ~window worth of pages.
 
 Slot reuse is copy-free: retirement only edits the free list and the block
 table; no KV bytes move.
@@ -22,7 +30,7 @@ table; no KV bytes move.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -43,6 +51,9 @@ class PagePool:
         # LIFO: lowest ids pop first (makes traces deterministic/testable)
         self._free: List[int] = list(range(self.num_pages - 1, 0, -1))
         self._owned: Dict[int, List[int]] = {}
+        self._base: Dict[int, int] = {}      # first live block-table column
+        self._reserved: Dict[int, int] = {}  # promised-but-unbacked pages
+        self._traj: Dict[int, int] = {}      # total trajectory columns
         self.block_tables = np.full(
             (self.slots, self.max_pages_per_slot), TRASH_PAGE, np.int32)
 
@@ -52,31 +63,124 @@ class PagePool:
     def free_pages(self) -> int:
         return len(self._free)
 
+    def unbacked_total(self, exclude: Optional[int] = None) -> int:
+        """Pages promised to slots but not yet popped from the free list."""
+        return sum(r for s, r in self._reserved.items() if s != exclude)
+
+    @property
+    def available(self) -> int:
+        """Pages a NEW reservation may claim: free minus everyone else's
+        unbacked promises.  May be negative while an oversubscribed
+        admission (engine FIFO head) is being backed chunk-by-chunk."""
+        return self.free_pages - self.unbacked_total()
+
+    def allowance(self, slot: int) -> int:
+        """Pages ``slot`` may pop *right now* without starving any other
+        slot's unbacked reservation.  For a fully-reserved slot this is
+        always >= its own unbacked count (ensure never stalls); an
+        oversubscribed slot gets only the truly uncommitted pages."""
+        return max(0, self.free_pages - self.unbacked_total(exclude=slot))
+
     def pages_for(self, n_tokens: int) -> int:
         return -(-max(n_tokens, 1) // self.page_size)
 
     def can_admit(self, n_tokens: int) -> bool:
         n = self.pages_for(n_tokens)
-        return n <= self.free_pages and n <= self.max_pages_per_slot
+        return n <= self.available and n <= self.max_pages_per_slot
 
-    def alloc(self, slot: int, n_tokens: int) -> List[int]:
-        """Carve pages for ``n_tokens`` and point ``slot``'s block-table row
-        at them.  The caller must have checked :meth:`can_admit`."""
+    def covered_cols(self, slot: int) -> int:
+        """Block-table columns ever backed for ``slot`` (prefix-freed
+        columns still count: column index == token_pos // page_size)."""
+        return self._base.get(slot, 0) + len(self._owned.get(slot, ()))
+
+    def covered_tokens(self, slot: int) -> int:
+        return self.covered_cols(slot) * self.page_size
+
+    def reserved_unbacked(self, slot: int) -> int:
+        return self._reserved.get(slot, 0)
+
+    # ------------------------------------------------------------------
+    # reserve / ensure / alloc / free
+    # ------------------------------------------------------------------
+
+    def reserve(self, slot: int, n_tokens: int,
+                cap_pages: Optional[int] = None):
+        """Promise ``slot`` pages for an ``n_tokens`` trajectory without
+        popping any.  ``cap_pages`` bounds the initial promise below the
+        full trajectory — a sliding-window request only ever holds ~window
+        worth (prefix frees re-credit it, see :meth:`free_prefix`), and an
+        oversubscribed admission may only promise what's available.
+
+        The reservation ledger keeps the no-starvation invariant
+        ``free_pages >= unbacked_total()``: backing a promised page
+        decrements both sides, backing *beyond* the promise is gated by
+        :meth:`allowance` (truly uncommitted pages only), and SWA frees
+        credit both sides."""
         assert slot not in self._owned, f"slot {slot} already owns pages"
-        n = self.pages_for(n_tokens)
-        assert n <= self.free_pages, (n, self.free_pages)
-        assert n <= self.max_pages_per_slot, (n, self.max_pages_per_slot)
-        pages = [self._free.pop() for _ in range(n)]
-        self._owned[slot] = pages
+        T = self.pages_for(n_tokens)
+        R = T if cap_pages is None else min(T, cap_pages)
+        assert R <= self.max_pages_per_slot, (R, self.max_pages_per_slot)
+        self._owned[slot] = []
+        self._base[slot] = 0
+        self._traj[slot] = T
+        self._reserved[slot] = R
         self.block_tables[slot, :] = TRASH_PAGE
-        self.block_tables[slot, :n] = pages
+
+    def ensure(self, slot: int, n_tokens: int) -> List[int]:
+        """Back pages so ``slot``'s block table covers logical tokens
+        ``[0, n_tokens)``.  The caller gates on :meth:`allowance`; a slot
+        whose trajectory is fully reserved never fails here."""
+        assert slot in self._owned, f"slot {slot} has no reservation"
+        cols = self.pages_for(n_tokens)
+        assert cols <= self.max_pages_per_slot, (cols, self.max_pages_per_slot)
+        cur = self.covered_cols(slot)
+        take = cols - cur
+        if take <= 0:
+            return []
+        assert take <= self.free_pages, (take, self.free_pages)
+        pages = [self._free.pop() for _ in range(take)]
+        self._owned[slot].extend(pages)
+        self.block_tables[slot, cur:cols] = pages
+        self._reserved[slot] = max(0, self._reserved[slot] - take)
         return pages
 
+    def alloc(self, slot: int, n_tokens: int) -> List[int]:
+        """One-shot carve (reserve + full ensure) — the PR 2 interface,
+        kept for the legacy whole-prompt prefill path and migration
+        utilities.  The caller must have checked :meth:`can_admit`."""
+        n = self.pages_for(n_tokens)
+        assert n <= self.free_pages, (n, self.free_pages)
+        self.reserve(slot, n_tokens)
+        return self.ensure(slot, n_tokens)
+
+    def free_prefix(self, slot: int, upto_col: int) -> List[int]:
+        """Release ``slot``'s owned pages in block-table columns
+        ``[0, upto_col)`` — every token in them has slid out of the
+        attention window — and point those entries at trash page 0.
+        Freed pages re-credit the reservation (capped), so the slot can
+        back its *future* columns from what it just returned."""
+        freed: List[int] = []
+        while (self._base.get(slot, 0) < upto_col
+               and self._owned.get(slot)):
+            page = self._owned[slot].pop(0)
+            col = self._base[slot]
+            self.block_tables[slot, col] = TRASH_PAGE
+            self._base[slot] = col + 1
+            self._free.append(page)
+            freed.append(page)
+        if freed:
+            future = max(0, self._traj[slot] - self.covered_cols(slot))
+            self._reserved[slot] = min(self._reserved[slot] + len(freed),
+                                       future)
+        return freed
+
     def release(self, slot: int) -> List[int]:
-        """Return ``slot``'s pages to the free list (no-op if it owns none)
-        and park its block-table row on the trash page."""
+        """Return ``slot``'s pages to the free list (no-op if it owns none),
+        drop its reservation, and park its block-table row on trash."""
         pages = self._owned.pop(slot, [])
         self._free.extend(reversed(pages))
+        for d in (self._base, self._reserved, self._traj):
+            d.pop(slot, None)
         self.block_tables[slot, :] = TRASH_PAGE
         return pages
 
@@ -84,7 +188,9 @@ class PagePool:
 
     def check_invariants(self):
         """Every page is either free or owned by exactly one slot; trash
-        page 0 is neither; block-table rows agree with ownership."""
+        page 0 is neither; block-table rows agree with ownership (freed
+        prefix columns and the unbacked tail point at trash); reservations
+        never promise more than the slot's remaining trajectory."""
         free = set(self._free)
         owned = [p for pages in self._owned.values() for p in pages]
         assert len(owned) == len(set(owned)), "page owned twice"
@@ -93,8 +199,14 @@ class PagePool:
         assert free | set(owned) == set(range(1, self.num_pages))
         for slot, pages in self._owned.items():
             row = self.block_tables[slot]
-            assert list(row[:len(pages)]) == pages, (slot, row, pages)
-            assert (row[len(pages):] == TRASH_PAGE).all()
+            base = self._base[slot]
+            assert (row[:base] == TRASH_PAGE).all(), (slot, row, base)
+            assert list(row[base:base + len(pages)]) == pages, \
+                (slot, row, pages)
+            assert (row[base + len(pages):] == TRASH_PAGE).all()
+            future = max(0, self._traj[slot] - self.covered_cols(slot))
+            assert 0 <= self._reserved[slot] <= future, \
+                (slot, self._reserved[slot], future)
         for slot in range(self.slots):
             if slot not in self._owned:
                 assert (self.block_tables[slot] == TRASH_PAGE).all()

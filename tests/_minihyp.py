@@ -1,0 +1,76 @@
+"""Minimal, dependency-free stand-in for the slice of `hypothesis` the
+property tests use (``given`` / ``settings`` / a handful of strategies).
+
+CI installs real hypothesis (requirements-dev.txt) and fuzzes properly;
+environments without it fall back to this shim so the property tests run
+as deterministic randomized sweeps instead of skipping.  Draws are seeded
+per test name, so failures reproduce.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda r: seq[r.randrange(len(seq))])
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        return _Strategy(lambda r: [elements.example(r)
+                                    for _ in range(r.randint(min_size,
+                                                             max_size))])
+
+    @staticmethod
+    def tuples(*elems):
+        return _Strategy(lambda r: tuple(e.example(r) for e in elems))
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def deco(fn):
+        fn._mh_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    """Decorator: run the test once per drawn example.  Non-strategy
+    parameters (pytest fixtures) pass through; the wrapper's signature
+    hides the drawn ones so pytest doesn't look for fixtures for them."""
+    def deco(fn):
+        sig = inspect.signature(fn)
+        passthrough = [p for p in sig.parameters.values()
+                       if p.name not in strats]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_mh_examples", 20)
+            rng = random.Random(fn.__name__)
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+
+        wrapper.__signature__ = sig.replace(parameters=passthrough)
+        del wrapper.__wrapped__          # pytest must see the new signature
+        return wrapper
+    return deco

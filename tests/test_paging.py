@@ -73,8 +73,10 @@ def test_pool_randomized_traces_numpy():
 
 
 def test_pool_randomized_traces():
-    pytest.importorskip("hypothesis")
-    from hypothesis import given, settings, strategies as st
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:                   # deterministic local shim
+        from _minihyp import given, settings, strategies as st
 
     @settings(max_examples=40, deadline=None)
     @given(ops=st.lists(st.tuples(st.integers(0, 5), st.integers(1, 40)),
@@ -237,13 +239,16 @@ def _tenants(m, n):
 
 
 def test_engine_mixed_admission_single_prefill():
-    """≥3 distinct prompt lengths admit in ONE prefill call; all pages are
-    returned to the free list on completion; tokens match the dense engine."""
+    """Legacy two-phase path: ≥3 distinct prompt lengths admit in ONE
+    prefill call; all pages are returned to the free list on completion;
+    tokens match the dense engine.  (The unified step goes further — zero
+    prefill calls — covered in tests/test_unified.py.)"""
     m, params = _model()
     states = _tenants(m, 2)
     prompts = [np.arange(3, 3 + L, dtype=np.int32) % 90 + 4
                for L in (3, 7, 5, 4)]
-    eng = ServingEngine(m, params, states, slots=4, max_len=32, page_size=8)
+    eng = ServingEngine(m, params, states, slots=4, max_len=32, page_size=8,
+                        unified=False)
     calls = []
     orig = eng.prefill
     eng.prefill = lambda *a, **k: (calls.append(1), orig(*a, **k))[1]

@@ -1,0 +1,449 @@
+"""Unified token-budget serving step: chunk-kernel parity, fp32 parity of
+unified vs the legacy two-phase prefill→decode path, compile-count
+regression, chunked admission past the free-page span, SWA page freeing,
+and submit validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke
+from repro.core.types import AdapterConfig
+from repro.kernels.paged_attention.ops import (INVALID_POS,
+                                               paged_attention_chunk,
+                                               paged_attention_decode)
+from repro.kernels.paged_attention.ref import paged_attention_chunk_ref
+from repro.models import Model
+from repro.serving import PagePool, Request, ServingEngine
+
+ACFG = AdapterConfig(method="mos", equiv_rank=2, rank=4, shards_per_vector=2,
+                     private_rank=1, dtype=jnp.float32)
+
+
+def _model(name="granite-3-2b"):
+    cfg = smoke(get_config(name))
+    m = Model(cfg, ACFG)
+    params, _ = m.init_params(jax.random.key(0))
+    return m, params
+
+
+def _tenants(m, n):
+    out = []
+    for t in range(n):
+        st = m.init_adapter(jax.random.key(100))
+        st["trainable"] = jax.tree.map(
+            lambda v, tt=t: v + 0.02 * (tt + 1) * jax.random.normal(
+                jax.random.key(7 + tt), v.shape, v.dtype), st["trainable"])
+        out.append(st)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# chunk kernel parity
+# ---------------------------------------------------------------------------
+
+def _random_paged(B, mp, ps, KVp, hd, seed=0):
+    P = B * mp + 1
+    kp = jax.random.normal(jax.random.key(seed), (P, ps, KVp, hd))
+    vp = jax.random.normal(jax.random.key(seed + 1), (P, ps, KVp, hd))
+    perm = np.random.default_rng(seed).permutation(np.arange(1, P))
+    bt = jnp.asarray(perm.reshape(B, mp).astype(np.int32))
+    return kp, vp, bt
+
+
+@pytest.mark.parametrize("window", [0, 5])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                       (jnp.bfloat16, 2e-2)])
+def test_paged_chunk_kernel_parity(window, dtype, tol):
+    """Mixed packed rows — decode-shaped, mid-prompt chunk, full chunk,
+    all-pads — against the dense-gather oracle."""
+    B, mp, ps, KVp, G, hd, Q = 4, 4, 4, 2, 2, 16, 6
+    kp, vp, bt = _random_paged(B, mp, ps, KVp, hd)
+    kp, vp = kp.astype(dtype), vp.astype(dtype)
+    pos = np.full((B, Q), int(INVALID_POS), np.int32)
+    pos[0, 0] = 7                      # decode row (Q-1 pads)
+    pos[1, :4] = np.arange(3, 7)       # mid-prompt chunk
+    pos[2, :] = np.arange(10, 16)      # full-width chunk
+    pos = jnp.asarray(pos)             # row 3: all pads
+    q = jax.random.normal(jax.random.key(9), (B, Q, KVp, G, hd), dtype)
+    out = paged_attention_chunk(q, kp, vp, bt, pos, window=window)
+    ref = paged_attention_chunk_ref(q, kp, vp, bt, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol * 10)
+    assert float(jnp.abs(out[3]).sum()) == 0.0      # pad rows exact zero
+    assert float(jnp.abs(out[0, 1:]).sum()) == 0.0
+
+
+def test_chunk_kernel_q1_equals_decode_kernel():
+    B, mp, ps, KVp, G, hd = 3, 4, 4, 2, 2, 16
+    kp, vp, bt = _random_paged(B, mp, ps, KVp, hd, seed=3)
+    pos = jnp.asarray([0, 6, 15], jnp.int32)
+    q = jax.random.normal(jax.random.key(5), (B, 1, KVp, G, hd))
+    a = paged_attention_chunk(q, kp, vp, bt, pos[:, None])
+    b = paged_attention_decode(q, kp, vp, bt, pos)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# page-pool reservation ledger
+# ---------------------------------------------------------------------------
+
+def test_pool_reserve_ensure_allowance():
+    pool = PagePool(num_pages=9, page_size=4, slots=4, max_pages_per_slot=8)
+    pool.reserve(0, 12)                    # 3 pages promised, none backed
+    assert pool.available == 8 - 3 and pool.free_pages == 8
+    pool.ensure(0, 5)                      # back 2 of them
+    assert pool.covered_tokens(0) == 8
+    assert pool.reserved_unbacked(0) == 1 and pool.available == 5
+    pool.check_invariants()
+    # an oversubscribed peer may only take truly uncommitted pages
+    pool.reserve(1, 24, cap_pages=pool.available)       # wants 6, gets 5
+    assert pool.available == 0
+    assert pool.allowance(0) == 6 - 5      # free minus slot 1's promise
+    pool.ensure(1, 20)                     # 5 cols, within its promise
+    pool.check_invariants()
+    assert pool.free_pages == 1            # 8 - 2 - 5
+    assert pool.allowance(1) == 0          # slot 0's last page is protected
+    pool.ensure(0, 12)                     # the protected page: never fails
+    pool.check_invariants()
+    pool.release(0), pool.release(1)
+    pool.check_invariants()
+    assert pool.free_pages == 8 and pool.available == 8
+
+
+def test_pool_free_prefix_recredits():
+    pool = PagePool(num_pages=10, page_size=4, slots=2, max_pages_per_slot=9)
+    pool.reserve(0, 36, cap_pages=3)       # SWA-style rolling reservation
+    pool.ensure(0, 12)                     # back 3 cols → promise exhausted
+    assert pool.reserved_unbacked(0) == 0
+    freed = pool.free_prefix(0, 2)         # cols 0-1 slid out of the window
+    assert len(freed) == 2
+    assert pool.reserved_unbacked(0) == 2  # re-credited for future cols
+    assert (pool.block_tables[0, :2] == 0).all()
+    assert pool.block_tables[0, 2] != 0
+    assert pool.covered_cols(0) == 3       # freed cols still count
+    pool.ensure(0, 20)                     # cols 3-4 append past the base
+    assert (pool.block_tables[0, 3:5] != 0).all()
+    pool.check_invariants()
+    pool.release(0)
+    pool.check_invariants()
+    assert pool.free_pages == 9
+
+
+# ---------------------------------------------------------------------------
+# fp32 parity: unified step vs legacy two-phase prefill→decode
+# ---------------------------------------------------------------------------
+
+def test_unified_forward_matches_two_phase_fp32():
+    """Feeding a prompt through unified_forward in page-aligned chunks must
+    reproduce the legacy prefill's first-token logits and the following
+    decode step's logits (fp32, mixed prompt lengths in one buffer)."""
+    m, params = _model()
+    st = m.init_adapter(jax.random.key(1))
+    lens = [5, 12, 9, 16]
+    B, max_len, ps, Q = len(lens), 32, 8, 8
+    toks = np.asarray(jax.random.randint(jax.random.key(2), (B, 17), 4, 100))
+
+    # legacy: one mixed-length prefill + decode
+    mp = max_len // ps
+    pool_l = PagePool(B * mp + 1, ps, B, mp)
+    for b, L in enumerate(lens):
+        pool_l.alloc(b, L + 2)
+    pc = m.init_paged_cache(B, max_len, page_size=ps)
+    pc["block_tables"] = jnp.asarray(pool_l.block_tables)
+    S = max(lens)
+    lp = np.zeros((B, S), np.int32)
+    for b, L in enumerate(lens):
+        lp[b, S - L:] = toks[b, :L]
+    npc, h = m.prefill(params, st, {"tokens": jnp.asarray(lp),
+                                    "lengths": jnp.asarray(lens)}, pc)
+    legacy_first = np.asarray(m.logits(params, h)[:, 0])
+    nxt = jnp.asarray([[toks[b, L]] for b, L in enumerate(lens)], jnp.int32)
+    _, hd1 = m.decode_step(params, st, nxt, npc, attn_backend="ref")
+    legacy_decode = np.asarray(m.logits(params, hd1)[:, 0])
+
+    # unified: stream the same prompts through (B, Q) chunk buffers
+    pool_u = PagePool(B * mp + 1, ps, B, mp)
+    for b, L in enumerate(lens):
+        pool_u.alloc(b, L + 2)
+    uc = m.init_paged_cache(B, max_len, page_size=ps)
+    uc["block_tables"] = jnp.asarray(pool_u.block_tables)
+    unified_first = np.zeros((B, legacy_first.shape[-1]), np.float32)
+    for start in range(0, max(lens), Q):
+        tb = np.zeros((B, Q), np.int32)
+        pb = np.full((B, Q), int(INVALID_POS), np.int32)
+        for b, L in enumerate(lens):
+            q = min(Q, max(0, L - start))
+            tb[b, :q] = toks[b, start:start + q]
+            pb[b, :q] = np.arange(start, start + q)
+        uc, h = m.unified_forward(params, st, jnp.asarray(tb),
+                                  jnp.asarray(pb), uc, attn_backend="ref")
+        lg = np.asarray(m.logits(params, h))
+        for b, L in enumerate(lens):
+            if start <= L - 1 < start + Q:
+                unified_first[b] = lg[b, L - 1 - start]
+    assert np.asarray(uc["pos"]).tolist() == lens
+    np.testing.assert_allclose(unified_first, legacy_first,
+                               rtol=1e-5, atol=1e-5)
+    assert (unified_first.argmax(-1) == legacy_first.argmax(-1)).all()
+
+    # one decode-shaped unified call (Q columns, 1 valid) vs legacy decode
+    tb = np.zeros((B, Q), np.int32)
+    pb = np.full((B, Q), int(INVALID_POS), np.int32)
+    tb[:, 0] = np.asarray(nxt)[:, 0]
+    pb[:, 0] = lens
+    uc, h = m.unified_forward(params, st, jnp.asarray(tb), jnp.asarray(pb),
+                              uc, attn_backend="ref")
+    unified_decode = np.asarray(m.logits(params, h)[:, 0])
+    np.testing.assert_allclose(unified_decode, legacy_decode,
+                               rtol=1e-5, atol=1e-5)
+    assert (unified_decode.argmax(-1) == legacy_decode.argmax(-1)).all()
+
+
+# ---------------------------------------------------------------------------
+# engine: the acceptance-criterion workload
+# ---------------------------------------------------------------------------
+
+def test_engine_unified_matches_legacy_one_compile():
+    """A workload mixing 4 distinct prompt lengths — one exceeding the
+    instantaneous free-page span — completes through the unified step with
+    outputs matching the legacy two-phase path, traces exactly ONE jitted
+    step executable, and never calls prefill."""
+    m, params = _model()
+    states = _tenants(m, 2)
+    # 7 allocatable pages; A+B+C reserve 6 → free span 8 tokens when D
+    # (prompt 26) reaches the head: D must admit chunk-by-chunk
+    prompts = [np.arange(3, 3 + L, dtype=np.int32) % 90 + 4
+               for L in (3, 9, 14, 26)]
+    outs = {}
+    for unified in (True, False):
+        eng = ServingEngine(m, params, states, slots=4, max_len=40,
+                            page_size=8, num_pages=8, unified=unified)
+        pf_calls = []
+        orig = eng.prefill
+        eng.prefill = lambda *a, **k: (pf_calls.append(1), orig(*a, **k))[1]
+        reqs = [Request(rid=i, prompt=p.copy(), adapter_id=i % 2, max_new=4)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run(max_ticks=100)
+        assert len(done) == 4 and all(r.done for r in reqs)
+        eng.pages.check_invariants()
+        assert eng.pages.free_pages == 7          # everything released
+        if unified:
+            assert len(eng.unified_traces) == 1, len(eng.unified_traces)
+            assert not pf_calls                   # no prefill call, ever
+        outs[unified] = [(r.rid, tuple(r.out)) for r in reqs]
+    assert outs[True] == outs[False]
+
+
+def test_engine_unified_matches_dense_tokens():
+    m, params = _model()
+    states = _tenants(m, 2)
+    prompts = [np.arange(3, 3 + L, dtype=np.int32) % 90 + 4
+               for L in (3, 7, 5)]
+    outs = {}
+    for mode in ("unified", "dense"):
+        eng = ServingEngine(m, params, states, slots=3, max_len=32,
+                            paged=mode == "unified", page_size=8,
+                            unified=mode == "unified")
+        reqs = [Request(rid=i, prompt=p.copy(), adapter_id=i % 2, max_new=4)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run(max_ticks=64)
+        assert len(done) == 3
+        outs[mode] = [r.out for r in reqs]
+    assert outs["unified"] == outs["dense"]
+
+
+def test_engine_unified_decode_not_blocked_by_long_prefill():
+    """A long prompt admitted mid-flight streams in chunks while an active
+    request keeps decoding EVERY tick — no head-of-line prefill stall."""
+    m, params = _model()
+    states = _tenants(m, 1)
+    eng = ServingEngine(m, params, states, slots=2, max_len=40, page_size=8,
+                        chunk=8)
+    a = Request(rid=0, prompt=np.arange(4, 10, dtype=np.int32), adapter_id=0,
+                max_new=8)
+    eng.submit(a)
+    eng.step()                                   # admit + first token
+    long = Request(rid=1, prompt=(np.arange(24, dtype=np.int32) % 90) + 4,
+                   adapter_id=0, max_new=2)
+    eng.submit(long)
+    for _ in range(3):                           # 24-token prompt = 3 chunks
+        before = len(a.out)
+        eng.step()
+        assert len(a.out) == before + 1          # a decoded every tick
+    assert long.out                              # long got its first token
+    eng.run(max_ticks=32)
+    assert a.done and long.done
+
+
+def test_engine_unified_slot_isolation():
+    """A request admitted into freed pages must match a fresh engine run."""
+    m, params = _model()
+    states = _tenants(m, 1)
+    p1 = np.array([0, 42, 17, 1], np.int32)
+    p2 = np.array([0, 99, 5, 1], np.int32)
+    e2 = ServingEngine(m, params, states, slots=1, max_len=32, page_size=8)
+    ra = Request(rid=0, prompt=p1, adapter_id=0, max_new=3)
+    rb = Request(rid=1, prompt=p2, adapter_id=0, max_new=3)
+    e2.submit(ra), e2.submit(rb)
+    e2.run()
+    e3 = ServingEngine(m, params, states, slots=1, max_len=32, page_size=8)
+    rc = Request(rid=0, prompt=p2, adapter_id=0, max_new=3)
+    e3.submit(rc)
+    e3.run()
+    assert rb.out == rc.out
+    assert len(e2.unified_traces) == 1
+
+
+# ---------------------------------------------------------------------------
+# SWA page freeing
+# ---------------------------------------------------------------------------
+
+def test_engine_swa_frees_slid_out_pages():
+    """Sliding-window arch: once every token of a page slides out of the
+    window, the page returns to the free list and its block-table entry
+    points at trash — and tokens still match the dense-ring engine."""
+    m, params = _model("mixtral-8x7b")           # smoke window = 32
+    assert m.cfg.sliding_window == 32
+    states = _tenants(m, 1)
+    prompts = [(np.arange(L, dtype=np.int32) % 90) + 4 for L in (20, 7)]
+    outs = {}
+    for mode in ("unified", "dense"):
+        eng = ServingEngine(m, params, states, slots=2, max_len=64,
+                            page_size=8, paged=mode == "unified",
+                            unified=mode == "unified")
+        reqs = [Request(rid=i, prompt=p.copy(), adapter_id=0,
+                        max_new=24 if i == 0 else 20)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        freed_mid_flight = False
+        ticks = 0
+        while (eng._queue or any(eng._active)) and ticks < 100:
+            eng.step()
+            ticks += 1
+            if mode == "unified":
+                eng.pages.check_invariants()
+                if any(eng.pages._base.get(s, 0) > 0 for s in range(2)):
+                    freed_mid_flight = True
+        assert all(r.done for r in reqs)
+        if mode == "unified":
+            # request 0 reaches 44 tokens > window 32 → prefix pages freed
+            assert freed_mid_flight
+            assert eng.pages.free_pages == eng.num_pages - 1
+        outs[mode] = [r.out for r in reqs]
+    assert outs["unified"] == outs["dense"]
+
+
+def test_engine_swa_reservation_capped():
+    """With freeing, a long SWA trajectory reserves ~window worth of pages,
+    not its full length — more tenants fit the same pool."""
+    m, params = _model("mixtral-8x7b")
+    states = _tenants(m, 1)
+    eng = ServingEngine(m, params, states, slots=2, max_len=64, page_size=8,
+                        chunk=8)
+    r = Request(rid=0, prompt=(np.arange(30, dtype=np.int32) % 90) + 4,
+                adapter_id=0, max_new=30)        # 60-token trajectory
+    eng.submit(r)
+    eng.step()
+    # full need is 8 pages; the standing reservation is capped by the cap
+    cap = eng._swa_cap_pages()
+    assert cap is not None and cap < eng.pages.pages_for(60)
+    assert (eng.pages.reserved_unbacked(0)
+            + len(eng.pages._owned.get(0, []))) <= cap + 1
+    eng.run(max_ticks=80)
+    assert r.done
+    eng.pages.check_invariants()
+
+
+def test_engine_legacy_swa_submit_rejects_never_fitting():
+    """Legacy admission backs the FULL trajectory upfront, so submit must
+    gate SWA requests on it too — the window-relaxed bound only applies to
+    the unified scheduler (which actually recycles pages mid-flight)."""
+    m, params = _model("mixtral-8x7b")           # smoke window = 32
+    states = _tenants(m, 1)
+    eng = ServingEngine(m, params, states, slots=2, max_len=64, page_size=8,
+                        num_pages=8, unified=False)   # 7 allocatable pages
+    with pytest.raises(ValueError, match="pages"):
+        # full trajectory = 60 tok = 8 pages > 7; the resident SWA bound
+        # (56 tok) would fit, but legacy alloc() backs the whole
+        # trajectory and can never satisfy it → FIFO-head livelock
+        eng.submit(Request(rid=0, prompt=np.arange(40, dtype=np.int32) + 4,
+                           adapter_id=0, max_new=20))
+    # the unified engine admits the same request (pages recycle in-window)
+    engu = ServingEngine(m, params, states, slots=2, max_len=64, page_size=8,
+                         num_pages=8, chunk=8)
+    r = Request(rid=0, prompt=(np.arange(40, dtype=np.int32) % 90) + 4,
+                adapter_id=0, max_new=20)
+    engu.submit(r)
+    done = engu.run(max_ticks=100)
+    assert done == [r] and r.done
+    engu.pages.check_invariants()
+
+
+def test_engine_oversub_releases_fifo_hold_once_backed():
+    """The FIFO hold behind an oversubscribed head lifts as soon as its
+    written trajectory (prompt + max_new - 1 fed tokens) is fully backed —
+    not when the request completes.  Regression: with need % page_size ==
+    1 the old bound (pages for prompt+max_new) was never reachable."""
+    m, params = _model()
+    states = _tenants(m, 1)
+    eng = ServingEngine(m, params, states, slots=3, max_len=24, page_size=8,
+                        num_pages=4, chunk=16)   # 3 allocatable pages
+    r0 = Request(rid=0, prompt=(np.arange(9, dtype=np.int32) % 90) + 4,
+                 adapter_id=0, max_new=8)        # writes 16 tok → 2 pages
+    eng.submit(r0)
+    eng.step()
+    # head: need = 13+4 = 17 (% 8 == 1), writes 16 → 2 pages; 1 available
+    r1 = Request(rid=1, prompt=(np.arange(13, dtype=np.int32) % 90) + 4,
+                 adapter_id=0, max_new=4)
+    r2 = Request(rid=2, prompt=np.array([4, 5, 6], np.int32), adapter_id=0,
+                 max_new=2)
+    eng.submit(r1), eng.submit(r2)
+    admitted_while_head_alive = False
+    for _ in range(40):
+        eng.step()
+        if any(a is r2 for a in eng._active) and not r1.done:
+            admitted_while_head_alive = True
+        if r1.done and r2.done:
+            break
+    assert r0.done and r1.done and r2.done
+    assert admitted_while_head_alive
+    eng.pages.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# submit validation (both cache modes)
+# ---------------------------------------------------------------------------
+
+def test_submit_validates_max_len_in_both_modes():
+    """The dense-ring path used to accept prompt+max_new > max_len and
+    silently wrap the ring, corrupting the oldest KV mid-decode."""
+    m, params = _model()
+    states = _tenants(m, 1)
+    for paged in (True, False):
+        eng = ServingEngine(m, params, states, slots=2, max_len=16,
+                            paged=paged, page_size=8)
+        with pytest.raises(ValueError, match="max_len"):
+            eng.submit(Request(rid=0, prompt=np.arange(12, dtype=np.int32),
+                               adapter_id=0, max_new=8))
+        # boundary case still admits
+        eng.submit(Request(rid=1, prompt=np.arange(8, dtype=np.int32) + 4,
+                           adapter_id=0, max_new=8))
+        done = eng.run(max_ticks=32)
+        assert len(done) == 1
+    # a sliding-window DENSE ring wraps by design: trajectories longer
+    # than max_len stay admissible there (ring holds the window only)
+    ms, mparams = _model("mixtral-8x7b")
+    swa = ServingEngine(ms, mparams, _tenants(ms, 1), slots=1, max_len=40,
+                        paged=False)
+    r = Request(rid=2, prompt=(np.arange(32, dtype=np.int32) % 90) + 4,
+                adapter_id=0, max_new=10)        # 42 > max_len: decode wraps
+    swa.submit(r)
+    done = swa.run(max_ticks=32)
+    assert done == [r] and r.done and len(r.out) == 10
