@@ -29,7 +29,15 @@ prefill per admission group).  Recorded per scheduling mode:
     in page chunks at a fixed shape;
   * inter-token latency (ITL) — mean tick-to-tick gap between a
     request's generated tokens;
-  * jitted-step compilations observed across the workload.
+  * jitted-step compilations observed across the workload;
+  * host_syncs_per_token — device→host round-trips per generated token.
+
+And the **device-loop sweep** (``device_loop``): a decode-heavy workload
+through the fused macro-step at D ∈ {1, 4, 16} micro-steps per jitted
+call.  D=1 is the per-tick host-sync baseline; higher D amortizes the
+jit dispatch + device→host drain across D tokens.  Recorded per D: mean
+ITL (steady-state, compile excluded), host syncs per token, and a
+bitwise check that the greedy streams match D=1 and the legacy path.
 
 Writes BENCH_serving.json at the repo root so the perf trajectory is
 recorded from PR 1 onward.
@@ -182,8 +190,75 @@ def bench_staggered(model, params, states, unified: bool, fast: bool = False):
         "ttft_ms_max": 1e3 * float(np.max(ttfts)),
         "itl_ms_mean": 1e3 * float(np.mean(itls)),
         "itl_ms_max": 1e3 * float(np.max(itls)),
+        "host_syncs_per_token": eng.host_syncs / max(eng.tokens_out, 1),
         "step_compilations" if unified else "prefill_calls": compiles,
     }
+
+
+def bench_device_loop(model, params, states, fast: bool = False):
+    """Decode-heavy D-sweep through the fused macro-step engine.
+
+    Each engine serves one warmup wave (triggers the single jit trace —
+    compile excluded from timing) then ``waves`` timed identical waves.
+    ``itl_ms_mean`` is decode wall-clock per generated token averaged over
+    the waves (same definition as the staggered sweep's field);
+    ``itl_ms_best``/``itl_ms_worst_wave`` bracket the host-scheduling
+    noise.  ``host_syncs_per_token`` is the drain amortization.  Greedy
+    streams are asserted bitwise identical across every D and the legacy
+    path.
+
+    ``max_new`` is a multiple of every swept D so no macro tick runs dead
+    all-pad micro-steps — the aligned-workload best case the docs' D-tuning
+    section describes (short completions with D ≫ remaining budget burn
+    lanes; that cost is visible by sweeping ``--fast`` with small
+    ``max_new``)."""
+    lens = [4, 6]
+    max_new = 16 if fast else 32
+    slots = len(lens)
+
+    def wave(eng):
+        reqs = [Request(rid=i, prompt=(np.arange(L, dtype=np.int32) % 90) + 4,
+                        adapter_id=i % len(states), max_new=max_new)
+                for i, L in enumerate(lens)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run(max_ticks=400)
+        assert all(r.done for r in reqs)
+        return [tuple(r.out) for r in reqs]
+
+    results, streams = [], {}
+    waves = 3 if fast else 5
+    for D, unified in [(1, False)] + [(D, True) for D in (1, 4, 16)]:
+        key = f"D{D}" if unified else "legacy"
+        eng = ServingEngine(model, params, states, slots=slots, max_len=64,
+                            page_size=PAGE_SIZE, unified=unified,
+                            decode_ticks=D if unified else 1)
+        wave(eng)                                    # trace + warm caches
+        per_tok = []
+        for _ in range(waves):
+            syncs0, toks0 = eng.host_syncs, eng.tokens_out
+            t0 = time.perf_counter()
+            streams[key] = wave(eng)
+            wall = time.perf_counter() - t0
+            per_tok.append(wall / (eng.tokens_out - toks0))
+        toks = eng.tokens_out - toks0
+        row = {"mode": key, "decode_ticks": D if unified else 1,
+               "unified": unified, "tokens_per_wave": toks, "waves": waves,
+               "itl_ms_mean": 1e3 * float(np.mean(per_tok)),
+               "itl_ms_best": 1e3 * min(per_tok),
+               "itl_ms_worst_wave": 1e3 * max(per_tok),
+               "host_syncs_per_token":
+                   (eng.host_syncs - syncs0) / max(toks, 1)}
+        if unified:
+            row["step_compilations"] = len(eng.unified_traces)
+            row["tokens_match_D1"] = streams[key] == streams.get("D1",
+                                                                 streams[key])
+        row["tokens_match_legacy"] = streams[key] == streams["legacy"]
+        assert row["tokens_match_legacy"], key
+        results.append(row)
+        print(f"device_loop {key:7s} itl={row['itl_ms_mean']:7.2f} ms "
+              f"syncs/tok={row['host_syncs_per_token']:5.3f} toks={toks}")
+    return results
 
 
 def main(fast: bool = False):
@@ -226,6 +301,7 @@ def main(fast: bool = False):
         print(f"staggered {r['mode']:7s} ttft={r['ttft_ms_mean']:8.1f} ms "
               f"(max {r['ttft_ms_max']:8.1f})  itl={r['itl_ms_mean']:7.1f} ms"
               f"  ticks={r['ticks']}")
+    device_loop = bench_device_loop(model, params, stag_states, fast=fast)
     report = {
         "config": {"model": "granite-3-2b (smoke)", "adapter": "mos",
                    "equiv_rank": ACFG.equiv_rank, "rank": ACFG.rank,
@@ -238,6 +314,7 @@ def main(fast: bool = False):
                             "traffic model that holds on hardware.")},
         "sweep": rows,
         "staggered_arrival": staggered,
+        "device_loop": device_loop,
     }
     OUT.write_text(json.dumps(report, indent=2) + "\n")
     print(f"wrote {OUT}")

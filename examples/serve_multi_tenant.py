@@ -4,10 +4,14 @@ many customized models served concurrently from one base.
 Trains two tiny MoS customizations (different tasks), then serves a mixed
 request stream through the continuous-batching engine: per-request adapter
 routing (BGMV), paged KV cache (the default) with copy-free slot reuse,
-unified token-budget scheduling, greedy decoding.  Prompts here have
-*different lengths* on purpose — each tick packs their prefill chunks
-alongside the active decode tokens in ONE shape-static jitted call, and
-each request holds only the pages its tokens need.
+and the device-resident macro-step — ``decode_ticks=4`` micro-steps of the
+unified token-budget forward per jitted call, with every slot's next token
+sampled ON DEVICE (here: greedy for one tenant, seeded top-k temperature
+sampling for the other) and fed straight into the next micro-step, so the
+host drains tokens once per macro tick instead of once per token.  Prompts
+have *different lengths* on purpose — prefill chunks pack alongside the
+active decode tokens in the same shape-static call, and each request holds
+only the pages its tokens need.
 
 Run: PYTHONPATH=src python examples/serve_multi_tenant.py
 """
@@ -24,7 +28,7 @@ from repro.configs import get_config, smoke
 from repro.core import AdapterConfig, count_from_state
 from repro.data import DataConfig, ShardedLoader, ASSISTANT, USER
 from repro.models import Model
-from repro.serving import Request, ServingEngine
+from repro.serving import Request, SamplingParams, ServingEngine
 from repro.train import (AdamWConfig, Trainer, TrainerConfig, pretrain_base)
 
 ACFG = AdapterConfig(method="mos", equiv_rank=2, rank=8, shards_per_vector=2,
@@ -59,15 +63,19 @@ def main():
           f"({n * 4 / 1024:.1f} KiB/tenant at fp32)")
 
     eng = ServingEngine(model, params, [st_copy, st_sort], slots=4,
-                        max_len=64, page_size=8)   # paged=True is the default
+                        max_len=64, page_size=8,   # paged=True is the default
+                        decode_ticks=4)            # 4 micro-steps per sync
     total_pages = eng.pages.free_pages
     rng = np.random.default_rng(0)
     for i in range(6):
         payload = rng.integers(10, 100, size=int(rng.integers(2, 7))
                                ).astype(np.int32)   # mixed prompt lengths
         prompt = np.concatenate([[USER], payload, [ASSISTANT]]).astype(np.int32)
+        # tenant 0 decodes greedily; tenant 1 samples (seeded, on device)
+        sp = (None if i % 2 == 0 else
+              SamplingParams(temperature=0.8, top_k=16, seed=1000 + i))
         eng.submit(Request(rid=i, prompt=prompt, adapter_id=i % 2,
-                           max_new=5))
+                           max_new=5, sampling=sp))
     eng.step()                                      # first tick admits
     in_use = total_pages - eng.pages.free_pages
     print(f"page pool: {in_use}/{total_pages} pages "
@@ -76,10 +84,14 @@ def main():
           f"regardless of load")
     done = eng.run(max_ticks=64)
     assert eng.pages.free_pages == total_pages      # all pages returned
+    print(f"{eng.tokens_out} tokens over {eng.host_syncs} host syncs "
+          f"({eng.tokens_out / eng.host_syncs:.1f} tokens drained per "
+          f"device→host round-trip)")
     for r in sorted(done, key=lambda r: r.rid):
         tenant = ["copy", "sort"][r.adapter_id]
-        print(f"req {r.rid} [tenant={tenant}] prompt={r.prompt[1:-1].tolist()}"
-              f" -> out={r.out}")
+        mode = "greedy" if r.sampling is None else "top-k sampled"
+        print(f"req {r.rid} [tenant={tenant} {mode}] "
+              f"prompt={r.prompt[1:-1].tolist()} -> out={r.out}")
 
 
 if __name__ == "__main__":

@@ -9,4 +9,8 @@ flash_attention  — blockwise causal attention with exact tile skipping
 paged_attention  — decode attention over a block-table paged KV cache:
                    scalar-prefetched page walk + page write/gather ops
                    (docs/serving.md §Paged KV cache)
+sampling         — fused top-k/top-p logits filter for on-device sampling:
+                   sort-free MSB-first threshold search over the int32
+                   order-image of each (slots, V) row (docs/serving.md
+                   §On-device sampling)
 """

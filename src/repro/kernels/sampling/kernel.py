@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: fused top-k/top-p logits filter for on-device sampling.
+
+The serving engine's device-resident decode loop samples every slot's next
+token in-graph (docs/serving.md §On-device sampling).  The expensive part of
+top-k / nucleus filtering is *selection* over the ``(slots, V)`` logits row;
+a sort-based implementation needs O(V log V) work and a full-vocab sort
+network the TPU lowers badly.  This kernel instead finds both cut values by
+**MSB-first threshold construction** over the order-preserving int32 image of
+the float row — 31 fixed iterations, each a row-wide compare+reduce on the
+VPU, no sort, no gather:
+
+  * floats map to int32 keys via ``u ^ ((u >> 31) & 0x7fffffff)`` (sign bit
+    kept, mantissa/exponent bits flipped for negatives), a total order that
+    matches float ``<`` exactly, so thresholds land ON element values and
+    the masks are exact — no epsilon search;
+  * top-k keeps ``x`` iff ``x >= (k-th largest value)`` — count-based, so
+    rows with ties at the boundary keep *all* tied entries (the documented
+    tie semantics, shared with ``ref.topk_topp_ref``);
+  * top-p keeps ``x`` iff the softmax mass strictly above ``x`` is < p — the
+    minimal by-value nucleus, again tie-inclusive.  Mass predicates reuse
+    the same threshold construction with a masked ``sum`` instead of a
+    ``count``.
+
+Per-row params ride as (1, 1) blocks: ``k <= 0`` or ``k >= V`` disables the
+top-k cut, ``p`` outside ``(0, 1)`` disables the nucleus cut, so one fixed
+executable serves any per-slot mix (greedy slots are filtered upstream).
+Filtered entries come back as ``NEG_INF`` (-1e30), matching the vocab-pad
+masking convention in ``models.Model.logits``.
+
+Grid is one program per logits row, everything in VMEM; on hardware the row
+length should be a multiple of 128 lanes — ``Model``'s ``padded_vocab``
+already guarantees that for the serving path.  ``interpret=True`` (default)
+runs CPU-correct like every other kernel family here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+_INT_MIN = -(2 ** 31)
+
+
+def sortable_keys(x):
+    """float32 → int32 keys whose signed order equals the float order.
+
+    ``u >= 0``: bits already ascend with value.  ``u < 0`` (negative float):
+    flip the non-sign bits so more-negative values get smaller keys.  Shared
+    by the kernel and the ref oracle so tie semantics can never diverge.
+    """
+    u = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    return u ^ ((u >> 31) & 0x7FFFFFFF)
+
+
+def _largest_threshold(pred):
+    """Max int32 ``t`` with ``pred(t)`` true, for a predicate monotone
+    non-increasing in ``t`` that is true at int32 min.  MSB-first greedy
+    bit construction: decide the sign bit, then 31 value bits.  (Literals
+    stay Python ints — Pallas kernels may not capture array constants.)"""
+    t0 = jnp.where(pred(0), 0, _INT_MIN).astype(jnp.int32)
+
+    def body(i, t):
+        cand = t | jnp.left_shift(1, 30 - i).astype(jnp.int32)
+        return jnp.where(pred(cand), cand, t)
+
+    return jax.lax.fori_loop(0, 31, body, t0)
+
+
+def _topk_topp_kernel(x_ref, k_ref, p_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)                   # (1, V)
+    V = x.shape[-1]
+    keys = sortable_keys(x)                              # (1, V) int32
+    k = k_ref[0, 0]
+    p = p_ref[0, 0]
+
+    # --- top-k: threshold at the k-th largest key (count predicate) ------
+    kk = jnp.where((k <= 0) | (k >= V), V, k)
+
+    def count_ge(t):
+        return jnp.sum((keys >= t).astype(jnp.int32)) >= kk
+
+    keep_k = keys >= _largest_threshold(count_ge)
+
+    # --- top-p over the top-k survivors (mass predicate) -----------------
+    m = jnp.max(x, axis=-1, keepdims=True)               # row max survives k
+    q = jnp.where(keep_k, jnp.exp(x - m), 0.0)
+    pz = p * jnp.sum(q)
+
+    def mass_ge(t):
+        return jnp.sum(jnp.where(keys >= t, q, 0.0)) >= pz
+
+    keep_p = keys >= _largest_threshold(mass_ge)
+    keep_p = keep_p | jnp.logical_not((p > 0.0) & (p < 1.0))
+
+    o_ref[...] = jnp.where(keep_k & keep_p, x, NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def topk_topp_pallas(logits, top_k, top_p, interpret: bool = True):
+    """logits (S, V) f32, top_k (S,) int32, top_p (S,) f32 → (S, V) f32
+    with everything outside the per-row top-k ∩ nucleus set at ``NEG_INF``.
+
+    Tie-inclusive on both cuts (all entries equal to a boundary value are
+    kept), row-max always kept, disabled cuts pass rows through unchanged.
+    ``tests/test_sampling.py`` pins exact mask equality against
+    :func:`ref.topk_topp_ref` including tie and degenerate pad rows.
+    """
+    S, V = logits.shape
+    grid_spec = pl.GridSpec(
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, V), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, V), lambda b: (b, 0)),
+    )
+    return pl.pallas_call(
+        _topk_topp_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, V), jnp.float32),
+        interpret=interpret,
+    )(logits.astype(jnp.float32),
+      top_k.astype(jnp.int32).reshape(S, 1),
+      top_p.astype(jnp.float32).reshape(S, 1))

@@ -1,0 +1,46 @@
+"""On-device sampling ops: the fused top-k/top-p filter entry point.
+
+``topk_topp_mask`` is the selection half of the serving sampler
+(``serving.sampling.sample_tokens``): it returns the logits row with
+everything outside the per-slot top-k ∩ nucleus set pushed to ``NEG_INF``;
+the draw itself (Gumbel / ``jax.random.categorical``) stays in plain jnp
+because it is O(V) elementwise work XLA already fuses.
+
+Semantics (shared by both backends, pinned bitwise in tests):
+  * tie-inclusive cuts — every entry equal to a boundary value is kept, so
+    the filter is a pure function of the *value multiset*, not of sort
+    order;
+  * ``top_k <= 0`` or ``>= V`` disables the top-k cut; ``top_p`` outside
+    ``(0, 1)`` disables the nucleus cut;
+  * the row max always survives, so a categorical draw over the filtered
+    row is always well-defined (degenerate all-equal rows keep everything).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import NEG_INF, sortable_keys, topk_topp_pallas
+from .ref import topk_topp_ref
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+def topk_topp_mask(logits, top_k, top_p, backend: str = "pallas",
+                   interpret: bool = True):
+    """logits (S, V), top_k (S,) int, top_p (S,) float → (S, V) f32.
+
+    ``backend="pallas"`` runs the fused bit-search kernel (one program per
+    row, no sort); ``"ref"`` is the O(V²) per-element oracle.
+    """
+    top_k = jnp.asarray(top_k, jnp.int32)
+    top_p = jnp.asarray(top_p, jnp.float32)
+    if backend == "ref":
+        return topk_topp_ref(logits, top_k, top_p)
+    assert backend == "pallas", f"unknown sampling backend {backend!r}"
+    return topk_topp_pallas(logits, top_k, top_p, interpret=interpret)
+
+
+__all__ = ["topk_topp_mask", "topk_topp_pallas", "topk_topp_ref",
+           "sortable_keys", "NEG_INF"]

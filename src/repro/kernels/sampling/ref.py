@@ -1,0 +1,44 @@
+"""Pure-jnp reference for the fused top-k/top-p filter kernel.
+
+Self-contained oracle stating the semantics *per element* instead of via
+thresholds, so it cannot share a bug with the kernel's bit-search:
+
+  * keep ``x_i`` under top-k  iff  ``#{j : x_j > x_i} < k`` — i.e. ``x_i``
+    ranks within the top k counting strictly-greater values only, which
+    keeps every entry tied at the k-th value;
+  * keep ``x_i`` under top-p  iff  ``Σ_{x_j > x_i} softmax(x)_j < p·Z`` over
+    the top-k survivors — the minimal by-value nucleus, tie-inclusive.
+
+Comparisons run on the same ``sortable_keys`` int32 image the kernel uses
+(total order; ``-0.0 < +0.0``) and the masses are the same masked sums over
+the same index order, so the masks agree **exactly** — the parity tests
+assert bitwise-equal filtered rows, not allclose.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import NEG_INF, sortable_keys
+
+
+def topk_topp_ref(logits, top_k, top_p):
+    """logits (S, V), top_k (S,) int32, top_p (S,) f32 → (S, V) filtered."""
+    x = logits.astype(jnp.float32)
+    S, V = x.shape
+    keys = sortable_keys(x)                              # (S, V)
+    gt = keys[:, None, :] > keys[:, :, None]             # (S, V, V): j > i
+
+    kk = jnp.where((top_k <= 0) | (top_k >= V), V, top_k.astype(jnp.int32))
+    keep_k = jnp.sum(gt.astype(jnp.int32), axis=-1) < kk[:, None]
+
+    m = jnp.max(x, axis=-1, keepdims=True)
+    q = jnp.where(keep_k, jnp.exp(x - m), 0.0)           # (S, V)
+    pz = top_p.astype(jnp.float32) * jnp.sum(q, axis=-1)
+    mass_above = jnp.sum(jnp.where(gt, q[:, None, :], 0.0), axis=-1)
+    keep_p = mass_above < pz[:, None]
+    keep_p |= jnp.logical_not((top_p > 0.0) & (top_p < 1.0))[:, None]
+
+    return jnp.where(keep_k & keep_p, x, NEG_INF)
+
+
+__all__ = ["topk_topp_ref"]

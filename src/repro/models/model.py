@@ -138,6 +138,17 @@ class Model:
         x = norm_apply(self.cfg.norm, x, params, "final_norm.")
         return constrain_batch(x)
 
+    def logits_at(self, params, h, cols):
+        """The serving sampling head: project ONE hidden column per row.
+
+        ``h`` (B, Q, d) is a packed-span forward's output, ``cols`` (B,)
+        names each row's last *valid* column — only that column pays the
+        vocab matmul, so a unified/fused step's LM head is (B, d) x (d, V)
+        regardless of the chunk width.  Returns logits (B, V).
+        """
+        sel = h[jnp.arange(h.shape[0]), cols]
+        return self.logits(params, sel[:, None])[:, 0]
+
     def logits(self, params, x):
         w = params["embed"] if self.cfg.tie_embeddings else params["lm_head"]
         w = constrain_use(w, self.axes["embed" if self.cfg.tie_embeddings

@@ -1,5 +1,6 @@
 """Multi-tenant adapter serving (the paper's motivating scenario)."""
 from .engine import (ServingEngine, Request, make_serve_step,
-                     make_prefill_step, make_unified_step)
+                     make_prefill_step, make_unified_step, make_fused_step)
 from .multi_tenant import stack_tenants, MTHooks, make_mt_factory
 from .paging import PagePool, paginate_cache
+from .sampling import SamplingParams, sample_tokens

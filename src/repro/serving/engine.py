@@ -1,38 +1,56 @@
-"""Serving engine: one shape-static jitted token-budget step + a
-continuous-batching scheduler for multi-tenant adapter serving.
+"""Serving engine: device-resident multi-tick decode + a continuous-batching
+scheduler for multi-tenant adapter serving.
 
-The engine's default serving path is the **unified step**: every tick runs
-ONE jitted call over a fixed ``(slots, chunk)`` token buffer that packs,
-per slot, either the slot's single decode token (column 0) or a
-page-aligned prefill *chunk* of its prompt — so prefill streams in
-alongside decode instead of ahead of it.  Shapes never depend on the
-admitted group or the prompt-length mix, so the engine traces exactly one
-executable per lifetime, long prompts cannot stall active decoders for a
-full-prompt prefill, and prompts larger than the instantaneous free-page
-span admit chunk-by-chunk as pages free up.
+The engine's default serving path is the **fused macro-step**: every tick
+runs ONE jitted call that executes ``decode_ticks`` (D) *micro-steps* of the
+unified token-budget forward under ``lax.scan``, samples every slot's next
+token **on device** (greedy / temperature / top-k / top-p, per-slot params,
+counter-based PRNG — ``serving.sampling``), and feeds it straight into the
+next micro-step's packed buffer.  Per-slot masks stop feeding in-graph on
+EOS, on the request's ``max_new`` budget, and on the page coverage the host
+pre-extended for the tick, so the host's only per-tick work is draining a
+``(D, slots)`` token buffer and running admission/retirement between macro
+ticks — the per-token device→host round-trip that used to gate inter-token
+latency is amortized D×.
+
+Each micro-step is the unified token-budget forward of PR 3: a fixed
+``(slots, chunk)`` buffer packing, per slot, either its fed decode token or
+a page-aligned prefill chunk — prompt chunks for ALL D micro-steps are
+prepacked by the host (it knows the prompt), and a request whose final
+prompt chunk lands mid-macro-tick flips to decode in-graph, sampling its
+first token from that chunk's last logits column.  Idle slots donate their
+token-budget lanes to the earliest still-prefilling request (their rows
+temporarily alias its block-table row), so admission bandwidth scales with
+the idle budget instead of a fixed per-slot chunk.
+
+Shapes never depend on the admitted mix, so the engine still traces exactly
+one executable per lifetime (``fused._traces``, now parameterized over D).
 
 The legacy two-phase jitted steps (``make_prefill_step`` /
 ``make_serve_step``) remain the path for mamba-bearing archs (a packed
 multi-request buffer would contaminate the scanned SSM state), for dense
-ring caches, and as the parity oracle for the unified step.
+ring caches, and as the parity oracle — their token selection runs through
+``_select_tokens``, the same jitted sampler the device loop uses, so a
+request's stream is bitwise identical under either scheduler.
 
 Perf structure (docs/serving.md):
   * ``backend="fused"`` (default) applies adapters through the
-    pool-resident Pallas BGMV kernels — the unified step flattens its
+    pool-resident Pallas BGMV kernels — the unified micro-step flattens its
     packed (slots, chunk) buffer to slots·chunk single-token rows so the
     same kernels serve chunked prefill; ``"jnp"`` is the reference path.
   * ``paged=True`` (default) keeps KV state in a global **page pool**
     behind per-request block tables.  Pages are **reserved** as counts at
     admission and **backed incrementally** as chunks/decode tokens
-    actually need them, so a fully-admitted request can never OOM
-    mid-flight while memory tracks tokens actually written.
+    actually need them — the macro-tick packer pre-extends coverage for
+    the tick's worst-case D-token growth, allowance-gated.
   * the jitted step's cache argument is **donated**, so the KV pools /
     slot buffers are reused in place across ticks.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +59,7 @@ import numpy as np
 from ..models.attention import INVALID_POS
 from .multi_tenant import make_mt_factory, stack_tenants
 from .paging import PagePool
+from .sampling import SamplingParams, params_to_arrays, sample_tokens
 
 
 def make_serve_step(model, tenants: int = 0, backend: str = "fused",
@@ -94,21 +113,16 @@ def make_prefill_step(model, tenants: int = 0, backend: str = "fused",
 
 def make_unified_step(model, tenants: int = 0, backend: str = "fused",
                       interpret: bool = True, attn_backend: str = "pallas"):
-    """The unified token-budget step: chunked prefill + decode in one
-    shape-static call.  ``tokens``/``positions`` are the packed
-    (slots, chunk) buffer; ``last_col`` (slots,) int32 names each row's
-    last valid column — only that hidden state is projected to the vocab
-    (logits (slots, V)), so decode ticks don't pay chunk× the LM head.
+    """ONE unified token-budget micro-step: chunked prefill + decode in one
+    shape-static call returning logits — the D=1, host-sampled form kept as
+    the building block, a public API, and the parity oracle for
+    :func:`make_fused_step` (which wraps D of these in a scan and samples
+    in-graph).
 
     The returned function carries ``._traces``, a list appended to on
-    every jit trace — the compile-count regression hook: its length must
-    stay 1 for an engine lifetime regardless of the prompt-length mix.
+    every jit trace — the compile-count regression hook.
     """
     traces: List[int] = []
-
-    def _head(params, h, last_col):
-        sel = h[jnp.arange(h.shape[0]), last_col]          # (slots, d)
-        return model.logits(params, sel[:, None])[:, 0]
 
     if tenants > 0:
         def unified_step(params, ad_stack, tokens, positions, last_col,
@@ -120,7 +134,7 @@ def make_unified_step(model, tenants: int = 0, backend: str = "fused",
                 params, ad_stack, tokens, positions, cache,
                 hooks_factory=fac, attn_backend=attn_backend,
                 attn_interpret=interpret)
-            return new_cache, _head(params, h, last_col)
+            return new_cache, model.logits_at(params, h, last_col)
         unified_step._traces = traces
         return unified_step
 
@@ -129,9 +143,94 @@ def make_unified_step(model, tenants: int = 0, backend: str = "fused",
         new_cache, h = model.unified_forward(
             params, ad_state, tokens, positions, cache,
             attn_backend=attn_backend, attn_interpret=interpret)
-        return new_cache, _head(params, h, last_col)
+        return new_cache, model.logits_at(params, h, last_col)
     unified_step._traces = traces
     return unified_step
+
+
+def make_fused_step(model, decode_ticks: int, tenants: int = 0,
+                    backend: str = "fused", interpret: bool = True,
+                    attn_backend: str = "pallas",
+                    sample_backend: str = "pallas"):
+    """The device-resident macro-step: ``decode_ticks`` (D) unified
+    micro-steps + on-device sampling fused into ONE jitted call.
+
+    ``plan`` is the host-prepacked tick description (all shapes static):
+
+      tokens/positions (D, slots, chunk)  prefill chunks / pads; decode
+                                          lanes are overridden in-graph
+      last_col  (D, slots) int32   each row's last valid column
+      samp_row  (D, slots) int32   row whose logits slot ``s`` samples
+                                   (≠ s when an idle lane carried the
+                                   donated final prompt chunk)
+      final     (D, slots) bool    slot's prompt completes this micro-step
+      feed0/tok0/len0 (slots,)     decode carry seed: slots mid-decode feed
+                                   ``tok0`` at position ``len0`` at t=0
+      cap       (slots,) int32     max tokens producible this tick (rem
+                                   ``max_new`` ∧ host-backed page coverage)
+      plen      (slots,) int32     prompt length (context at decode entry)
+      eos       (slots,) int32     stop token (-1 disables)
+      adapter_ids (slots,) int32   (donor lanes carry the donee's id)
+      temperature/top_k/top_p/seed (slots,)  sampling params
+
+    Per micro-step: feeding slots override column 0 of their row with the
+    carried token/position, the unified forward writes pages + attends,
+    ``Model.logits_at`` projects one column per row, ``sample_tokens``
+    draws every slot's token (counter = the token's context position, so
+    streams are D-invariant), and the carry updates: a slot stops feeding
+    when it sampled its ``cap``-th token or hit ``eos`` — pads from then
+    on, so no page writes and no logits reads leak past the stop.
+
+    Returns ``(new_cache, tokens (D, slots) int32, valid (D, slots) bool)``
+    — the host drains the buffer in one device→host sync.  Carries
+    ``._traces`` like :func:`make_unified_step`; one trace per engine
+    lifetime regardless of the admitted mix.
+    """
+    traces: List[int] = []
+
+    def fused_step(params, ad_stack, plan, cache):
+        traces.append(1)
+        assert plan["tokens"].shape[0] == decode_ticks, plan["tokens"].shape
+        S, Q = plan["tokens"].shape[1], plan["tokens"].shape[2]
+        col0 = (jnp.arange(Q, dtype=jnp.int32) == 0)[None, :]      # (1, Q)
+        fac = None
+        if tenants > 0:
+            fac = make_mt_factory(plan["adapter_ids"], backend=backend,
+                                  interpret=interpret, fuse_tokens=True)
+
+        def micro(carry, xs):
+            cache, feed, tok, ln, made = carry
+            toks_t, pos_t, last_t, srow_t, final_t = xs
+            fcol = feed[:, None] & col0
+            toks = jnp.where(fcol, tok[:, None], toks_t)
+            pos = jnp.where(fcol, ln[:, None], pos_t)
+            last = jnp.where(feed, 0, last_t)
+            cache, h = model.unified_forward(
+                params, ad_stack, toks, pos, cache, hooks_factory=fac,
+                attn_backend=attn_backend, attn_interpret=interpret)
+            logits = model.logits_at(params, h, last)              # (S, V)
+            lrow = jnp.take(logits, srow_t, axis=0)
+            emit = feed | final_t
+            counter = jnp.where(final_t, plan["plen"], ln + 1)
+            samp = sample_tokens(lrow, plan["temperature"], plan["top_k"],
+                                 plan["top_p"], plan["seed"], counter,
+                                 backend=sample_backend, interpret=interpret)
+            tok2 = jnp.where(emit, samp, tok)
+            ln2 = jnp.where(emit, counter, ln)
+            made2 = made + emit.astype(jnp.int32)
+            hit_eos = emit & (plan["eos"] >= 0) & (tok2 == plan["eos"])
+            feed2 = emit & (made2 < plan["cap"]) & jnp.logical_not(hit_eos)
+            return (cache, feed2, tok2, ln2, made2), (tok2, emit)
+
+        init = (cache, plan["feed0"], plan["tok0"], plan["len0"],
+                jnp.zeros((S,), jnp.int32))
+        xs = (plan["tokens"], plan["positions"], plan["last_col"],
+              plan["samp_row"], plan["final"])
+        (cache, *_), (toks_out, valid_out) = jax.lax.scan(micro, init, xs)
+        return cache, toks_out, valid_out
+
+    fused_step._traces = traces
+    return fused_step
 
 
 @dataclasses.dataclass
@@ -140,6 +239,8 @@ class Request:
     prompt: np.ndarray           # (S,) int32
     adapter_id: int
     max_new: int = 16
+    sampling: Optional[SamplingParams] = None   # None → greedy
+    eos_id: Optional[int] = None                # stop token (also emitted)
     out: Optional[List[int]] = None
     done: bool = False
 
@@ -169,42 +270,48 @@ def insert_slot(batch_cache, src_cache, slot: int, src: int = 0):
 
 
 class ServingEngine:
-    """Continuous-batching engine, unified token-budget scheduler.
+    """Continuous-batching engine, device-resident macro-tick scheduler.
 
-    **Unified mode** (default on paged attention-only archs): every tick
-    is ONE jitted ``unified_step`` over a fixed ``(slots, chunk)`` token
-    buffer.  Each slot contributes its packed span for the tick:
+    **Unified mode** (default on paged attention-only archs): every tick is
+    ONE jitted ``fused_step`` running ``decode_ticks`` micro-steps of the
+    unified token-budget forward with on-device sampling between them.
+    Each micro-step's ``(slots, chunk)`` buffer packs, per slot:
 
-      * a *decode* slot puts its one fed token in column 0 (position =
-        tokens written so far);
-      * an *admitting* slot puts its next prompt chunk — a page-aligned
-        ``(start, len)`` span tracked by a per-request **chunk cursor**,
-        bounded by the chunk budget and by the pages the pool can back
-        this tick;
+      * a *decode* slot's one fed token in column 0 — carried on device
+        from the previous micro-step's sample (the host seeds only t=0);
+      * an *admitting* slot's next prompt chunk — page-aligned spans
+        prepacked for all D micro-steps from the per-request **chunk
+        cursor**, bounded by the chunk budget and by the pages the pool
+        can back this tick.  Idle slots' lanes are donated to the earliest
+        admitting request (their rows alias its block table), so prefill
+        bandwidth grows with the idle budget;
       * an idle/stalled slot contributes only pads (``INVALID_POS``
         positions: page writes drop, attention rows come back zero, and
         its logits column is never read).
 
     Admission assigns a slot and *reserves* the trajectory's pages as a
     count (``PagePool.reserve``); pages are *backed* chunk-by-chunk
-    (``ensure``), so a prompt larger than the instantaneous free-page span
-    still admits — the FIFO head may **oversubscribe** (reserve more than
-    is currently available) and streams in as other requests retire.  At
-    most one oversubscribed request is in flight, which keeps every
-    fully-reserved request deadlock-free.  A request's first generated
-    token falls out of the logits column of its final prompt chunk, so
-    admission→first-token needs no separate prefill call — and the engine
-    traces exactly ONE executable per lifetime (``unified._traces``).
+    (``ensure``) — the packer pre-extends each decode lane's coverage for
+    the tick's worst-case D-token growth, so feeding never outruns memory
+    and an oversubscribed FIFO head still streams in as pages free.  A
+    request's first generated token falls out of its final prompt chunk's
+    logits column mid-macro-tick (no prefill call), EOS / ``max_new`` stop
+    feeding in-graph, and the engine traces exactly ONE executable per
+    lifetime (``unified_traces``) regardless of the prompt-length mix.
+
+    The host's per-tick device→host traffic is ONE ``(D, slots)`` token
+    drain (``host_syncs`` counts them; ``tokens_out`` counts tokens) —
+    with D=16, 1/16th of a sync per token instead of one.
 
     On sliding-window archs the scheduler releases pages whose every
-    token has slid out of the window (trash-pointing their block-table
-    entries) and re-credits the reservation, so a long trajectory only
-    ever holds ~window worth of pages.
+    token has slid out of the attention window (trash-pointing their
+    block-table entries) and re-credits the reservation, so a long
+    trajectory only ever holds ~window worth of pages.
 
     **Legacy mode** (``unified=False``, mamba-bearing archs, or
     ``paged=False``) keeps the two-phase path: batched admission prefills
-    (one left-padded call on attention-only archs, per-length groups
-    otherwise) followed by one-token decode steps.
+    followed by one-token decode steps, with token selection through the
+    same jitted sampler (``_select_tokens``) — bitwise-identical streams.
     """
 
     def __init__(self, model, params, tenant_states: Sequence[Any],
@@ -213,7 +320,8 @@ class ServingEngine:
                  stack_cache: bool = True, paged: bool = True,
                  page_size: int = 8, num_pages: Optional[int] = None,
                  attn_backend: str = "pallas", unified: bool = True,
-                 chunk: Optional[int] = None):
+                 chunk: Optional[int] = None, decode_ticks: int = 1,
+                 sample_backend: str = "pallas"):
         self.model, self.params = model, params
         self.tenants = len(tenant_states)
         self.backend = backend
@@ -232,6 +340,21 @@ class ServingEngine:
         self._mixed_ok = model.cfg.family in ("dense", "moe")
         self.unified = bool(unified and paged and self._mixed_ok)
         self.chunk = chunk if chunk is not None else 2 * page_size
+        self.decode_ticks = int(decode_ticks)
+        if self.decode_ticks < 1:
+            raise ValueError(f"decode_ticks {decode_ticks} < 1")
+        if self.decode_ticks > 1 and not self.unified:
+            raise ValueError(
+                "device-resident multi-tick decode (decode_ticks > 1) "
+                "requires the unified scheduler (paged attention-only arch)")
+        self.sample_backend = sample_backend
+        # telemetry: device→host syncs (one per _select_tokens call / per
+        # macro-tick drain) and tokens drained — benchmarks report the
+        # syncs-per-token ratio the device loop amortizes
+        self.host_syncs = 0
+        self.tokens_out = 0
+        self._sampler = jax.jit(functools.partial(
+            sample_tokens, backend=sample_backend, interpret=interpret))
         # cache (last arg) is donated: decode buffers reused across ticks
         self.serve = jax.jit(
             make_serve_step(model, tenants=self.tenants, backend=backend,
@@ -241,11 +364,13 @@ class ServingEngine:
             make_prefill_step(model, tenants=self.tenants, backend=backend,
                               interpret=interpret))
         if self.unified:
-            ufn = make_unified_step(model, tenants=self.tenants,
-                                    backend=backend, interpret=interpret,
-                                    attn_backend=attn_backend)
-            self.unified_traces = ufn._traces
-            self.ustep = jax.jit(ufn, donate_argnums=(6,))
+            ffn = make_fused_step(model, decode_ticks=self.decode_ticks,
+                                  tenants=self.tenants, backend=backend,
+                                  interpret=interpret,
+                                  attn_backend=attn_backend,
+                                  sample_backend=sample_backend)
+            self.unified_traces = ffn._traces
+            self.fstep = jax.jit(ffn, donate_argnums=(3,))
         self._queue: List[Request] = []
         self._active: List[Optional[Request]] = [None] * slots
         if paged:
@@ -266,6 +391,32 @@ class ServingEngine:
         self._cursor: Dict[int, int] = {}    # slot → prompt tokens written
         self._len: Dict[int, int] = {}       # slot → total tokens written
         self._oversub_slot: Optional[int] = None
+        self._last_valid: Optional[np.ndarray] = None   # debug/test hook
+
+    # ------------------------------------------------------------------
+    # token selection (legacy host path)
+    # ------------------------------------------------------------------
+
+    def _select_tokens(self, logits, rows) -> np.ndarray:
+        """THE host-side token-selection point of the legacy two-phase path
+        (the unified path samples on device).  ``rows`` pairs each logits
+        row with ``(request | None, counter)`` — the counter is the context
+        position the sampled token will occupy, the sampler's PRNG
+        counter.  Runs the SAME jitted ``sample_tokens`` as the device
+        loop, so a request's stream is bitwise identical under either
+        scheduler (greedy rows reduce to the raw-logits argmax).  One
+        device→host sync per call."""
+        sp = params_to_arrays([req.sampling if req is not None else None
+                               for req, _ in rows])
+        ctr = np.asarray([c for _, c in rows], np.int32)
+        toks = self._sampler(jnp.asarray(logits), sp["temperature"],
+                             sp["top_k"], sp["top_p"], sp["seed"], ctr)
+        self.host_syncs += 1
+        return np.asarray(toks)
+
+    @staticmethod
+    def _hit_eos(req: Request, tok: int) -> bool:
+        return req.eos_id is not None and tok == int(req.eos_id)
 
     # ------------------------------------------------------------------
     # admission bookkeeping
@@ -273,10 +424,13 @@ class ServingEngine:
 
     def _swa_cap_pages(self) -> Optional[int]:
         """Standing page-reservation ceiling under sliding-window freeing:
-        resident pages never exceed ~window + one in-flight chunk."""
+        resident pages never exceed ~window + one in-flight macro-tick's
+        growth (a chunk of prefill or D decode tokens — freeing only runs
+        between macro ticks)."""
         if self.window <= 0 or not self._mixed_ok:
             return None
-        return (self.window + self.chunk) // self.page_size + 2
+        grow = max(self.chunk, self.decode_ticks)
+        return (self.window + grow) // self.page_size + 2
 
     def _effective_tokens(self, need: int) -> int:
         """Resident-token bound for a ``need``-token trajectory under the
@@ -392,7 +546,8 @@ class ServingEngine:
             batch["lengths"] = jnp.asarray(lengths)
         new_cache, logits = self.prefill(self.params, self.ad_stack, batch,
                                          ids, pcache)
-        first = np.asarray(jnp.argmax(logits, axis=-1))
+        first = self._select_tokens(
+            logits, [(req, len(req.prompt)) for _, req in admitted])
 
         # merge: KV pools were updated in place (page-disjoint writes);
         # per-slot leaves scatter row-by-row; host block tables are
@@ -436,7 +591,8 @@ class ServingEngine:
             group_cache, logits = self.prefill(
                 self.params, self.ad_stack,
                 {"tokens": jnp.asarray(toks)}, ids, group_cache)
-            first = np.asarray(jnp.argmax(logits, axis=-1))
+            first = self._select_tokens(
+                logits, [(req, len(req.prompt)) for _, req in group])
             for j, (slot, req) in enumerate(group):
                 self._active[slot] = req
                 self.adapter_ids[slot] = req.adapter_id
@@ -445,7 +601,7 @@ class ServingEngine:
                 self._len[slot] = len(req.prompt)
 
     # ------------------------------------------------------------------
-    # unified token-budget scheduling
+    # unified token-budget scheduling (device-resident macro ticks)
     # ------------------------------------------------------------------
 
     def _admit_unified(self):
@@ -510,61 +666,153 @@ class ServingEngine:
         if changed and not self.unified:
             self.cache["block_tables"] = jnp.asarray(self.pages.block_tables)
 
-    def _unified_tick(self) -> List[Request]:
-        self._admit_unified()
-        Q = self.chunk
-        toks = np.zeros((self.slots, Q), np.int32)
-        pos = np.full((self.slots, Q), int(INVALID_POS), np.int32)
-        last_col = np.zeros((self.slots,), np.int32)
-        spans: Dict[int, int] = {}   # slot → chunk len (0 = decode token)
+    def _ensure_growth(self, s: int, start: int, want: int) -> int:
+        """Pre-extend slot ``s``'s page coverage for up to ``want`` decode
+        writes at positions ``start..`` — the macro-tick's worst-case page
+        growth, allowance-gated so an oversubscribed slot never starves a
+        fully-reserved one.  Returns the writes actually coverable."""
+        req = self._active[s]
+        target = min(start + want, self._traj_tokens(req))
+        covered = self.pages.covered_tokens(s)
+        if target > covered:
+            target = min(target, self.pages.backable_tokens(s))
+            if target > covered:
+                self.pages.ensure(s, target)
+        return max(0, self.pages.covered_tokens(s) - start)
+
+    def _pack_macro(self) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """Prepack the fused macro-step's plan (see :func:`make_fused_step`)
+        plus this tick's block tables.  Everything the D micro-steps need
+        from the host is decided here: prompt chunk spans for every
+        micro-step (the host knows the prompt), page pre-extension for the
+        worst-case decode growth, per-slot stop budgets, and the dynamic
+        chunk-budget split — idle lanes donate their (chunk,) columns to
+        the earliest still-prefilling request, whose block-table row they
+        temporarily alias (uploaded fresh every tick, so nothing leaks)."""
+        S, Q, D = self.slots, self.chunk, self.decode_ticks
+        toks = np.zeros((D, S, Q), np.int32)
+        pos = np.full((D, S, Q), int(INVALID_POS), np.int32)
+        last = np.zeros((D, S), np.int32)
+        srow = np.broadcast_to(np.arange(S, dtype=np.int32), (D, S)).copy()
+        final = np.zeros((D, S), bool)
+        feed0 = np.zeros((S,), bool)
+        tok0 = np.zeros((S,), np.int32)
+        len0 = np.zeros((S,), np.int32)
+        cap = np.zeros((S,), np.int32)
+        plen = np.zeros((S,), np.int32)
+        eos = np.full((S,), -1, np.int32)
+        sp = params_to_arrays([r.sampling if r is not None else None
+                               for r in self._active])
+        ids = self.adapter_ids.copy()
+
+        # dynamic per-tick chunk-budget split: idle decode lanes donate
+        # their token-budget columns to the earliest admitting request
+        donee = next((s for s, r in enumerate(self._active)
+                      if r is not None
+                      and self._cursor.get(s, 0) < len(r.prompt)), None)
+        donors = ([r for r in range(S) if self._active[r] is None]
+                  if donee is not None else [])
+        for r in donors:
+            ids[r] = self._active[donee].adapter_id
+
         for s, req in enumerate(self._active):
             if req is None:
                 continue
-            cur, L = self._cursor[s], len(req.prompt)
+            L = len(req.prompt)
+            plen[s] = L
+            if req.eos_id is not None:
+                eos[s] = int(req.eos_id)
+            rem = req.max_new - len(req.out)
+            cur = self._cursor.get(s, L)
             if cur < L:
-                # page-aligned prefill chunk: bounded by the budget, the
-                # prompt remainder, and the pages the pool can back NOW
-                cap_tok = (self.pages.covered_tokens(s) +
-                           self.pages.allowance(s) * self.page_size)
-                q = min(Q, L - cur, cap_tok - cur)
-                if q <= 0:
-                    continue             # stalled on pages this tick
-                self.pages.ensure(s, cur + q)
-                toks[s, :q] = req.prompt[cur:cur + q]
-                pos[s, :q] = np.arange(cur, cur + q)
-                last_col[s] = q - 1
-                spans[s] = q
+                rows = [s] + (donors if s == donee else [])
+                budget = self.pages.backable_tokens(s)
+                cap_p = self._swa_cap_pages()
+                if cap_p is not None:
+                    # sliding-window residency ceiling: one macro tick may
+                    # not grow the slot past ~window + a tick's growth of
+                    # RESIDENT pages (slid-out pages free and re-credit
+                    # between ticks, so sustained throughput is unchanged)
+                    head = max(0, cap_p - self.pages.resident_pages(s))
+                    budget = min(budget, self.pages.covered_tokens(s)
+                                 + head * self.page_size)
+                start, t_done = cur, None
+                for t in range(D):
+                    row_used = None
+                    for r in rows:
+                        q = min(Q, L - cur, budget - cur)
+                        if q <= 0:
+                            break
+                        toks[t, r, :q] = req.prompt[cur:cur + q]
+                        pos[t, r, :q] = np.arange(cur, cur + q)
+                        last[t, r] = q - 1
+                        row_used = r
+                        cur += q
+                    if cur == L and row_used is not None:
+                        final[t, s] = True
+                        srow[t, s] = row_used
+                        t_done = t
+                        break
+                    if row_used is None:
+                        break            # stalled on pages this tick
+                if cur > start:
+                    self.pages.ensure(s, cur)
+                    self._cursor[s] = cur
+                if t_done is None:
+                    continue             # still prefilling next tick
+                # decode tail after mid-tick completion: the first token
+                # falls out of the chunk's logits (no extra write); each
+                # further token writes its predecessor at plen..
+                want = min(max(D - 1 - t_done, 0), max(rem - 1, 0))
+                cap[s] = min(rem, 1 + self._ensure_growth(s, L, want))
             else:
                 n = self._len[s]
-                if self.pages.covered_tokens(s) < n + 1:
-                    if self.pages.allowance(s) < 1:
-                        continue         # oversubscribed decode stall
-                    self.pages.ensure(s, n + 1)
-                toks[s, 0] = req.out[-1] if req.out else int(req.prompt[-1])
-                pos[s, 0] = n
-                spans[s] = 0
-        self.cache["block_tables"] = jnp.asarray(self.pages.block_tables)
-        self.cache, logits = self.ustep(
-            self.params, self.ad_stack, jnp.asarray(toks), jnp.asarray(pos),
-            jnp.asarray(last_col), jnp.asarray(self.adapter_ids), self.cache)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))      # (slots,)
+                avail = self._ensure_growth(s, n, min(D, rem))
+                if avail <= 0:
+                    continue             # oversubscribed decode stall
+                feed0[s] = True
+                tok0[s] = req.out[-1] if req.out else int(req.prompt[-1])
+                len0[s] = n
+                cap[s] = min(rem, avail)
+        # snapshot block tables AFTER packing — ensure() backed this tick's
+        # pages above; donor lanes alias the donee's (now-complete) row
+        bt = self.pages.block_tables.copy()
+        for r in donors:
+            bt[r] = bt[donee]
+        plan = {"tokens": toks, "positions": pos, "last_col": last,
+                "samp_row": srow, "final": final, "adapter_ids": ids,
+                "feed0": feed0, "tok0": tok0, "len0": len0, "cap": cap,
+                "plen": plen, "eos": eos, **sp}
+        return plan, bt
+
+    def _unified_tick(self) -> List[Request]:
+        self._admit_unified()
+        plan, bt = self._pack_macro()
+        self.cache["block_tables"] = jnp.asarray(bt)
+        self.cache, toks_out, valid_out = self.fstep(
+            self.params, self.ad_stack, plan, self.cache)
+        # the macro tick's ONE device→host sync: drain the token buffer
+        toks_np = np.asarray(toks_out)
+        valid_np = np.asarray(valid_out)
+        self.host_syncs += 1
+        self._last_valid = valid_np
         finished: List[Request] = []
-        for s, q in spans.items():
+        for s in range(self.slots):
             req = self._active[s]
-            if q > 0:
-                self._cursor[s] += q
-                if self._cursor[s] == len(req.prompt):
-                    # the chunk held the last prompt token: its last-column
-                    # logits are the first generated token (no prefill call)
-                    req.out.append(int(nxt[s]))
-                    self._len[s] = len(req.prompt)
-                else:
-                    continue             # still prefilling
-            else:
-                req.out.append(int(nxt[s]))
-                self._len[s] += 1
-            if len(req.out) >= req.max_new:
-                req.done = True
+            if req is None:
+                continue
+            for t in range(self.decode_ticks):
+                if not valid_np[t, s]:
+                    continue
+                tok = int(toks_np[t, s])
+                req.out.append(tok)
+                self.tokens_out += 1
+                if len(req.out) >= req.max_new or self._hit_eos(req, tok):
+                    req.done = True
+                    break
+            if req.out:
+                self._len[s] = len(req.prompt) + len(req.out) - 1
+            if req.done:
                 self._active[s] = None
                 self.pages.release(s)
                 for d in (self._cursor, self._len):
@@ -579,19 +827,50 @@ class ServingEngine:
     # engine tick
     # ------------------------------------------------------------------
 
+    def _retire_legacy(self, i: int, retired: List[int],
+                       finished: List[Request]):
+        req = self._active[i]
+        req.done = True
+        self._active[i] = None
+        self._len.pop(i, None)
+        retired.append(i)
+        finished.append(req)
+
+    def _legacy_paged_cleanup(self, retired: List[int]):
+        if not (self.paged and retired):
+            return
+        for i in retired:
+            self.pages.release(i)         # copy-free: free list + table
+        pos = np.array(self.cache["pos"])
+        pos[retired] = 0                  # idle slots write trash page 0
+        self.cache["pos"] = jnp.asarray(pos)
+        self.cache["block_tables"] = jnp.asarray(self.pages.block_tables)
+
     def step(self) -> List[Request]:
-        """One engine tick.  Unified mode: one shape-static jitted call
-        packs this tick's token budget (decode tokens + prefill chunks).
-        Legacy mode: admit (prefill), then decode one token per active
-        slot.  Returns the requests that finished this tick."""
+        """One engine tick.  Unified mode: one shape-static jitted macro
+        step runs ``decode_ticks`` packed micro-steps (decode tokens +
+        prefill chunks) with on-device sampling.  Legacy mode: admit
+        (prefill), then decode one token per active slot.  Returns the
+        requests that finished this tick."""
         if self.unified:
             return self._unified_tick()
         self._admit()
-        # flush prefill-produced first tokens
+        finished: List[Request] = []
+        retired: List[int] = []
+        # flush prefill-produced first tokens; a request whose budget was
+        # a single token — or whose first token IS its stop token —
+        # retires before it ever feeds a decode step
         for i, tok in list(self._pending.items()):
             req = self._active[i]
-            if req is not None:
-                req.out.append(tok)
+            if req is None:
+                continue
+            req.out.append(tok)
+            self.tokens_out += 1
+            del self._pending[i]
+            if len(req.out) >= req.max_new or self._hit_eos(req, tok):
+                self._retire_legacy(i, retired, finished)
+        self._legacy_paged_cleanup(retired)
+        pre_retired = len(retired)
         toks = np.zeros((self.slots, 1), np.int32)
         for i, req in enumerate(self._active):
             if req is None:
@@ -600,29 +879,22 @@ class ServingEngine:
         self.cache, logits = self.serve(
             self.params, self.ad_stack, jnp.asarray(toks),
             jnp.asarray(self.adapter_ids), self.cache)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        retired: List[int] = []
-        finished: List[Request] = []
+        rows = []
+        for i, req in enumerate(self._active):
+            ctr = (self._len.get(i, len(req.prompt)) + 1
+                   if req is not None else 0)
+            rows.append((req, ctr))
+        nxt = self._select_tokens(logits, rows)
         for i, req in enumerate(self._active):
             if req is None:
                 continue
-            if i in self._pending:            # token already appended above
-                del self._pending[i]
-            req.out.append(int(nxt[i]))
+            tok = int(nxt[i])
+            req.out.append(tok)
+            self.tokens_out += 1
             self._len[i] = self._len.get(i, len(req.prompt)) + 1
-            if len(req.out) >= req.max_new:
-                req.done = True
-                self._active[i] = None
-                self._len.pop(i, None)
-                retired.append(i)
-                finished.append(req)
-        if self.paged and retired:
-            for i in retired:
-                self.pages.release(i)         # copy-free: free list + table
-            pos = np.array(self.cache["pos"])
-            pos[retired] = 0                  # idle slots write trash page 0
-            self.cache["pos"] = jnp.asarray(pos)
-            self.cache["block_tables"] = jnp.asarray(self.pages.block_tables)
+            if len(req.out) >= req.max_new or self._hit_eos(req, tok):
+                self._retire_legacy(i, retired, finished)
+        self._legacy_paged_cleanup(retired[pre_retired:])
         self._free_swa_pages()
         return finished
 

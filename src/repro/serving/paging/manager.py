@@ -99,6 +99,18 @@ class PagePool:
     def reserved_unbacked(self, slot: int) -> int:
         return self._reserved.get(slot, 0)
 
+    def resident_pages(self, slot: int) -> int:
+        """Pages ``slot`` physically holds right now (backed minus
+        prefix-freed) — what a sliding-window residency ceiling bounds."""
+        return len(self._owned.get(slot, ()))
+
+    def backable_tokens(self, slot: int) -> int:
+        """Highest token count ``ensure(slot, ·)`` could cover RIGHT NOW
+        without starving another slot's unbacked reservation — what the
+        engine's macro-tick packer gates chunk spans and the D-step decode
+        pre-extension on (tokens already covered plus the allowance)."""
+        return self.covered_tokens(slot) + self.allowance(slot) * self.page_size
+
     # ------------------------------------------------------------------
     # reserve / ensure / alloc / free
     # ------------------------------------------------------------------

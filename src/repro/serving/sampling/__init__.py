@@ -1,0 +1,2 @@
+"""On-device sampling subsystem for the serving engine (docs/serving.md)."""
+from .sampler import GREEDY, SamplingParams, params_to_arrays, sample_tokens

@@ -1,0 +1,114 @@
+"""Per-slot on-device token sampling for the serving engine.
+
+``sample_tokens`` is the single selection primitive of the serving stack —
+the device-resident decode loop calls it in-graph every micro-step, and the
+legacy two-phase scheduler calls the same jitted function from the host, so
+a request's token stream is **bitwise identical** wherever it is scheduled.
+
+Reproducibility contract (docs/serving.md §On-device sampling): the token a
+request draws at context position ``c`` uses the key
+
+    fold_in(fold_in(PRNGKey(0), request_seed), c)
+
+— a pure counter-based scheme.  Neither the slot the request landed in, the
+macro-tick width ``D``, chunked-prefill boundaries, nor the batch
+composition enter the key, so re-running a request (any engine, any D, any
+co-tenants) replays its exact stream.
+
+Per-slot params ride as ``(slots,)`` arrays so the jitted step stays
+shape-static across request churn:
+  * ``temperature <= 0`` → greedy: ``argmax`` over the *raw* logits, bitwise
+    equal to the historical host-side ``np.asarray(jnp.argmax(...))`` path;
+  * otherwise logits are scaled by ``1/temperature`` and filtered through
+    the fused top-k/top-p kernel (``kernels.sampling``) before a Gumbel
+    draw (``jax.random.categorical``).
+The whole sampled branch sits under ``lax.cond``: an all-greedy tick (the
+common serving mix) pays one ``jnp.any`` instead of the filter kernel,
+while keeping the one-executable-per-lifetime invariant (both branches are
+traced into the same program).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...kernels.sampling.ops import topk_topp_mask
+
+_MIN_TEMP = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration.
+
+    ``temperature=0`` (default) is greedy decoding; ``top_k=0`` and
+    ``top_p=1.0`` disable the respective cuts.  ``seed`` names the request's
+    PRNG stream — two requests with the same seed and prompt draw identical
+    tokens regardless of scheduling.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.temperature >= 0.0, self.temperature
+        assert 0.0 < self.top_p <= 1.0, self.top_p
+
+
+GREEDY = SamplingParams()
+
+
+def sample_tokens(logits, temperature, top_k, top_p, seed, counter, *,
+                  backend: str = "pallas", interpret: bool = True):
+    """logits (S, V) + per-slot (S,) params → sampled tokens (S,) int32.
+
+    ``counter`` is the context position each sampled token will occupy —
+    THE reproducibility counter (see module docstring).  Rows with
+    ``temperature <= 0`` take the raw-logits argmax; garbage rows (idle
+    slots) sample garbage harmlessly — callers mask validity separately.
+    """
+    logits = logits.astype(jnp.float32)
+    S = logits.shape[0]
+    temperature = jnp.asarray(temperature, jnp.float32)
+    greedy = temperature <= 0.0
+
+    def _sampled(_):
+        scaled = logits / jnp.maximum(temperature, _MIN_TEMP)[:, None]
+        filt = topk_topp_mask(scaled, top_k, top_p, backend=backend,
+                              interpret=interpret)
+        keys = jax.vmap(
+            lambda s, c: jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(0), s), c)
+        )(jnp.asarray(seed, jnp.int32), jnp.asarray(counter, jnp.int32))
+        return jax.vmap(jax.random.categorical)(keys, filt).astype(jnp.int32)
+
+    sampled = jax.lax.cond(jnp.any(jnp.logical_not(greedy)), _sampled,
+                           lambda _: jnp.zeros((S,), jnp.int32), None)
+    return jnp.where(greedy, jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                     sampled)
+
+
+def params_to_arrays(params: Sequence[Optional[SamplingParams]]):
+    """[SamplingParams | None per slot] → dict of (slots,) numpy arrays
+    (None → greedy defaults) matching ``sample_tokens``'s signature."""
+    n = len(params)
+    out = {"temperature": np.zeros((n,), np.float32),
+           "top_k": np.zeros((n,), np.int32),
+           "top_p": np.ones((n,), np.float32),
+           "seed": np.zeros((n,), np.int32)}
+    for i, sp in enumerate(params):
+        if sp is None:
+            continue
+        out["temperature"][i] = sp.temperature
+        out["top_k"][i] = sp.top_k
+        out["top_p"][i] = sp.top_p
+        out["seed"][i] = sp.seed
+    return out
+
+
+__all__ = ["SamplingParams", "GREEDY", "sample_tokens", "params_to_arrays"]

@@ -1,0 +1,382 @@
+"""Device-resident multi-tick decode: bitwise greedy parity of the D-fused
+macro-step vs D single ticks and vs the legacy two-phase path, sampled-mode
+D-invariance (the PRNG reproducibility contract end-to-end), EOS stopping
+mid-macro-tick without token leaks, the dynamic chunk-budget split, and the
+host-sync-per-token accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke
+from repro.core.types import AdapterConfig
+from repro.models import Model
+from repro.models.attention import INVALID_POS
+from repro.serving import (PagePool, Request, SamplingParams, ServingEngine,
+                           make_fused_step, make_unified_step)
+from repro.serving.sampling import params_to_arrays
+
+ACFG = AdapterConfig(method="mos", equiv_rank=2, rank=4, shards_per_vector=2,
+                     private_rank=1, dtype=jnp.float32)
+
+
+def _model(name="granite-3-2b"):
+    cfg = smoke(get_config(name))
+    m = Model(cfg, ACFG)
+    params, _ = m.init_params(jax.random.key(0))
+    return m, params
+
+
+def _tenants(m, n):
+    out = []
+    for t in range(n):
+        st = m.init_adapter(jax.random.key(100))
+        st["trainable"] = jax.tree.map(
+            lambda v, tt=t: v + 0.02 * (tt + 1) * jax.random.normal(
+                jax.random.key(7 + tt), v.shape, v.dtype), st["trainable"])
+        out.append(st)
+    return out
+
+
+def _run(eng, reqs, max_ticks=120):
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run(max_ticks=max_ticks)
+    assert len(done) == len(reqs) and all(r.done for r in reqs)
+    return [tuple(r.out) for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity across D and against the legacy path
+# ---------------------------------------------------------------------------
+
+def test_fused_macro_step_bitwise_parity_across_D():
+    """The acceptance workload: mixed prompt lengths, one exceeding the
+    free-page span (oversubscribed chunk streaming).  Greedy token streams
+    must be bitwise identical for D ∈ {1, 4, 16} and equal to the legacy
+    two-phase scheduler — with ONE traced executable per engine and the
+    host syncing once per macro tick instead of once per token."""
+    m, params = _model()
+    states = _tenants(m, 2)
+    prompts = [np.arange(3, 3 + L, dtype=np.int32) % 90 + 4
+               for L in (3, 9, 14, 26)]
+
+    def reqs():
+        return [Request(rid=i, prompt=p.copy(), adapter_id=i % 2, max_new=4)
+                for i, p in enumerate(prompts)]
+
+    outs, syncs = {}, {}
+    for key, kw in [("legacy", dict(unified=False)),
+                    ("D1", dict(decode_ticks=1)),
+                    ("D4", dict(decode_ticks=4)),
+                    ("D16", dict(decode_ticks=16))]:
+        eng = ServingEngine(m, params, states, slots=4, max_len=40,
+                            page_size=8, num_pages=8, **kw)
+        outs[key] = _run(eng, reqs())
+        syncs[key] = eng.host_syncs
+        assert eng.tokens_out == 16
+        eng.pages.check_invariants()
+        assert eng.pages.free_pages == 7
+        if key != "legacy":
+            assert len(eng.unified_traces) == 1
+    assert outs["D1"] == outs["legacy"]
+    assert outs["D4"] == outs["legacy"]
+    assert outs["D16"] == outs["legacy"]
+    # the fused loop amortizes the device→host round-trip (the floor is
+    # the oversubscribed prompt's page streaming, identical for D4/D16)
+    assert syncs["D4"] < syncs["D1"] and syncs["D16"] <= syncs["D4"]
+
+
+def test_unified_step_is_the_fused_micro_step():
+    """make_unified_step IS the D=1 micro-step: one fused_step call over a
+    single-chunk plan must reproduce unified_step's logits argmax token
+    and leave a bitwise-identical cache — the oracle relationship its
+    docstring claims."""
+    m, params = _model()
+    st = m.init_adapter(jax.random.key(1))
+    ps, mp, S, Q = 8, 4, 1, 8
+    prompt = np.array([5, 9, 14], np.int32)
+
+    def fresh_cache():
+        pool = PagePool(num_pages=S * mp + 1, page_size=ps, slots=S,
+                        max_pages_per_slot=mp)
+        pool.alloc(0, len(prompt) + 1)
+        cache = m.init_paged_cache(S, mp * ps, page_size=ps)
+        cache["block_tables"] = jnp.asarray(pool.block_tables)
+        return cache
+
+    toks = np.zeros((S, Q), np.int32)
+    pos = np.full((S, Q), int(INVALID_POS), np.int32)
+    toks[0, :3], pos[0, :3] = prompt, np.arange(3)
+    last = np.array([2], np.int32)
+
+    ufn = make_unified_step(m, tenants=0, attn_backend="ref")
+    ucache, logits = ufn(params, st, jnp.asarray(toks), jnp.asarray(pos),
+                         jnp.asarray(last), fresh_cache())
+    utok = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
+
+    plan = {"tokens": toks[None], "positions": pos[None],
+            "last_col": last[None], "samp_row": np.zeros((1, S), np.int32),
+            "final": np.ones((1, S), bool),
+            "adapter_ids": np.zeros((S,), np.int32),
+            "feed0": np.zeros((S,), bool), "tok0": np.zeros((S,), np.int32),
+            "len0": np.zeros((S,), np.int32), "cap": np.ones((S,), np.int32),
+            "plen": np.array([3], np.int32), "eos": np.full((S,), -1,
+                                                            np.int32),
+            **params_to_arrays([None])}
+    ffn = make_fused_step(m, decode_ticks=1, tenants=0, attn_backend="ref")
+    fcache, ftoks, fvalid = ffn(params, st, plan, fresh_cache())
+    assert bool(np.asarray(fvalid)[0, 0])
+    assert int(np.asarray(ftoks)[0, 0]) == utok
+    for (pu, lu), (pf, lf) in zip(
+            jax.tree_util.tree_leaves_with_path(ucache),
+            jax.tree_util.tree_leaves_with_path(fcache)):
+        assert pu == pf
+        np.testing.assert_array_equal(np.asarray(lu), np.asarray(lf), str(pu))
+
+
+def test_fused_macro_step_parity_ref_attn_backend():
+    """Same D-invariance through the gather-dense paged-attention oracle."""
+    m, params = _model()
+    states = _tenants(m, 1)
+    prompts = [np.arange(4, 4 + L, dtype=np.int32) % 90 + 4 for L in (5, 11)]
+    outs = {}
+    for D in (1, 4):
+        eng = ServingEngine(m, params, states, slots=2, max_len=32,
+                            page_size=8, decode_ticks=D, attn_backend="ref")
+        outs[D] = _run(eng, [Request(rid=i, prompt=p.copy(), adapter_id=0,
+                                     max_new=3)
+                             for i, p in enumerate(prompts)])
+    assert outs[1] == outs[4]
+
+
+def test_sampled_streams_invariant_across_schedulers():
+    """Temperature/top-k/top-p requests with fixed seeds draw IDENTICAL
+    streams under D=1, D=5, and the legacy two-phase path — the end-to-end
+    counter-based PRNG contract (keys depend only on (seed, position))."""
+    m, params = _model()
+    states = _tenants(m, 2)
+    prompts = [np.arange(5, 5 + L, dtype=np.int32) % 90 + 4 for L in (4, 9)]
+    sps = [SamplingParams(temperature=0.9, top_k=20, seed=7),
+           SamplingParams(temperature=1.1, top_p=0.85, seed=13)]
+
+    def reqs():
+        return [Request(rid=i, prompt=p.copy(), adapter_id=i % 2, max_new=5,
+                        sampling=sps[i])
+                for i, p in enumerate(prompts)]
+
+    outs = {}
+    for key, kw in [("legacy", dict(unified=False)),
+                    ("D1", dict(decode_ticks=1)),
+                    ("D5", dict(decode_ticks=5))]:
+        eng = ServingEngine(m, params, states, slots=2, max_len=32,
+                            page_size=8, **kw)
+        outs[key] = _run(eng, reqs())
+    assert outs["D1"] == outs["legacy"] == outs["D5"]
+    # and the draws actually vary with the seed (not secretly greedy)
+    eng = ServingEngine(m, params, states, slots=2, max_len=32, page_size=8,
+                        decode_ticks=5)
+    alt = _run(eng, [Request(rid=i, prompt=p.copy(), adapter_id=i % 2,
+                             max_new=5,
+                             sampling=SamplingParams(temperature=1.1,
+                                                     seed=999 + i))
+                     for i, p in enumerate(prompts)])
+    assert alt != outs["D1"]
+
+
+# ---------------------------------------------------------------------------
+# in-graph stopping
+# ---------------------------------------------------------------------------
+
+def test_eos_stops_mid_macro_tick_without_leaks():
+    """A request whose stop token appears mid-macro-tick ends exactly
+    there: later micro-steps emit nothing for its slot (no valid entries,
+    no page writes), its pages release, and co-batched requests are
+    unaffected."""
+    m, params = _model()
+    states = _tenants(m, 1)
+    prompt = np.arange(4, 10, dtype=np.int32)
+    probe = ServingEngine(m, params, states, slots=1, max_len=48, page_size=8)
+    ref = Request(rid=0, prompt=prompt.copy(), adapter_id=0, max_new=10)
+    full = list(_run(probe, [ref])[0])
+    # stop on a token whose FIRST occurrence is mid-macro-tick (greedy
+    # smoke streams repeat eventually; pick the earliest distinct one)
+    j = next(i for i in range(1, 8) if full.index(full[i]) == i)
+    eos = int(full[j])
+
+    eng = ServingEngine(m, params, states, slots=2, max_len=48, page_size=8,
+                        decode_ticks=8)
+    r0 = Request(rid=0, prompt=prompt.copy(), adapter_id=0, max_new=10,
+                 eos_id=eos)
+    r1 = Request(rid=1, prompt=np.arange(7, 12, dtype=np.int32),
+                 adapter_id=0, max_new=10)
+    for r in (r0, r1):
+        eng.submit(r)
+    eng.step()                           # one macro tick covers the stop
+    assert r0.done and r0.out == full[:j + 1] and r0.out[-1] == eos
+    valid = eng._last_valid              # (D, slots) emission mask
+    emitted = np.flatnonzero(valid[:, 0])
+    assert emitted.size == j + 1 and not valid[emitted[-1] + 1:, 0].any()
+    eng.run(max_ticks=40)
+    assert r1.done and len(r1.out) == 10       # neighbour unaffected
+    eng.pages.check_invariants()
+    assert eng.pages.free_pages == eng.num_pages - 1
+    # an eos that never fires leaves the stream at full length
+    never = next(t for t in range(m.cfg.vocab_size - 1, -1, -1)
+                 if t not in full)
+    eng2 = ServingEngine(m, params, states, slots=1, max_len=48, page_size=8,
+                         decode_ticks=4)
+    r2 = Request(rid=2, prompt=prompt.copy(), adapter_id=0, max_new=10,
+                 eos_id=never)
+    assert _run(eng2, [r2])[0] == tuple(full)
+
+
+def test_eos_on_legacy_path():
+    """The legacy scheduler honours eos_id through the shared selection
+    helper — including an eos that IS the prefill's first token."""
+    m, params = _model()
+    states = _tenants(m, 1)
+    prompt = np.arange(4, 10, dtype=np.int32)
+    probe = ServingEngine(m, params, states, slots=1, max_len=48,
+                          page_size=8, unified=False)
+    ref = Request(rid=0, prompt=prompt.copy(), adapter_id=0, max_new=8)
+    full = list(_run(probe, [ref])[0])
+    eng = ServingEngine(m, params, states, slots=1, max_len=48, page_size=8,
+                        unified=False)
+    r = Request(rid=0, prompt=prompt.copy(), adapter_id=0, max_new=8,
+                eos_id=int(full[0]))
+    eng.submit(r)
+    done = eng.run(max_ticks=4)
+    assert r.done and r.out == [full[0]]
+    assert done == [r]
+    eng.pages.check_invariants()
+    assert eng.pages.free_pages == eng.num_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# dynamic chunk-budget split (idle lanes donate to prefill)
+# ---------------------------------------------------------------------------
+
+def test_idle_lanes_donate_chunk_budget_to_prefill():
+    """With 3 idle slots donating their lanes, a 40-token prompt admits in
+    ⌈40/(4·8)⌉ = 2 ticks instead of ⌈40/8⌉ = 5 — and the stream is
+    bitwise identical to a donor-less single-slot engine."""
+    m, params = _model()
+    states = _tenants(m, 1)
+    prompt = (np.arange(40, dtype=np.int32) % 90) + 4
+    solo = ServingEngine(m, params, states, slots=1, max_len=64, page_size=8,
+                         chunk=8)
+    expect = _run(solo, [Request(rid=0, prompt=prompt.copy(), adapter_id=0,
+                                 max_new=4)])[0]
+    eng = ServingEngine(m, params, states, slots=4, max_len=64, page_size=8,
+                        chunk=8)
+    r = Request(rid=0, prompt=prompt.copy(), adapter_id=0, max_new=4)
+    eng.submit(r)
+    ticks_to_first = 0
+    while not r.out:
+        eng.step()
+        ticks_to_first += 1
+        assert ticks_to_first < 10
+    assert ticks_to_first == 2           # 32 tokens tick 1, 8 + sample tick 2
+    eng.run(max_ticks=20)
+    assert tuple(r.out) == expect        # donation changes packing, not math
+    eng.pages.check_invariants()
+
+
+def test_donation_respects_active_decoders():
+    """Only IDLE lanes donate: active decoders keep decoding every tick
+    while the long prompt streams through the leftover budget."""
+    m, params = _model()
+    states = _tenants(m, 1)
+    eng = ServingEngine(m, params, states, slots=3, max_len=64, page_size=8,
+                        chunk=8)
+    a = Request(rid=0, prompt=np.arange(4, 10, dtype=np.int32), adapter_id=0,
+                max_new=10)
+    eng.submit(a)
+    eng.step()                           # a admitted + first token
+    long = Request(rid=1, prompt=(np.arange(32, dtype=np.int32) % 90) + 4,
+                   adapter_id=0, max_new=2)
+    eng.submit(long)
+    eng.step()                           # 2 lanes × 8 = 16 prompt tokens
+    assert len(a.out) == 2               # decoder never stalled
+    assert not long.out
+    eng.step()                           # remaining 16 + first token
+    assert len(a.out) == 3 and len(long.out) == 1
+    eng.run(max_ticks=30)
+    assert a.done and long.done
+
+
+def test_swa_macro_tick_respects_residency_ceiling():
+    """Sliding-window arch with D > 1: a macro tick may not grow a slot's
+    RESIDENT pages past the documented ~window + one-tick-growth ceiling
+    (slid-out pages free and re-credit between ticks), and the throttled
+    packing still yields streams bitwise identical to D=1 and the dense
+    ring."""
+    m, params = _model("mixtral-8x7b")           # smoke window = 32
+    assert m.cfg.sliding_window == 32
+    states = _tenants(m, 1)
+    prompts = [(np.arange(L, dtype=np.int32) % 90) + 4 for L in (20, 7)]
+
+    def reqs():
+        return [Request(rid=i, prompt=p.copy(), adapter_id=0,
+                        max_new=24 if i == 0 else 20)
+                for i, p in enumerate(prompts)]
+
+    outs = {}
+    for key, kw in [("dense", dict(paged=False, unified=False)),
+                    ("D1", dict(decode_ticks=1)),
+                    ("D6", dict(decode_ticks=6))]:
+        eng = ServingEngine(m, params, states, slots=2, max_len=64,
+                            page_size=8, **kw)
+        rs = reqs()
+        for r in rs:
+            eng.submit(r)
+        cap = eng._swa_cap_pages() if eng.unified else None
+        done, ticks = [], 0
+        while (eng._queue or any(eng._active)) and ticks < 120:
+            done += eng.step()
+            ticks += 1
+            if eng.unified:
+                eng.pages.check_invariants()
+                for s in range(eng.slots):
+                    assert eng.pages.resident_pages(s) <= cap, (key, s)
+        assert len(done) == 2
+        outs[key] = [tuple(r.out) for r in rs]
+        if eng.unified:
+            assert eng.pages.free_pages == eng.num_pages - 1
+    assert outs["D1"] == outs["dense"] == outs["D6"]
+
+
+# ---------------------------------------------------------------------------
+# engine plumbing
+# ---------------------------------------------------------------------------
+
+def test_host_sync_accounting():
+    m, params = _model()
+    states = _tenants(m, 1)
+    eng = ServingEngine(m, params, states, slots=2, max_len=32, page_size=8,
+                        decode_ticks=4)
+    reqs = [Request(rid=i, prompt=np.arange(3 + i, 8 + i, dtype=np.int32),
+                    adapter_id=0, max_new=8) for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    ticks = 0
+    while any(not r.done for r in reqs):
+        eng.step()
+        ticks += 1
+        assert ticks < 20
+    assert eng.host_syncs == ticks               # ONE sync per macro tick
+    assert eng.tokens_out == sum(len(r.out) for r in reqs)
+    # D=4 drains ~4 tokens per sync once prefill is done
+    assert eng.tokens_out / eng.host_syncs > 2.0
+
+
+def test_decode_ticks_requires_unified():
+    m, params = _model()
+    states = _tenants(m, 1)
+    with pytest.raises(ValueError, match="decode_ticks"):
+        ServingEngine(m, params, states, slots=2, max_len=32,
+                      decode_ticks=0)
+    with pytest.raises(ValueError, match="unified"):
+        ServingEngine(m, params, states, slots=2, max_len=32, paged=False,
+                      decode_ticks=4)
