@@ -13,6 +13,13 @@ have *different lengths* on purpose — prefill chunks pack alongside the
 active decode tokens in the same shape-static call, and each request holds
 only the pages its tokens need.
 
+The second wave shows the **prefix cache** (``prefix_cache=True``): every
+request of a tenant opens with that tenant's system prompt, so after the
+first wave retires, later admissions map the shared prompt's KV pages
+straight onto their block tables (refcounted, copy-free) and prefill only
+their unique payload — the engine prints the hit rate and the pages the
+pool never had to duplicate.
+
 Run: PYTHONPATH=src python examples/serve_multi_tenant.py
 """
 import sys
@@ -64,18 +71,34 @@ def main():
 
     eng = ServingEngine(model, params, [st_copy, st_sort], slots=4,
                         max_len=64, page_size=8,   # paged=True is the default
-                        decode_ticks=4)            # 4 micro-steps per sync
+                        decode_ticks=4,            # 4 micro-steps per sync
+                        prefix_cache=True)         # share prompt-prefix KV
     total_pages = eng.pages.free_pages
     rng = np.random.default_rng(0)
-    for i in range(6):
-        payload = rng.integers(10, 100, size=int(rng.integers(2, 7))
-                               ).astype(np.int32)   # mixed prompt lengths
-        prompt = np.concatenate([[USER], payload, [ASSISTANT]]).astype(np.int32)
-        # tenant 0 decodes greedily; tenant 1 samples (seeded, on device)
-        sp = (None if i % 2 == 0 else
-              SamplingParams(temperature=0.8, top_k=16, seed=1000 + i))
-        eng.submit(Request(rid=i, prompt=prompt, adapter_id=i % 2,
-                           max_new=5, sampling=sp))
+    # each tenant's requests open with the SAME system prompt — two pages
+    # of byte-identical KV per tenant that the cache will stop recomputing
+    sys_prompt = {t: (rng.integers(10, 100, size=16).astype(np.int32))
+                  for t in range(2)}
+
+    def wave(tag, n=6):
+        reqs = []
+        for i in range(n):
+            payload = rng.integers(10, 100, size=int(rng.integers(2, 7))
+                                   ).astype(np.int32)  # mixed lengths
+            prompt = np.concatenate(
+                [[USER], sys_prompt[i % 2], payload, [ASSISTANT]]
+            ).astype(np.int32)
+            # tenant 0 decodes greedily; tenant 1 samples (seeded, on device)
+            sp = (None if i % 2 == 0 else
+                  SamplingParams(temperature=0.8, top_k=16,
+                                 seed=1000 * tag + i))
+            r = Request(rid=10 * tag + i, prompt=prompt, adapter_id=i % 2,
+                        max_new=5, sampling=sp)
+            reqs.append(r)
+            eng.submit(r)
+        return reqs
+
+    wave(1)
     eng.step()                                      # first tick admits
     in_use = total_pages - eng.pages.free_pages
     print(f"page pool: {in_use}/{total_pages} pages "
@@ -83,15 +106,27 @@ def main():
           f"a dense cache would hold {eng.slots} x {eng.max_len} tokens "
           f"regardless of load")
     done = eng.run(max_ticks=64)
-    assert eng.pages.free_pages == total_pages      # all pages returned
+
+    # wave 2: same per-tenant system prompts, fresh payloads — admissions
+    # now HIT the prefix cache and skip recomputing the shared pages
+    wave(2)
+    done += eng.run(max_ticks=64)
+    mm = eng.prefix_metrics()
+    print(f"prefix cache: {mm['hits']}/{mm['lookups']} admissions hit "
+          f"({100 * mm['hit_rate']:.0f}%), {mm['reused_tokens']} prompt "
+          f"tokens served from {mm['cached_pages']} shared cached pages "
+          f"({mm['cow_tokens']} via copy-on-write) — "
+          f"{mm['dedup_pages']} duplicate pages never stored")
     print(f"{eng.tokens_out} tokens over {eng.host_syncs} host syncs "
           f"({eng.tokens_out / eng.host_syncs:.1f} tokens drained per "
           f"device→host round-trip)")
+    eng.prefix.clear()                              # flush the cache...
+    assert eng.pages.free_pages == total_pages      # ...all pages return
     for r in sorted(done, key=lambda r: r.rid):
         tenant = ["copy", "sort"][r.adapter_id]
         mode = "greedy" if r.sampling is None else "top-k sampled"
         print(f"req {r.rid} [tenant={tenant} {mode}] "
-              f"prompt={r.prompt[1:-1].tolist()} -> out={r.out}")
+              f"prompt={r.prompt[17:-1].tolist()} -> out={r.out}")
 
 
 if __name__ == "__main__":

@@ -3,4 +3,5 @@ from .engine import (ServingEngine, Request, make_serve_step,
                      make_prefill_step, make_unified_step, make_fused_step)
 from .multi_tenant import stack_tenants, MTHooks, make_mt_factory
 from .paging import PagePool, paginate_cache
+from .prefix import PrefixCache, PrefixHit, PrefixStats, PrefixTree
 from .sampling import SamplingParams, sample_tokens

@@ -59,6 +59,7 @@ import numpy as np
 from ..models.attention import INVALID_POS
 from .multi_tenant import make_mt_factory, stack_tenants
 from .paging import PagePool
+from .prefix import PrefixCache
 from .sampling import SamplingParams, params_to_arrays, sample_tokens
 
 
@@ -148,12 +149,15 @@ def make_unified_step(model, tenants: int = 0, backend: str = "fused",
     return unified_step
 
 
-def make_fused_step(model, decode_ticks: int, tenants: int = 0,
+def make_fused_step(model, decode_ticks: Optional[int], tenants: int = 0,
                     backend: str = "fused", interpret: bool = True,
                     attn_backend: str = "pallas",
                     sample_backend: str = "pallas"):
     """The device-resident macro-step: ``decode_ticks`` (D) unified
     micro-steps + on-device sampling fused into ONE jitted call.
+    ``decode_ticks=None`` leaves D to the plan's leading dimension — the
+    auto-tuned engine packs a different width per tick (each distinct
+    width is one trace of the same function, bounded by the tick ladder).
 
     ``plan`` is the host-prepacked tick description (all shapes static):
 
@@ -190,7 +194,9 @@ def make_fused_step(model, decode_ticks: int, tenants: int = 0,
 
     def fused_step(params, ad_stack, plan, cache):
         traces.append(1)
-        assert plan["tokens"].shape[0] == decode_ticks, plan["tokens"].shape
+        if decode_ticks is not None:
+            assert plan["tokens"].shape[0] == decode_ticks, \
+                plan["tokens"].shape
         S, Q = plan["tokens"].shape[1], plan["tokens"].shape[2]
         col0 = (jnp.arange(Q, dtype=jnp.int32) == 0)[None, :]      # (1, Q)
         fac = None
@@ -308,6 +314,24 @@ class ServingEngine:
     block-table entries) and re-credits the reservation, so a long
     trajectory only ever holds ~window worth of pages.
 
+    ``prefix_cache=True`` layers the refcounted **prefix cache**
+    (``serving.prefix``) over the pool: admission probes a radix tree
+    keyed on (adapter_id, page-aligned token blocks), maps matched pages
+    directly onto the slot's block-table columns (refcounted sharing —
+    no KV recompute, no copies), COW-copies the one divergence page of a
+    partial-tail match, and starts the chunked-prefill cursor past the
+    hit; retirement inserts the request's full-page prompt prefix into
+    the tree instead of freeing it, and idle cached pages evict LRU
+    under allocation pressure.  Sharing is pure host-side block-table /
+    refcount bookkeeping: the packed token-budget buffer, the
+    reservation ledger, and the one-executable-per-lifetime invariant
+    are untouched.  ``prefix_metrics()`` reports hit rates and the
+    shared-page footprint.
+
+    ``auto_ticks=True`` lets the engine shrink each macro tick's width D
+    below ``decode_ticks`` (ladder of powers of two) when the in-flight
+    completions couldn't fill it — same streams, fewer dead lanes.
+
     **Legacy mode** (``unified=False``, mamba-bearing archs, or
     ``paged=False``) keeps the two-phase path: batched admission prefills
     followed by one-token decode steps, with token selection through the
@@ -321,7 +345,8 @@ class ServingEngine:
                  page_size: int = 8, num_pages: Optional[int] = None,
                  attn_backend: str = "pallas", unified: bool = True,
                  chunk: Optional[int] = None, decode_ticks: int = 1,
-                 sample_backend: str = "pallas"):
+                 sample_backend: str = "pallas",
+                 prefix_cache: bool = False, auto_ticks: bool = False):
         self.model, self.params = model, params
         self.tenants = len(tenant_states)
         self.backend = backend
@@ -347,6 +372,17 @@ class ServingEngine:
             raise ValueError(
                 "device-resident multi-tick decode (decode_ticks > 1) "
                 "requires the unified scheduler (paged attention-only arch)")
+        self.auto_ticks = bool(auto_ticks)
+        if self.auto_ticks and not self.unified:
+            raise ValueError("auto_ticks requires the unified scheduler")
+        # macro-tick width ladder: powers of two up to decode_ticks (plus
+        # decode_ticks itself) — auto-tuning picks from this fixed menu so
+        # the per-width retrace count stays bounded and tiny
+        self._tick_ladder = sorted(
+            {1 << k for k in range(self.decode_ticks.bit_length())}
+            | {self.decode_ticks})
+        self.tick_width_counts: Dict[int, int] = {}  # D → macro ticks at D
+        self.macro_ticks = 0
         self.sample_backend = sample_backend
         # telemetry: device→host syncs (one per _select_tokens call / per
         # macro-tick drain) and tokens drained — benchmarks report the
@@ -364,7 +400,9 @@ class ServingEngine:
             make_prefill_step(model, tenants=self.tenants, backend=backend,
                               interpret=interpret))
         if self.unified:
-            ffn = make_fused_step(model, decode_ticks=self.decode_ticks,
+            ffn = make_fused_step(model,
+                                  decode_ticks=(None if self.auto_ticks
+                                                else self.decode_ticks),
                                   tenants=self.tenants, backend=backend,
                                   interpret=interpret,
                                   attn_backend=attn_backend,
@@ -386,6 +424,29 @@ class ServingEngine:
                                                 num_pages=num_pages)
         else:
             self.cache = model.init_cache(slots, max_len)
+        self.prefix: Optional[PrefixCache] = None
+        if prefix_cache:
+            if not self.unified:
+                raise ValueError(
+                    "prefix_cache requires the unified scheduler "
+                    "(paged attention-only arch)")
+            if self.window > 0:
+                raise ValueError(
+                    "prefix_cache is not supported on sliding-window "
+                    "archs: slid-out prompt pages are freed mid-flight, "
+                    "so a cached prefix would be reclaimed under the "
+                    "request still mapping it")
+            self.prefix = PrefixCache(self.pages)
+            # copy-on-write for the divergence page of a partial-tail
+            # hit: ONE page's K/V rows copy pool→pool per admission
+            # (shape-static — src/dst are traced scalars, one trace ever)
+            def _cow(cache, src, dst):
+                def one(path, leaf):
+                    if _leaf_name(path) in ("kp", "vp"):
+                        return leaf.at[:, dst].set(leaf[:, src])
+                    return leaf
+                return jax.tree_util.tree_map_with_path(one, cache)
+            self._cow_copy = jax.jit(_cow, donate_argnums=(0,))
         self.adapter_ids = np.zeros((slots,), np.int32)
         self._pending: Dict[int, int] = {}   # slot → first generated token
         self._cursor: Dict[int, int] = {}    # slot → prompt tokens written
@@ -417,6 +478,24 @@ class ServingEngine:
     @staticmethod
     def _hit_eos(req: Request, tok: int) -> bool:
         return req.eos_id is not None and tok == int(req.eos_id)
+
+    # ------------------------------------------------------------------
+    # prefix-cache telemetry
+    # ------------------------------------------------------------------
+
+    def prefix_metrics(self) -> Optional[Dict[str, float]]:
+        """Cumulative prefix-cache counters plus the instantaneous pool
+        gauges (``None`` when the cache is off): hit rate, tokens served
+        from shared pages / COW copies, pages cached and currently
+        mapped, and the unique resident-page footprint (shared prefixes
+        counted once — what the pool actually pays)."""
+        if self.prefix is None:
+            return None
+        d = self.prefix.stats.as_dict()
+        d["cached_pages"] = self.prefix.cached_pages
+        d["shared_mapped_pages"] = self.pages.shared_mapped()
+        d["resident_unique_pages"] = self.pages.resident_unique_pages()
+        return d
 
     # ------------------------------------------------------------------
     # admission bookkeeping
@@ -612,7 +691,15 @@ class ServingEngine:
         available and backs the rest opportunistically (allowance: truly
         uncommitted pages only) as other requests retire.  At most one
         oversubscribed request at a time, and admission holds (strict
-        FIFO) until its trajectory is fully backed."""
+        FIFO) until its trajectory is fully backed.
+
+        With a prefix cache, each admission first probes the radix tree:
+        matched full pages map straight onto the slot's block-table
+        prefix (shared, refcounted — pure host bookkeeping), a partial
+        tail copies one page on device (COW), and the chunk cursor starts
+        past everything reused — only the uncached suffix is prefilled.
+        Shared pages need no backing, so a hit also shrinks the private
+        reservation the admission must fit."""
         if self._oversub_slot is not None:
             s = self._oversub_slot
             req = self._active[s]
@@ -625,24 +712,73 @@ class ServingEngine:
         while self._queue and free:
             req = self._queue[0]
             traj = self._traj_tokens(req)
+            hit = (self.prefix.match(req.adapter_id, req.prompt)
+                   if self.prefix is not None else None)
+            n_shared = len(hit.pages) if hit is not None else 0
             cap = self._swa_cap_pages()
             eff_pages = self.pages.pages_for(self._effective_tokens(traj))
-            if eff_pages <= self.pages.available:
-                slot = free.pop(0)
-            else:
+            slot = free.pop(0)
+            if eff_pages - n_shared > self.pages.available:
                 # FIFO head doesn't fit: admit it oversubscribed and stop
-                slot = free.pop(0)
                 self._oversub_slot = slot
-                cap = min(cap, max(0, self.pages.available)) \
-                    if cap is not None else max(0, self.pages.available)
+                avail = max(0, self.pages.available) + n_shared
+                cap = min(cap, avail) if cap is not None else avail
             self._queue.pop(0)
-            self.pages.reserve(slot, traj, cap_pages=cap)
+            self.pages.reserve(slot, traj, cap_pages=cap,
+                               shared_cols=n_shared)
+            cursor = 0 if hit is None else self._map_prefix_hit(slot, hit)
             self._active[slot] = req
             self.adapter_ids[slot] = req.adapter_id
-            self._cursor[slot] = 0
+            self._cursor[slot] = cursor
             self._len[slot] = 0
             if self._oversub_slot is not None:
                 break
+
+    def _map_prefix_hit(self, slot: int, hit) -> int:
+        """Wire a prefix-cache hit into a freshly reserved ``slot``:
+        shared full pages become its block-table prefix
+        (``PagePool.share``), and a partial-tail match backs the
+        divergence column with a private page, copies the donor page's
+        K/V on device (one shape-static jitted copy) and advances past
+        the common tokens — the stale tail of the copy is masked until
+        prefill/decode overwrites it in place.  Returns the chunked-
+        prefill cursor: the prompt tokens already resident."""
+        cursor = 0
+        if hit.pages:
+            self.pages.share(slot, hit.pages)
+            cursor = len(hit.pages) * self.page_size
+        copied = False
+        if hit.cow_page is not None:
+            # the divergence column needs a private page NOW; an
+            # oversubscribed head that can't back it just prefills the
+            # tail tokens later instead
+            if self.pages.backable_tokens(slot) > cursor:
+                self.pages.ensure(slot, cursor + 1)
+                dst = int(self.pages.block_tables[slot, len(hit.pages)])
+                self.cache = self._cow_copy(
+                    self.cache, jnp.asarray(hit.cow_page, jnp.int32),
+                    jnp.asarray(dst, jnp.int32))
+                cursor += hit.cow_tokens
+                copied = True
+        self.prefix.release_cow(hit, copied)
+        return cursor
+
+    def _retire_pages(self, s: int, req: Request):
+        """Release a finished request's pages.  With the prefix cache on,
+        the full-page prompt prefix transfers into the radix tree instead
+        of freeing (shared columns just drop their reference; freshly
+        computed pages are adopted, deduplicated against identical
+        prefixes already cached) — the request's own generated tokens and
+        any partial prompt tail free as usual."""
+        if self.prefix is not None:
+            n_full = len(req.prompt) // self.page_size
+            if 0 < n_full <= self.pages.covered_cols(s):
+                pages = self.pages.release_to_cache(s, n_full)
+                self.prefix.insert(
+                    req.adapter_id,
+                    np.asarray(req.prompt[:n_full * self.page_size]), pages)
+                return
+        self.pages.release(s)
 
     def _free_swa_pages(self):
         """Release pages whose every token has slid out of the attention
@@ -680,7 +816,38 @@ class ServingEngine:
                 self.pages.ensure(s, target)
         return max(0, self.pages.covered_tokens(s) - start)
 
-    def _pack_macro(self) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+    def _tick_D(self) -> int:
+        """Macro-tick width for this tick: fixed ``decode_ticks`` unless
+        ``auto_ticks``, where it shrinks to the smallest ladder width
+        covering the micro-steps any in-flight request could still use —
+        remaining decode budget plus, for admitting slots, the prompt
+        chunks left to stream (each micro-step advances at least one
+        chunk span; donation only shortens that).  When short completions
+        dominate, micro-step lanes stop running dead past every slot's
+        stop and a freed slot reaches admission sooner — without slowing
+        a long prefill down to narrow ticks.  Streams are D-invariant by
+        the PRNG/packing contract, so tuning is bitwise-free (pinned in
+        tests); each distinct width is one extra trace, bounded by the
+        ladder."""
+        if not self.auto_ticks:
+            return self.decode_ticks
+        need = 1
+        for s, req in enumerate(self._active):
+            if req is None:
+                continue
+            rem = req.max_new - len(req.out)
+            cur = self._cursor.get(s, len(req.prompt))
+            if cur < len(req.prompt):
+                chunks = -(-(len(req.prompt) - cur) // self.chunk)
+                rem = min(chunks + rem, self.decode_ticks)
+            need = max(need, rem)
+        for d in self._tick_ladder:
+            if d >= need:
+                return d
+        return self.decode_ticks
+
+    def _pack_macro(self, D: int) -> Tuple[Dict[str, np.ndarray],
+                                           np.ndarray]:
         """Prepack the fused macro-step's plan (see :func:`make_fused_step`)
         plus this tick's block tables.  Everything the D micro-steps need
         from the host is decided here: prompt chunk spans for every
@@ -689,7 +856,7 @@ class ServingEngine:
         chunk-budget split — idle lanes donate their (chunk,) columns to
         the earliest still-prefilling request, whose block-table row they
         temporarily alias (uploaded fresh every tick, so nothing leaks)."""
-        S, Q, D = self.slots, self.chunk, self.decode_ticks
+        S, Q = self.slots, self.chunk
         toks = np.zeros((D, S, Q), np.int32)
         pos = np.full((D, S, Q), int(INVALID_POS), np.int32)
         last = np.zeros((D, S), np.int32)
@@ -787,7 +954,10 @@ class ServingEngine:
 
     def _unified_tick(self) -> List[Request]:
         self._admit_unified()
-        plan, bt = self._pack_macro()
+        D = self._tick_D()
+        self.macro_ticks += 1
+        self.tick_width_counts[D] = self.tick_width_counts.get(D, 0) + 1
+        plan, bt = self._pack_macro(D)
         self.cache["block_tables"] = jnp.asarray(bt)
         self.cache, toks_out, valid_out = self.fstep(
             self.params, self.ad_stack, plan, self.cache)
@@ -801,7 +971,7 @@ class ServingEngine:
             req = self._active[s]
             if req is None:
                 continue
-            for t in range(self.decode_ticks):
+            for t in range(D):
                 if not valid_np[t, s]:
                     continue
                 tok = int(toks_np[t, s])
@@ -814,7 +984,7 @@ class ServingEngine:
                 self._len[s] = len(req.prompt) + len(req.out) - 1
             if req.done:
                 self._active[s] = None
-                self.pages.release(s)
+                self._retire_pages(s, req)
                 for d in (self._cursor, self._len):
                     d.pop(s, None)
                 if self._oversub_slot == s:

@@ -22,15 +22,35 @@ here, in plain python, where the serving engine's admission loop runs:
     pages whose every token has slid out of the attention window and
     re-points their block-table entries at trash.  Freed pages *re-credit*
     the slot's reservation (capped at its remaining trajectory need), so a
-    long SWA trajectory only ever reserves ~window worth of pages.
+    long SWA trajectory only ever reserves ~window worth of pages;
+  * cross-request sharing — a page may be **cached** (owned by the
+    prefix cache, ``serving.prefix``) and simultaneously mapped by any
+    number of slots (``share``), tracked by a per-page **refcount**.
+    Retirement can transfer a slot's prompt-prefix pages into the cache
+    instead of freeing them (``release_to_cache``); an attached cache
+    registers eviction hooks so idle cached pages behave as
+    *reclaimable free space* under allocation pressure.
 
 Slot reuse is copy-free: retirement only edits the free list and the block
 table; no KV bytes move.
+
+Page life cycle with a prefix cache attached::
+
+    free ──ensure──▶ owned(slot) ──release──▶ free
+                          │release_to_cache
+                          ▼
+        ┌──────────── cached (refcount = # slots mapping it) ─────────┐
+        │ share → ref+1         release / free_prefix → ref-1         │
+        └── refcount 0 + LRU-evicted leaf ──free_cached──▶ free ──────┘
+
+Every transition is guarded: freeing a page twice, unreferencing below
+zero, or caching an already-cached page assert immediately — cheap host
+checks that matter once pages have multiple owners.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -50,12 +70,35 @@ class PagePool:
         assert self.num_pages >= 2, "need at least one page past trash"
         # LIFO: lowest ids pop first (makes traces deterministic/testable)
         self._free: List[int] = list(range(self.num_pages - 1, 0, -1))
+        self._free_set = set(self._free)     # O(1) double-free guard
         self._owned: Dict[int, List[int]] = {}
+        self._shared: Dict[int, List[int]] = {}  # cached pages mapped at the
+        #                                          front of the slot's table
         self._base: Dict[int, int] = {}      # first live block-table column
         self._reserved: Dict[int, int] = {}  # promised-but-unbacked pages
         self._traj: Dict[int, int] = {}      # total trajectory columns
+        self._cached: set = set()            # pages owned by the prefix cache
+        self._ref: Dict[int, int] = {}       # cached page → # slot mappings
+        self._evictable_fn: Optional[Callable[[], int]] = None
+        self._evict_fn: Optional[Callable[[int], int]] = None
         self.block_tables = np.full(
             (self.slots, self.max_pages_per_slot), TRASH_PAGE, np.int32)
+
+    # ------------------------------------------------------------------
+    # free-list primitives (all frees funnel through the guard)
+    # ------------------------------------------------------------------
+
+    def _pop_free(self) -> int:
+        page = self._free.pop()
+        self._free_set.discard(page)
+        return page
+
+    def _push_free(self, page: int):
+        assert page != TRASH_PAGE, "trash page can never be freed"
+        assert page not in self._free_set, f"double free of page {page}"
+        assert page not in self._cached, f"freeing cached page {page}"
+        self._free.append(page)
+        self._free_set.add(page)
 
     # ------------------------------------------------------------------
 
@@ -68,18 +111,46 @@ class PagePool:
         return sum(r for s, r in self._reserved.items() if s != exclude)
 
     @property
+    def evictable_pages(self) -> int:
+        """Idle prefix-cache pages an attached cache could free right now
+        — reclaimable space that admission/allowance gating counts as
+        available (eviction is triggered eagerly before any pop that
+        would dip below the promises, keeping ``free >= Σ unbacked``)."""
+        return self._evictable_fn() if self._evictable_fn is not None else 0
+
+    def attach_cache(self, evictable_fn: Callable[[], int],
+                     evict_fn: Callable[[int], int]):
+        """Register a prefix cache's eviction hooks: ``evictable_fn()``
+        counts the pages it could free, ``evict_fn(n)`` frees up to ``n``
+        of them (each via :meth:`free_cached`) and returns the count."""
+        self._evictable_fn = evictable_fn
+        self._evict_fn = evict_fn
+
+    def _reclaim(self, need_free: int):
+        """Evict idle cached pages until ``need_free`` pages sit on the
+        free list (no-op when already there or no cache is attached)."""
+        short = need_free - self.free_pages
+        if short > 0 and self._evict_fn is not None:
+            self._evict_fn(short)
+
+    @property
     def available(self) -> int:
-        """Pages a NEW reservation may claim: free minus everyone else's
-        unbacked promises.  May be negative while an oversubscribed
-        admission (engine FIFO head) is being backed chunk-by-chunk."""
-        return self.free_pages - self.unbacked_total()
+        """Pages a NEW reservation may claim: free (plus reclaimable
+        cached) minus everyone else's unbacked promises.  May be negative
+        while an oversubscribed admission (engine FIFO head) is being
+        backed chunk-by-chunk."""
+        return (self.free_pages + self.evictable_pages
+                - self.unbacked_total())
 
     def allowance(self, slot: int) -> int:
         """Pages ``slot`` may pop *right now* without starving any other
         slot's unbacked reservation.  For a fully-reserved slot this is
         always >= its own unbacked count (ensure never stalls); an
-        oversubscribed slot gets only the truly uncommitted pages."""
-        return max(0, self.free_pages - self.unbacked_total(exclude=slot))
+        oversubscribed slot gets only the truly uncommitted pages.
+        Counts reclaimable cached pages — decode growth evicts idle
+        prefix entries instead of stalling."""
+        return max(0, self.free_pages + self.evictable_pages
+                   - self.unbacked_total(exclude=slot))
 
     def pages_for(self, n_tokens: int) -> int:
         return -(-max(n_tokens, 1) // self.page_size)
@@ -89,9 +160,11 @@ class PagePool:
         return n <= self.available and n <= self.max_pages_per_slot
 
     def covered_cols(self, slot: int) -> int:
-        """Block-table columns ever backed for ``slot`` (prefix-freed
-        columns still count: column index == token_pos // page_size)."""
-        return self._base.get(slot, 0) + len(self._owned.get(slot, ()))
+        """Block-table columns ever backed for ``slot`` — shared prefix
+        pages and prefix-freed columns both count: column index ==
+        token_pos // page_size."""
+        return (self._base.get(slot, 0) + len(self._shared.get(slot, ()))
+                + len(self._owned.get(slot, ())))
 
     def covered_tokens(self, slot: int) -> int:
         return self.covered_cols(slot) * self.page_size
@@ -100,9 +173,27 @@ class PagePool:
         return self._reserved.get(slot, 0)
 
     def resident_pages(self, slot: int) -> int:
-        """Pages ``slot`` physically holds right now (backed minus
-        prefix-freed) — what a sliding-window residency ceiling bounds."""
-        return len(self._owned.get(slot, ()))
+        """Pages ``slot`` physically maps right now (backed minus
+        prefix-freed, shared prefix included) — what a sliding-window
+        residency ceiling bounds."""
+        return (len(self._shared.get(slot, ()))
+                + len(self._owned.get(slot, ())))
+
+    def resident_unique_pages(self) -> int:
+        """Distinct pages backing live slots right now — shared prefix
+        pages count ONCE, which is exactly the resident-KV footprint the
+        pool actually pays (benchmarks report this)."""
+        pages: set = set()
+        for owned in self._owned.values():
+            pages.update(owned)
+        for shared in self._shared.values():
+            pages.update(shared)
+        return len(pages)
+
+    def shared_mapped(self) -> int:
+        """Shared-page *mappings* across live slots (a page mapped by two
+        slots counts twice — the per-tick sharing metric)."""
+        return sum(len(v) for v in self._shared.values())
 
     def backable_tokens(self, slot: int) -> int:
         """Highest token count ``ensure(slot, ·)`` could cover RIGHT NOW
@@ -116,12 +207,16 @@ class PagePool:
     # ------------------------------------------------------------------
 
     def reserve(self, slot: int, n_tokens: int,
-                cap_pages: Optional[int] = None):
+                cap_pages: Optional[int] = None, shared_cols: int = 0):
         """Promise ``slot`` pages for an ``n_tokens`` trajectory without
         popping any.  ``cap_pages`` bounds the initial promise below the
         full trajectory — a sliding-window request only ever holds ~window
         worth (prefix frees re-credit it, see :meth:`free_prefix`), and an
         oversubscribed admission may only promise what's available.
+        ``shared_cols`` discounts block-table columns a prefix-cache hit
+        will map via :meth:`share` — those are already backed by the
+        cache, so promising (and eagerly reclaiming) for them would evict
+        idle cache entries for pages the slot never pops.
 
         The reservation ledger keeps the no-starvation invariant
         ``free_pages >= unbacked_total()``: backing a promised page
@@ -130,18 +225,25 @@ class PagePool:
         credit both sides."""
         assert slot not in self._owned, f"slot {slot} already owns pages"
         T = self.pages_for(n_tokens)
-        R = T if cap_pages is None else min(T, cap_pages)
+        R = max(0, (T if cap_pages is None else min(T, cap_pages))
+                - shared_cols)
         assert R <= self.max_pages_per_slot, (R, self.max_pages_per_slot)
         self._owned[slot] = []
+        self._shared[slot] = []
         self._base[slot] = 0
         self._traj[slot] = T
         self._reserved[slot] = R
         self.block_tables[slot, :] = TRASH_PAGE
+        # a promise counted against reclaimable cache pages must turn them
+        # into actual free pages NOW, keeping free >= Σ unbacked
+        self._reclaim(self.unbacked_total())
 
     def ensure(self, slot: int, n_tokens: int) -> List[int]:
         """Back pages so ``slot``'s block table covers logical tokens
         ``[0, n_tokens)``.  The caller gates on :meth:`allowance`; a slot
-        whose trajectory is fully reserved never fails here."""
+        whose trajectory is fully reserved never fails here.  Under a
+        prefix cache, idle cached pages are evicted as needed — backing
+        decode growth reclaims cache space instead of stalling."""
         assert slot in self._owned, f"slot {slot} has no reservation"
         cols = self.pages_for(n_tokens)
         assert cols <= self.max_pages_per_slot, (cols, self.max_pages_per_slot)
@@ -149,8 +251,12 @@ class PagePool:
         take = cols - cur
         if take <= 0:
             return []
+        # after the pops: free' = free - take, unbacked' = unbacked -
+        # min(take, own promise); reclaim enough to keep free' >= unbacked'
+        self._reclaim(take + self.unbacked_total()
+                      - min(take, self._reserved[slot]))
         assert take <= self.free_pages, (take, self.free_pages)
-        pages = [self._free.pop() for _ in range(take)]
+        pages = [self._pop_free() for _ in range(take)]
         self._owned[slot].extend(pages)
         self.block_tables[slot, cur:cols] = pages
         self._reserved[slot] = max(0, self._reserved[slot] - take)
@@ -166,20 +272,27 @@ class PagePool:
         return self.ensure(slot, n_tokens)
 
     def free_prefix(self, slot: int, upto_col: int) -> List[int]:
-        """Release ``slot``'s owned pages in block-table columns
+        """Release ``slot``'s pages in block-table columns
         ``[0, upto_col)`` — every token in them has slid out of the
         attention window — and point those entries at trash page 0.
-        Freed pages re-credit the reservation (capped), so the slot can
-        back its *future* columns from what it just returned."""
+        Owned pages return to the free list and re-credit the reservation
+        (capped), so the slot can back its *future* columns from what it
+        just returned.  Shared (prefix-cache) columns only drop their
+        slot reference — the page still belongs to the cache, so it
+        neither frees nor re-credits (it may become evictable)."""
         freed: List[int] = []
         while (self._base.get(slot, 0) < upto_col
-               and self._owned.get(slot)):
-            page = self._owned[slot].pop(0)
+               and (self._shared.get(slot) or self._owned.get(slot))):
+            if self._shared.get(slot):
+                page = self._shared[slot].pop(0)
+                self._unref(page)
+            else:
+                page = self._owned[slot].pop(0)
+                self._push_free(page)
+                freed.append(page)
             col = self._base[slot]
             self.block_tables[slot, col] = TRASH_PAGE
             self._base[slot] = col + 1
-            self._free.append(page)
-            freed.append(page)
         if freed:
             future = max(0, self._traj[slot] - self.covered_cols(slot))
             self._reserved[slot] = min(self._reserved[slot] + len(freed),
@@ -187,41 +300,152 @@ class PagePool:
         return freed
 
     def release(self, slot: int) -> List[int]:
-        """Return ``slot``'s pages to the free list (no-op if it owns none),
-        drop its reservation, and park its block-table row on trash."""
+        """Return ``slot``'s owned pages to the free list, drop its shared
+        mappings (refcount decrements; the pages stay with the cache) and
+        its reservation, and park its block-table row on trash.  No-op if
+        the slot holds nothing.  Returns the pages actually freed."""
+        for page in self._shared.pop(slot, []):
+            self._unref(page)
         pages = self._owned.pop(slot, [])
-        self._free.extend(reversed(pages))
+        for page in reversed(pages):
+            self._push_free(page)
         for d in (self._base, self._reserved, self._traj):
             d.pop(slot, None)
         self.block_tables[slot, :] = TRASH_PAGE
         return pages
 
     # ------------------------------------------------------------------
+    # cross-request sharing (the prefix cache's half of the contract)
+    # ------------------------------------------------------------------
+
+    def _unref(self, page: int):
+        assert self._ref.get(page, 0) > 0, \
+            f"refcount underflow on page {page}"
+        self._ref[page] -= 1
+        if self._ref[page] == 0:
+            del self._ref[page]
+
+    def unref_page(self, page: int):
+        """Drop one reference on a cached page (e.g. a copy-on-write
+        donor lease once the engine has copied its bytes)."""
+        self._unref(page)
+
+    def ref_pages(self, pages: Sequence[int]):
+        """Take a reference on cached ``pages`` — the prefix cache's
+        match *lease*, pinning them against eviction until :meth:`share`
+        hands the reference to a slot (or :meth:`unref_page` drops it)."""
+        for p in pages:
+            assert p in self._cached, f"page {p} is not cached"
+            self._ref[p] = self._ref.get(p, 0) + 1
+
+    def share(self, slot: int, pages: Sequence[int]):
+        """Map already-leased cached ``pages`` (see :meth:`ref_pages`) as
+        ``slot``'s block-table prefix, columns ``[0, len(pages))`` — the
+        cache-hit admission path.  Must follow a :meth:`reserve` that
+        took the hit as ``shared_cols`` (the reservation already excludes
+        these columns — they are backed by the cache), before any page is
+        backed.  The engine's chunked-prefill cursor then starts past
+        them, so nothing ever writes into a shared page."""
+        assert slot in self._owned and not self._owned[slot] \
+            and not self._shared[slot] and self._base[slot] == 0, \
+            f"slot {slot} must be freshly reserved"
+        n = len(pages)
+        assert n <= self.max_pages_per_slot
+        for p in pages:
+            assert p in self._cached and self._ref.get(p, 0) > 0, \
+                f"page {p} shared without a lease"
+        assert self._reserved[slot] <= max(0, self._traj[slot] - n), \
+            f"reserve(shared_cols=...) did not account for the hit"
+        self._shared[slot] = list(pages)
+        self.block_tables[slot, :n] = pages
+
+    def release_to_cache(self, slot: int, upto_col: int) -> List[int]:
+        """Retire ``slot`` but keep its first ``upto_col`` block-table
+        columns alive for the prefix cache: shared columns just drop
+        their slot reference (their tree nodes already exist), owned
+        columns transfer to *cached* status — the caller inserts them
+        into the tree (deduplicating against concurrent identical
+        retirements via :meth:`free_cached`).  Everything past
+        ``upto_col`` frees as in :meth:`release`.  Returns the pages at
+        columns ``[0, upto_col)`` in order."""
+        assert self._base.get(slot, 0) == 0, \
+            "a prefix-freed (SWA) slot cannot retire into the cache"
+        shared = self._shared.pop(slot, [])
+        owned = self._owned.pop(slot, [])
+        assert len(shared) <= upto_col <= len(shared) + len(owned), \
+            (len(shared), upto_col, len(owned))
+        prefix = (shared + owned)[:upto_col]
+        for page in shared:
+            self._unref(page)
+        adopt = owned[:upto_col - len(shared)]
+        for page in adopt:
+            assert page not in self._cached and page not in self._free_set
+            self._cached.add(page)
+        for page in reversed(owned[upto_col - len(shared):]):
+            self._push_free(page)
+        for d in (self._base, self._reserved, self._traj):
+            d.pop(slot, None)
+        self.block_tables[slot, :] = TRASH_PAGE
+        return prefix
+
+    def free_cached(self, page: int):
+        """Prefix-cache eviction endpoint: move an idle cached page (no
+        slot references) back to the free list."""
+        assert page in self._cached, f"page {page} is not cached"
+        assert self._ref.get(page, 0) == 0, \
+            f"evicting page {page} still mapped by a slot"
+        self._cached.discard(page)
+        self._push_free(page)
+
+    # ------------------------------------------------------------------
 
     def check_invariants(self):
-        """Every page is either free or owned by exactly one slot; trash
-        page 0 is neither; block-table rows agree with ownership (freed
-        prefix columns and the unbacked tail point at trash); reservations
-        never promise more than the slot's remaining trajectory."""
+        """Every page is free, owned by exactly one slot, or cached —
+        never two at once; trash page 0 is none of them; refcounts equal
+        the live shared mappings (never negative by construction);
+        block-table rows agree with ownership (freed prefix columns and
+        the unbacked tail point at trash, shared columns precede owned);
+        reservations never promise more than the slot's remaining
+        trajectory; and the free list covers every unbacked promise
+        (``free >= Σ unbacked`` — the no-starvation ledger survives
+        sharing and eviction pressure)."""
         free = set(self._free)
+        assert len(free) == len(self._free), "free list duplicate"
+        assert free == self._free_set, "free list / guard set diverged"
         owned = [p for pages in self._owned.values() for p in pages]
         assert len(owned) == len(set(owned)), "page owned twice"
         assert not (free & set(owned)), "page both free and owned"
+        assert not (free & self._cached), "page both free and cached"
+        assert not (self._cached & set(owned)), "page both cached and owned"
         assert TRASH_PAGE not in free and TRASH_PAGE not in owned
-        assert free | set(owned) == set(range(1, self.num_pages))
+        assert TRASH_PAGE not in self._cached
+        assert free | set(owned) | self._cached == \
+            set(range(1, self.num_pages))
+        mapped: Dict[int, int] = {}
+        for slot, pages in self._shared.items():
+            for p in pages:
+                assert p in self._cached, f"shared page {p} not cached"
+                mapped[p] = mapped.get(p, 0) + 1
+        assert mapped == self._ref, (mapped, self._ref)
         for slot, pages in self._owned.items():
+            sh = self._shared.get(slot, [])
             row = self.block_tables[slot]
             base = self._base[slot]
             assert (row[:base] == TRASH_PAGE).all(), (slot, row, base)
-            assert list(row[base:base + len(pages)]) == pages, \
+            assert list(row[base:base + len(sh)]) == sh, (slot, row, sh)
+            o0 = base + len(sh)
+            assert list(row[o0:o0 + len(pages)]) == pages, \
                 (slot, row, pages)
-            assert (row[base + len(pages):] == TRASH_PAGE).all()
+            assert (row[o0 + len(pages):] == TRASH_PAGE).all()
             future = max(0, self._traj[slot] - self.covered_cols(slot))
             assert 0 <= self._reserved[slot] <= future, \
                 (slot, self._reserved[slot], future)
         for slot in range(self.slots):
             if slot not in self._owned:
                 assert (self.block_tables[slot] == TRASH_PAGE).all()
+                assert not self._shared.get(slot)
+        assert self.free_pages >= self.unbacked_total(), \
+            (self.free_pages, self.unbacked_total())
 
 
 def paginate_cache(cache, page_size: int):

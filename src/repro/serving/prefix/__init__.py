@@ -1,0 +1,15 @@
+"""Refcounted prefix cache: radix-tree KV page sharing across requests
+(docs/serving.md §Prefix cache).
+
+Turns the :class:`~..paging.PagePool` from a per-request allocator into a
+cross-request KV cache: requests of the same tenant with a common prompt
+prefix map the same physical pages (keyed on ``(adapter_id, page-aligned
+token blocks)`` — MoS adapts q/k/v, so KV only matches within a tenant),
+with copy-on-write for the partial page at the divergence point, LRU
+eviction of idle entries under allocation pressure, and retirement
+feeding completed prompts back into the tree.
+"""
+from .cache import PrefixCache, PrefixHit, PrefixStats
+from .tree import PrefixTree
+
+__all__ = ["PrefixCache", "PrefixHit", "PrefixStats", "PrefixTree"]

@@ -1,0 +1,208 @@
+"""Refcounted prefix cache: cross-request KV page sharing policy.
+
+Sits between the serving engine's admission/retirement path and the
+:class:`~..paging.PagePool`:
+
+  * **match** — walk the radix tree (``tree.py``) for the longest cached
+    prefix of an arriving prompt, *lease* the matched pages (a pool
+    refcount, so pressure eviction can't reclaim them mid-admission) and
+    hand the engine a :class:`PrefixHit`.  The engine maps the full-page
+    hits straight onto the slot's block-table columns (pure host-side
+    bookkeeping — no KV bytes move, no device work) and starts the
+    chunked-prefill cursor past them; a partial-tail match is served by
+    one device-side page copy (copy-on-write at the divergence point).
+  * **insert** — at retirement the request's full-page prompt prefix
+    transfers into the cache (``PagePool.release_to_cache``) and this
+    module threads it into the tree, freeing pages shadowed by an
+    identical prefix that got there first.
+  * **evict** — registered as the pool's reclaim hook: idle cached pages
+    (refcount 0, leaf-first, LRU) free on demand, so the cache behaves
+    as *reclaimable free space* — it can never stall an admission or
+    decode growth, only lose entries.
+
+Everything is O(pages) host python per admission — matching is one dict
+lookup per page — which is noise next to a forward pass; the evictable
+count is an O(size) tree walk recomputed per query (refcounts also change
+from the pool side at slot release, so nothing is memoised — the tree is
+page-pool sized, i.e. small).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..paging import PagePool
+from .tree import Node, PrefixTree
+
+
+@dataclasses.dataclass
+class PrefixStats:
+    """Cumulative cache counters (``ServingEngine.prefix_metrics`` adds
+    the instantaneous pool-side gauges)."""
+
+    lookups: int = 0
+    hits: int = 0              # admissions that reused >= 1 cached token
+    hit_tokens: int = 0        # prompt tokens served by shared full pages
+    cow_tokens: int = 0        # tokens served via the copy-on-write tail
+    inserted_pages: int = 0    # new tree nodes (pages adopted at retire)
+    dedup_pages: int = 0       # retired pages shadowed by an existing node
+    evicted_pages: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.lookups, 1)
+
+    @property
+    def reused_tokens(self) -> int:
+        return self.hit_tokens + self.cow_tokens
+
+    def as_dict(self) -> Dict[str, float]:
+        d = dataclasses.asdict(self)
+        d["hit_rate"] = self.hit_rate
+        d["reused_tokens"] = self.reused_tokens
+        return d
+
+
+@dataclasses.dataclass
+class PrefixHit:
+    """A leased match: ``pages`` are full-page block-table mappings (pool
+    refs already taken), ``cow_page`` an optional divergence-page donor
+    (also leased — the engine drops that lease via :meth:`PrefixCache.
+    release_cow` once it has copied, or skipped copying, the bytes)."""
+
+    pages: List[int]
+    tokens: int                       # len(pages) * page_size
+    cow_page: Optional[int] = None
+    cow_tokens: int = 0
+
+
+class PrefixCache:
+    """Radix-tree prefix cache over a :class:`PagePool` (one per engine)."""
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self.page_size = pool.page_size
+        self.tree = PrefixTree(pool.page_size)
+        self.stats = PrefixStats()
+        pool.attach_cache(self.evictable_pages, self.evict)
+
+    # ------------------------------------------------------------------
+    # admission side
+    # ------------------------------------------------------------------
+
+    def match(self, adapter_id: int, prompt: np.ndarray
+              ) -> Optional[PrefixHit]:
+        """Longest cached prefix of ``prompt`` for this tenant, leased.
+
+        ``None`` on a miss.  Capped at ``len(prompt) - 1`` tokens so at
+        least one prompt token remains to be fed (its logits column is
+        where the first generated token comes from)."""
+        self.stats.lookups += 1
+        nodes, cow, cow_tokens = self.tree.match(adapter_id, prompt)
+        if not nodes and cow is None:
+            return None
+        pages = [n.page for n in nodes]
+        self.pool.ref_pages(pages)
+        hit = PrefixHit(pages=pages, tokens=len(pages) * self.page_size)
+        if cow is not None and cow_tokens > 0:
+            self.pool.ref_pages([cow.page])
+            hit.cow_page, hit.cow_tokens = cow.page, cow_tokens
+        self.stats.hits += 1
+        self.stats.hit_tokens += hit.tokens
+        return hit
+
+    def release_cow(self, hit: PrefixHit, copied: bool):
+        """Drop the lease on the COW donor page; ``copied`` records
+        whether the engine actually served tokens from it."""
+        if hit.cow_page is None:
+            return
+        self.pool.unref_page(hit.cow_page)
+        if copied:
+            self.stats.cow_tokens += hit.cow_tokens
+
+    # ------------------------------------------------------------------
+    # retirement side
+    # ------------------------------------------------------------------
+
+    def insert(self, adapter_id: int, tokens: np.ndarray,
+               pages: List[int]):
+        """Thread a retired request's full-page prompt prefix into the
+        tree.  ``pages`` come from ``PagePool.release_to_cache`` — shared
+        columns re-walk their existing nodes, freshly adopted pages
+        become nodes, and pages shadowed by an existing identical node
+        (a concurrent twin retired first) free immediately."""
+        n = len(pages)
+        assert n * self.page_size <= len(tokens) + self.page_size - 1
+        created, dups = self.tree.insert(adapter_id, tokens, pages)
+        for page in dups:
+            self.pool.free_cached(page)
+        self.stats.inserted_pages += len(created)
+        self.stats.dedup_pages += len(dups)
+
+    # ------------------------------------------------------------------
+    # eviction (the pool's reclaim hooks)
+    # ------------------------------------------------------------------
+
+    def evictable_pages(self) -> int:
+        """Pages reclaimable by cascading leaf-first eviction: every node
+        whose whole subtree carries no slot reference.  (A referenced
+        descendant pins its ancestors — they can't go childless while it
+        lives.)"""
+        ref = self.pool._ref
+
+        def count(node: Node):
+            cnt = 0
+            pinned = (node.page is not None
+                      and ref.get(node.page, 0) > 0)
+            for child in node.children.values():
+                c_cnt, c_pin = count(child)
+                cnt += c_cnt
+                pinned |= c_pin
+            if node.page is not None and not pinned:
+                cnt += 1
+            return cnt, pinned
+
+        return sum(count(r)[0] for r in self.tree._roots.values())
+
+    def evict(self, need: int) -> int:
+        """Free up to ``need`` idle cached pages, least-recently-used
+        childless nodes first (evicting a leaf may expose its parent as
+        the next candidate).  Returns the number actually freed."""
+        ref = self.pool._ref
+        victims = {n for n in self.tree.nodes()
+                   if not n.children and ref.get(n.page, 0) == 0}
+        freed = 0
+        while freed < need and victims:
+            victim = min(victims, key=lambda n: n.last_used)
+            victims.discard(victim)
+            parent = victim.parent
+            self.tree.remove(victim)
+            self.pool.free_cached(victim.page)
+            freed += 1
+            if (parent is not None and parent.page is not None
+                    and not parent.children and ref.get(parent.page, 0) == 0):
+                victims.add(parent)
+        self.stats.evicted_pages += freed
+        return freed
+
+    def clear(self) -> int:
+        """Evict every idle entry (referenced pages survive) — flush for
+        tests/benchmarks wanting the pool's full capacity back."""
+        return self.evict(self.tree.size)
+
+    # ------------------------------------------------------------------
+
+    @property
+    def cached_pages(self) -> int:
+        return self.tree.size
+
+    def check(self):
+        """Tree/pool agreement: tree nodes hold exactly the pool's cached
+        pages, each exactly once (the property tests call this alongside
+        ``PagePool.check_invariants``)."""
+        pages = [n.page for n in self.tree.nodes()]
+        assert len(pages) == len(set(pages)), "page in two tree nodes"
+        assert set(pages) == self.pool._cached, \
+            (sorted(pages), sorted(self.pool._cached))

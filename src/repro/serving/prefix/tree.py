@@ -1,0 +1,158 @@
+"""Radix tree over page-aligned token blocks — the prefix cache's index.
+
+Keys are ``(adapter_id, token blocks)``: MoS adapts the q/k/v projections,
+so a page of KV is only reusable by requests of the *same tenant* whose
+prompt contains the exact same ``page_size`` tokens at the exact same
+positions.  That makes the natural edge label a full page's token tuple —
+a radix tree at fixed page granularity degenerates into a hash-chain trie
+(per-adapter root, ``dict`` children keyed by the next block's tokens), so
+matching a prompt is one dict lookup per page and no per-token edge
+splitting is ever needed: the page is the sharing unit anyway, and the
+sub-page divergence case is handled by the cache's copy-on-write tail
+match (:meth:`PrefixTree.match` returns the best partially-matching child
+for it).
+
+Each node owns exactly ONE page of the :class:`~..paging.PagePool` (in
+``cached`` status).  Eviction order is leaf-first LRU: a node is
+removable only once childless — evicting an interior node would orphan
+reachable descendants — and ``last_used`` is refreshed along the whole
+walked path on every match/insert, so hot chains survive pressure.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+Block = Tuple[int, ...]
+
+
+class Node:
+    """One cached page: ``key`` is the page's token block, ``page`` its
+    pool id (``None`` only for the per-adapter root sentinels)."""
+
+    __slots__ = ("key", "page", "parent", "children", "last_used")
+
+    def __init__(self, key: Optional[Block], page: Optional[int],
+                 parent: Optional["Node"]):
+        self.key = key
+        self.page = page
+        self.parent = parent
+        self.children: Dict[Block, "Node"] = {}
+        self.last_used = 0
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return f"Node(page={self.page}, children={len(self.children)})"
+
+
+class PrefixTree:
+    """Per-adapter page-block tries with a shared LRU clock."""
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self._roots: Dict[int, Node] = {}      # adapter_id → sentinel
+        self._clock = 0
+        self.size = 0                          # nodes == cached pages held
+
+    # ------------------------------------------------------------------
+
+    def _touch(self, node: Node):
+        self._clock += 1
+        node.last_used = self._clock
+
+    def _block(self, tokens: np.ndarray, i: int) -> Block:
+        ps = self.page_size
+        return tuple(int(t) for t in tokens[i * ps:(i + 1) * ps])
+
+    # ------------------------------------------------------------------
+
+    def match(self, adapter_id: int, tokens: np.ndarray
+              ) -> Tuple[List[Node], Optional[Node], int]:
+        """Longest cached prefix of ``tokens`` for this adapter.
+
+        Returns ``(nodes, cow, cow_tokens)``: ``nodes`` are the full-page
+        matches in order; ``cow`` is the best *partially* matching child
+        past them (``cow_tokens`` >= 1 common leading tokens) — the
+        copy-on-write divergence page — or ``None``.  The total matched
+        length is capped at ``len(tokens) - 1``: at least one prompt
+        token must remain to be fed so the request's first generated
+        token has a logits column to fall out of (which is also why an
+        *exact* full-prompt re-submission matches its last page through
+        the COW path rather than fully).  Touches the walked path (LRU).
+        """
+        ps = self.page_size
+        L = len(tokens)
+        node = self._roots.get(int(adapter_id))
+        nodes: List[Node] = []
+        matched = 0
+        while node is not None and matched + ps <= L - 1:
+            child = node.children.get(self._block(tokens, matched // ps))
+            if child is None:
+                break
+            self._touch(child)
+            nodes.append(child)
+            node = child
+            matched += ps
+        cow, cow_tokens = None, 0
+        if node is not None:
+            rem = tokens[matched:L - 1]
+            for child in node.children.values():
+                m = 0
+                for a, b in zip(child.key, rem):
+                    if int(a) != int(b):
+                        break
+                    m += 1
+                if m > cow_tokens:
+                    cow, cow_tokens = child, m
+            if cow is not None:
+                self._touch(cow)
+        return nodes, cow, cow_tokens
+
+    def insert(self, adapter_id: int, tokens: np.ndarray,
+               pages: List[int]) -> Tuple[List[Node], List[int]]:
+        """Insert the page chain ``pages`` (page ``i`` holding tokens
+        ``[i*ps, (i+1)*ps)``) under ``adapter_id``.  Existing nodes are
+        reused (their page is authoritative); pages shadowed by an
+        existing node come back as ``dups`` for the caller to free —
+        two identical prefixes retiring back-to-back keep one copy.
+        Returns ``(created_nodes, duplicate_pages)``."""
+        root = self._roots.get(int(adapter_id))
+        if root is None:
+            root = self._roots[int(adapter_id)] = Node(None, None, None)
+        node = root
+        created: List[Node] = []
+        dups: List[int] = []
+        for i, page in enumerate(pages):
+            key = self._block(tokens, i)
+            child = node.children.get(key)
+            if child is None:
+                child = Node(key, page, node)
+                node.children[key] = child
+                self.size += 1
+                created.append(child)
+            elif child.page != page:
+                dups.append(page)
+            self._touch(child)
+            node = child
+        return created, dups
+
+    def remove(self, node: Node):
+        """Unlink a childless node (eviction)."""
+        assert not node.children, "evicting an interior node"
+        assert node.parent is not None
+        del node.parent.children[node.key]
+        node.parent = None
+        self.size -= 1
+
+    # ------------------------------------------------------------------
+
+    def nodes(self) -> List[Node]:
+        """All page-holding nodes (walk order; O(size))."""
+        out: List[Node] = []
+        stack = list(self._roots.values())
+        while stack:
+            n = stack.pop()
+            if n.page is not None:
+                out.append(n)
+            stack.extend(n.children.values())
+        return out

@@ -348,6 +348,69 @@ def test_swa_macro_tick_respects_residency_ceiling():
 
 
 # ---------------------------------------------------------------------------
+# auto-tuned macro-tick width
+# ---------------------------------------------------------------------------
+
+def test_auto_ticks_bitwise_parity_with_fixed_D():
+    """``auto_ticks`` shrinks D when short completions dominate — the
+    greedy AND sampled streams must stay bitwise identical to the fixed-D
+    engine (D-invariance contract), while actually using narrower ticks
+    and at most one trace per distinct width from the ladder."""
+    m, params = _model()
+    states = _tenants(m, 2)
+    prompts = [np.arange(3, 3 + L, dtype=np.int32) % 90 + 4
+               for L in (3, 9, 14)]
+
+    def reqs():
+        return [Request(rid=i, prompt=p.copy(), adapter_id=i % 2,
+                        max_new=2 + i,     # short completions (≤ 4 ≪ 16)
+                        sampling=(SamplingParams(temperature=0.9, top_k=16,
+                                                 seed=31) if i == 1
+                                  else None))
+                for i, p in enumerate(prompts)]
+
+    outs, widths = {}, {}
+    for auto in (False, True):
+        eng = ServingEngine(m, params, states, slots=3, max_len=40,
+                            page_size=8, decode_ticks=16, auto_ticks=auto)
+        outs[auto] = _run(eng, reqs())
+        widths[auto] = set(eng.tick_width_counts)
+        if auto:
+            assert widths[auto] <= set(eng._tick_ladder)
+            assert len(eng.unified_traces) == len(widths[auto])
+        else:
+            assert widths[auto] == {16}
+            assert len(eng.unified_traces) == 1
+    assert outs[True] == outs[False], "auto-tuned D changed the streams"
+    assert max(widths[True]) < 16, widths[True]      # it actually shrank
+
+
+def test_auto_ticks_grows_back_for_long_completions():
+    """The heuristic follows the in-flight mix: a long completion keeps
+    wide ticks, and the stream still matches the fixed-D engine."""
+    m, params = _model()
+    states = _tenants(m, 1)
+    outs = {}
+    for auto in (True, False):
+        eng = ServingEngine(m, params, states, slots=1, max_len=48,
+                            page_size=8, decode_ticks=8, auto_ticks=auto)
+        outs[auto] = _run(eng, [Request(
+            rid=0, prompt=np.arange(4, 10, dtype=np.int32), adapter_id=0,
+            max_new=20)])
+        if auto:
+            assert max(eng.tick_width_counts) == 8   # wide while rem > 8
+    assert outs[True] == outs[False]
+
+
+def test_auto_ticks_requires_unified():
+    m, params = _model()
+    states = _tenants(m, 1)
+    with pytest.raises(ValueError, match="auto_ticks"):
+        ServingEngine(m, params, states, slots=2, max_len=32, paged=False,
+                      unified=False, auto_ticks=True)
+
+
+# ---------------------------------------------------------------------------
 # engine plumbing
 # ---------------------------------------------------------------------------
 

@@ -90,6 +90,57 @@ def test_pool_randomized_traces():
     trace()
 
 
+def test_pool_double_free_and_underflow_guards():
+    """Once pages have multiple owners, silent double-frees/underflows
+    would corrupt the free list — the pool must assert immediately."""
+    pool = PagePool(num_pages=9, page_size=4, slots=3, max_pages_per_slot=4)
+    pages = pool.alloc(0, 9)
+    with pytest.raises(AssertionError, match="double free"):
+        pool._push_free(pool._free[-1])          # already on the free list
+    pool.release(0)
+    with pytest.raises(AssertionError, match="double free"):
+        pool._push_free(pages[0])                # released page freed again
+    with pytest.raises(AssertionError, match="trash"):
+        pool._push_free(0)
+    # refcount machinery: only cached pages can be referenced, and never
+    # below zero
+    with pytest.raises(AssertionError, match="underflow"):
+        pool.unref_page(pages[0])
+    with pytest.raises(AssertionError, match="not cached"):
+        pool.ref_pages([pages[0]])
+    pool.alloc(1, 8)
+    cached = pool.release_to_cache(1, 2)
+    pool.ref_pages(cached)
+    with pytest.raises(AssertionError, match="still mapped"):
+        pool.free_cached(cached[0])              # leased → not evictable
+    for p in cached:
+        pool.unref_page(p)
+    with pytest.raises(AssertionError, match="underflow"):
+        pool.unref_page(cached[0])
+    pool.free_cached(cached[0])
+    with pytest.raises(AssertionError, match="not cached"):
+        pool.free_cached(cached[0])              # cached-page double free
+    pool.free_cached(cached[1])
+    pool.check_invariants()
+    assert pool.free_pages == 8
+
+
+def test_pool_share_requires_lease_and_fresh_slot():
+    pool = PagePool(num_pages=9, page_size=4, slots=3, max_pages_per_slot=4)
+    pool.alloc(0, 8)
+    cached = pool.release_to_cache(0, 2)
+    pool.reserve(0, 8, shared_cols=2)
+    with pytest.raises(AssertionError, match="lease"):
+        pool.share(0, cached)                    # no ref taken yet
+    pool.ref_pages(cached)
+    pool.share(0, cached)
+    pool.ensure(0, 8)                            # backs 0 extra (covered)
+    with pytest.raises(AssertionError, match="freshly reserved"):
+        pool.share(0, cached)                    # slot no longer fresh
+    pool.release(0)
+    pool.check_invariants()
+
+
 # ---------------------------------------------------------------------------
 # kernel parity + page writes
 # ---------------------------------------------------------------------------

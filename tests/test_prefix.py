@@ -1,0 +1,508 @@
+"""Refcounted prefix cache: radix-tree matching/eviction units, pool
+sharing/refcount/COW mechanics, a property trace over random
+admit/hit/retire/evict sequences, and engine e2e — cache-hit admissions
+must produce bitwise-identical token streams to a cold / cache-disabled
+engine while reusing pages and skipping prefill work."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke
+from repro.core.types import AdapterConfig
+from repro.models import Model
+from repro.serving import (PagePool, PrefixCache, Request, SamplingParams,
+                           ServingEngine)
+
+ACFG = AdapterConfig(method="mos", equiv_rank=2, rank=4, shards_per_vector=2,
+                     private_rank=1, dtype=jnp.float32)
+
+
+def _model(name="granite-3-2b"):
+    cfg = smoke(get_config(name))
+    m = Model(cfg, ACFG)
+    params, _ = m.init_params(jax.random.key(0))
+    return m, params
+
+
+def _tenants(m, n):
+    out = []
+    for t in range(n):
+        st = m.init_adapter(jax.random.key(100))
+        st["trainable"] = jax.tree.map(
+            lambda v, tt=t: v + 0.02 * (tt + 1) * jax.random.normal(
+                jax.random.key(7 + tt), v.shape, v.dtype), st["trainable"])
+        out.append(st)
+    return out
+
+
+def _pool_cache(num_pages=17, page_size=4, slots=4, max_pages=8):
+    pool = PagePool(num_pages=num_pages, page_size=page_size, slots=slots,
+                    max_pages_per_slot=max_pages)
+    return pool, PrefixCache(pool)
+
+
+def _fill_and_cache(pool, cache, slot, adapter_id, tokens, gen=2):
+    """Drive one request's page life cycle host-side: reserve + back the
+    written trajectory, then retire its full-page prompt prefix into the
+    tree.  Returns the cached pages."""
+    ps = pool.page_size
+    pool.reserve(slot, len(tokens) + gen)
+    pool.ensure(slot, len(tokens) + gen)
+    n_full = len(tokens) // ps
+    pages = pool.release_to_cache(slot, n_full)
+    cache.insert(adapter_id, np.asarray(tokens[:n_full * ps]), pages)
+    return pages
+
+
+# ---------------------------------------------------------------------------
+# tree matching semantics
+# ---------------------------------------------------------------------------
+
+def test_match_full_pages_capped_before_last_token():
+    """Full-page hits stop at len-1 tokens: at least one prompt token must
+    remain to be fed (its logits column carries the first generated
+    token), so an exact resubmission matches its last page via COW."""
+    pool, cache = _pool_cache()
+    toks = np.arange(12, dtype=np.int32)
+    _fill_and_cache(pool, cache, 0, 0, toks)          # 3 cached pages
+    assert cache.cached_pages == 3
+
+    hit = cache.match(0, toks)                        # exact resubmission
+    assert len(hit.pages) == 2 and hit.tokens == 8    # not all 3
+    assert hit.cow_tokens == 3                        # tokens 8..10 (cap 11)
+    pool.unref_page(hit.cow_page)
+    for p in hit.pages:
+        pool.unref_page(p)
+
+    longer = np.concatenate([toks, [50, 51]]).astype(np.int32)
+    hit = cache.match(0, longer)                      # all 3 pages now match
+    assert len(hit.pages) == 3 and hit.cow_page is None
+    for p in hit.pages:
+        pool.unref_page(p)
+    pool.check_invariants(), cache.check()
+
+
+def test_match_partial_tail_is_cow():
+    pool, cache = _pool_cache()
+    toks = np.arange(12, dtype=np.int32)
+    _fill_and_cache(pool, cache, 0, 0, toks)
+    div = toks.copy()
+    div[6:] = 90 + np.arange(6)                       # diverge inside page 1
+    hit = cache.match(0, div)
+    assert len(hit.pages) == 1                        # page 0 only
+    assert hit.cow_tokens == 2                        # tokens 4, 5 shared
+    pool.unref_page(hit.cow_page)
+    pool.unref_page(hit.pages[0])
+    # divergence at token 2: no full page, COW only
+    div2 = toks.copy()
+    div2[2:] = 70 + np.arange(10)
+    hit = cache.match(0, div2)
+    assert hit.pages == [] and hit.cow_tokens == 2
+    pool.unref_page(hit.cow_page)
+    # divergence at token 0 of an un-cached first block: miss
+    assert cache.match(0, 99 - toks) is None
+    assert cache.stats.lookups == 3 and cache.stats.hits == 2
+
+
+def test_match_keys_on_adapter_id():
+    """KV depends on the adapter (MoS adapts q/k/v), so identical prompts
+    from different tenants must never share pages."""
+    pool, cache = _pool_cache()
+    toks = np.arange(10, dtype=np.int32)
+    _fill_and_cache(pool, cache, 0, adapter_id=3, tokens=toks)
+    assert cache.match(1, toks) is None
+    hit = cache.match(3, toks)
+    assert len(hit.pages) == 2
+    for p in hit.pages:
+        pool.unref_page(p)
+    pool.check_invariants(), cache.check()
+
+
+def test_insert_dedups_identical_prefix():
+    """Two requests with the same prompt retiring back-to-back keep ONE
+    copy of the prefix — the second's pages free immediately."""
+    pool, cache = _pool_cache()
+    toks = np.arange(12, dtype=np.int32)
+    _fill_and_cache(pool, cache, 0, 0, toks)
+    free_before = pool.free_pages
+    _fill_and_cache(pool, cache, 1, 0, toks)          # identical, cold-run
+    assert cache.cached_pages == 3                    # not 6
+    assert cache.stats.dedup_pages == 3
+    assert pool.free_pages == free_before             # duplicates returned
+    pool.check_invariants(), cache.check()
+
+
+# ---------------------------------------------------------------------------
+# eviction: LRU, leaf-first, refcount-pinned
+# ---------------------------------------------------------------------------
+
+def test_eviction_lru_leaf_first():
+    pool, cache = _pool_cache(num_pages=32, page_size=4)
+    a = np.arange(12, dtype=np.int32)
+    b = np.concatenate([[77], np.arange(11)]).astype(np.int32)
+    _fill_and_cache(pool, cache, 0, 0, a)             # chain A: 3 pages
+    _fill_and_cache(pool, cache, 1, 0, b)             # chain B: 3 pages
+    hit = cache.match(0, np.concatenate([a, [5, 6]]))  # touch A (LRU-newer)
+    for p in hit.pages:
+        pool.unref_page(p)
+    assert cache.evict(1) == 1                        # B's leaf goes first
+    hb = cache.match(0, np.concatenate([b, [5, 6]]))
+    assert hb.tokens == 8        # B's first two pages still there
+    ha = cache.match(0, np.concatenate([a, [5, 6]]))
+    assert ha.tokens == 12                            # A untouched
+    for p in hb.pages + ha.pages:
+        pool.unref_page(p)
+    pool.check_invariants(), cache.check()
+
+
+def test_eviction_skips_referenced_pages():
+    """Pages mapped by a live slot (refcount > 0) are pinned — and so are
+    their ancestors (leaf-first order can't reach them)."""
+    pool, cache = _pool_cache(num_pages=9, page_size=4, slots=2,
+                              max_pages=8)
+    toks = np.arange(16, dtype=np.int32)
+    _fill_and_cache(pool, cache, 0, 0, toks)          # 4 cached pages
+    hit = cache.match(0, toks)                        # lease pages 0..2
+    assert len(hit.pages) == 3 and hit.cow_page is not None
+    assert cache.evictable_pages() == 0               # whole chain pinned
+    assert cache.evict(4) == 0
+    pool.unref_page(hit.cow_page)
+    assert cache.evictable_pages() == 1               # the leaf unpinned
+    for p in hit.pages:
+        pool.unref_page(p)
+    assert cache.evictable_pages() == 4
+    assert cache.clear() == 4
+    assert pool.free_pages == 8
+    pool.check_invariants(), cache.check()
+
+
+def test_reserve_pressure_evicts_idle_cache():
+    """An admission needing more than the free list reclaims idle cached
+    pages eagerly — the cache is free space, never a blocker — while
+    ``free >= Σ unbacked`` holds throughout (check_invariants)."""
+    pool, cache = _pool_cache(num_pages=9, page_size=4, slots=2,
+                              max_pages=8)
+    _fill_and_cache(pool, cache, 0, 0, np.arange(24, dtype=np.int32))
+    assert pool.free_pages == 2 and cache.cached_pages == 6
+    assert pool.available == 8
+    pool.reserve(0, 20)                               # needs 5 pages
+    pool.check_invariants()
+    assert pool.free_pages >= 5                       # evicted to cover
+    pool.ensure(0, 20)
+    pool.check_invariants(), cache.check()
+    assert cache.stats.evicted_pages >= 3
+    pool.release(0)
+
+
+# ---------------------------------------------------------------------------
+# pool sharing mechanics
+# ---------------------------------------------------------------------------
+
+def test_share_refcounts_and_release():
+    pool, cache = _pool_cache()
+    toks = np.arange(12, dtype=np.int32)
+    _fill_and_cache(pool, cache, 0, 0, toks)
+    h1, h2 = cache.match(0, toks), cache.match(0, toks)
+    pool.reserve(0, 14, shared_cols=len(h1.pages))
+    pool.reserve(1, 14, shared_cols=len(h2.pages))
+    pool.share(0, h1.pages), pool.share(1, h2.pages)
+    pool.unref_page(h1.cow_page), pool.unref_page(h2.cow_page)
+    assert pool._ref[h1.pages[0]] == 2                # two slots, one page
+    assert pool.resident_unique_pages() == 2
+    assert pool.shared_mapped() == 4
+    pool.ensure(0, 14), pool.ensure(1, 14)
+    pool.check_invariants()
+    # covered_cols counts shared columns: 2 shared + 2 private
+    assert pool.covered_cols(0) == 4
+    pool.release(0)
+    pool.check_invariants()
+    assert pool._ref[h2.pages[0]] == 1                # slot 1 still maps it
+    pool.release(1)
+    pool.check_invariants(), cache.check()
+    assert not pool._ref and cache.cached_pages == 3
+
+
+def test_release_to_cache_mixed_shared_and_owned():
+    """A hit request retiring extends the cached chain: its shared prefix
+    columns drop their refs, its freshly computed prompt pages adopt."""
+    pool, cache = _pool_cache()
+    toks = np.arange(8, dtype=np.int32)
+    _fill_and_cache(pool, cache, 0, 0, toks)          # 2 pages cached
+    longer = np.concatenate([toks, 60 + np.arange(8)]).astype(np.int32)
+    hit = cache.match(0, longer)
+    pool.reserve(0, len(longer) + 2, shared_cols=len(hit.pages))
+    pool.share(0, hit.pages)
+    pool.ensure(0, len(longer) + 2)
+    pool.check_invariants()
+    pages = pool.release_to_cache(0, 4)               # 2 shared + 2 adopted
+    cache.insert(0, longer, pages)
+    pool.check_invariants(), cache.check()
+    assert cache.cached_pages == 4 and not pool._ref
+    full = cache.match(0, np.concatenate([longer, [9, 9]]))
+    assert full.tokens == 16                          # whole chain matches
+    for p in full.pages:
+        pool.unref_page(p)
+
+
+# ---------------------------------------------------------------------------
+# property trace: random admit / hit / retire / evict sequences
+# ---------------------------------------------------------------------------
+
+def _prompt_for(aid: int, sys_blocks: int, tail: int, seed: int, ps: int):
+    """Prompts share per-adapter system prefixes (block-aligned) so traces
+    actually collide in the tree; tails diverge."""
+    sys_full = (np.arange(6 * ps, dtype=np.int32) * (aid + 2)) % 7
+    tail_t = np.asarray(np.random.default_rng(seed).integers(0, 7, tail),
+                        np.int32)
+    return np.concatenate([sys_full[:sys_blocks * ps], tail_t]).astype(
+        np.int32)
+
+
+def _run_prefix_trace(ops, num_pages, ps):
+    pool = PagePool(num_pages=num_pages, page_size=ps, slots=4,
+                    max_pages_per_slot=8)
+    cache = PrefixCache(pool)
+    active = {}                      # slot → (adapter_id, prompt, traj)
+
+    def check():
+        pool.check_invariants()      # incl. free >= Σ unbacked, refcounts
+        cache.check()
+        assert pool.free_pages >= pool.unbacked_total()
+
+    for kind, slot, aid, sysb, tail, seed in ops:
+        if slot in active:           # retire: cache the prefix or drop it
+            a, prompt, _ = active.pop(slot)
+            n_full = len(prompt) // ps
+            if kind % 2 == 0 and 0 < n_full <= pool.covered_cols(slot):
+                pages = pool.release_to_cache(slot, n_full)
+                cache.insert(a, prompt[:n_full * ps], pages)
+            else:
+                pool.release(slot)
+        elif kind == 5:
+            cache.evict(1 + kind % 3)
+        else:                        # admit: match → reserve → share → back
+            prompt = _prompt_for(aid, sysb, tail, seed, ps)
+            traj = len(prompt) + 2
+            if pool.pages_for(traj) > pool.max_pages_per_slot:
+                continue
+            hit = cache.match(aid, prompt)
+            n_shared = len(hit.pages) if hit else 0
+            if pool.pages_for(traj) - n_shared > pool.available:
+                if hit:              # over-capacity: drop the leases
+                    for p in hit.pages:
+                        pool.unref_page(p)
+                    cache.release_cow(hit, copied=False)
+                check()
+                continue
+            pool.reserve(slot, traj, shared_cols=n_shared)
+            cursor = 0
+            if hit:
+                if hit.pages:
+                    pool.share(slot, hit.pages)
+                    cursor = n_shared * ps
+                if hit.cow_page is not None:
+                    if pool.backable_tokens(slot) > cursor:
+                        pool.ensure(slot, cursor + 1)
+                        cursor += hit.cow_tokens
+                cache.release_cow(hit, copied=True)
+            pool.ensure(slot, traj)  # fully-reserved: never starves
+            active[slot] = (aid, prompt, traj)
+        check()
+    for slot in list(active):
+        pool.release(slot)
+    check()
+    cache.clear()
+    check()
+    assert pool.free_pages == num_pages - 1          # everything returned
+
+
+def test_prefix_property_trace():
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _minihyp import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(ops=st.lists(
+        st.tuples(st.integers(0, 5), st.integers(0, 3), st.integers(0, 1),
+                  st.integers(0, 5), st.integers(0, 9), st.integers(0, 49)),
+        min_size=1, max_size=60),
+        num_pages=st.integers(6, 33), ps=st.sampled_from([1, 4]))
+    def trace(ops, num_pages, ps):
+        _run_prefix_trace(ops, num_pages, ps)
+
+    trace()
+
+
+def test_prefix_trace_numpy():
+    """Deterministic randomized sweep (always runs, mirrors the pool
+    trace test's structure)."""
+    rng = np.random.default_rng(7)
+    for _ in range(25):
+        num_pages = int(rng.integers(6, 34))
+        ps = int(rng.choice([1, 4]))
+        ops = [tuple(int(x) for x in (rng.integers(0, 6), rng.integers(0, 4),
+                                      rng.integers(0, 2), rng.integers(0, 6),
+                                      rng.integers(0, 10),
+                                      rng.integers(0, 50)))
+               for _ in range(int(rng.integers(1, 60)))]
+        _run_prefix_trace(ops, num_pages, ps)
+
+
+# ---------------------------------------------------------------------------
+# engine e2e: the acceptance criterion
+# ---------------------------------------------------------------------------
+
+def _serve_waves(eng, waves):
+    """Submit+run each wave to completion in order; returns streams."""
+    outs = []
+    for wave in waves:
+        for r in wave:
+            eng.submit(r)
+        done = eng.run(max_ticks=200)
+        assert len(done) == len(wave) and all(r.done for r in wave)
+        outs += [tuple(r.out) for r in wave]
+        eng.pages.check_invariants()
+        if eng.prefix is not None:
+            eng.prefix.check()
+    return outs
+
+
+def test_engine_prefix_hit_bitwise_and_fewer_ticks():
+    """Wave 2 shares wave 1's per-tenant prompt prefixes: the warm engine
+    must emit BITWISE-identical streams to a cache-disabled engine (and
+    to its own cold wave), reach first tokens in fewer ticks, and report
+    the reuse in its metrics — with one traced executable throughout."""
+    m, params = _model()
+    states = _tenants(m, 2)
+    sys_p = {t: (np.arange(24, dtype=np.int32) * (t + 3)) % 90 + 4
+             for t in range(2)}
+
+    def wave(tag, n=4):
+        return [Request(rid=100 * tag + i,
+                        prompt=np.concatenate(
+                            [sys_p[i % 2], [60 + tag, 50 + i, 40]]
+                        ).astype(np.int32),
+                        adapter_id=i % 2, max_new=4,
+                        sampling=(SamplingParams(temperature=0.9, top_k=16,
+                                                 seed=17 + i)
+                                  if i >= 2 else None))
+                for i in range(n)]
+
+    outs, ticks = {}, {}
+    for on in (True, False):
+        eng = ServingEngine(m, params, states, slots=4, max_len=48,
+                            page_size=8, prefix_cache=on)
+        outs[on] = _serve_waves(eng, [wave(1), wave(2)])
+        ticks[on] = eng.macro_ticks
+        if on:
+            mm = eng.prefix_metrics()
+            assert mm["hits"] >= 4                    # whole second wave
+            assert mm["reused_tokens"] >= 4 * 16      # ≥2 pages/request
+            assert len(eng.unified_traces) == 1
+    assert outs[True] == outs[False], "cache hits changed the streams"
+    assert ticks[True] < ticks[False], (ticks, "hits should skip prefill")
+
+
+def test_engine_prefix_cow_divergence_bitwise():
+    """Prompts diverging inside a page reuse the common tokens through
+    one on-device page copy — streams stay bitwise equal to cache-off."""
+    m, params = _model()
+    states = _tenants(m, 1)
+    base = (np.arange(26, dtype=np.int32) % 90) + 4
+    fork = base.copy()
+    fork[20:] = [7, 8, 9, 10, 11, 12]
+    outs = {}
+    for on in (True, False):
+        eng = ServingEngine(m, params, states, slots=2, max_len=48,
+                            page_size=8, decode_ticks=4, prefix_cache=on)
+        waves = [[Request(rid=0, prompt=base.copy(), adapter_id=0,
+                          max_new=4)],
+                 [Request(rid=1, prompt=fork.copy(), adapter_id=0,
+                          max_new=4),
+                  Request(rid=2, prompt=base.copy(), adapter_id=0,
+                          max_new=4)]]
+        outs[on] = _serve_waves(eng, waves)
+        if on:
+            mm = eng.prefix_metrics()
+            assert mm["cow_tokens"] > 0, "expected a COW divergence hit"
+            assert mm["hits"] == 2
+    assert outs[True] == outs[False]
+
+
+def test_engine_prefix_adapter_isolation():
+    """The same prompt under another tenant misses the cache (KV depends
+    on the adapter) and still decodes that tenant's stream."""
+    m, params = _model()
+    states = _tenants(m, 2)
+    prompt = (np.arange(18, dtype=np.int32) % 90) + 4
+    eng = ServingEngine(m, params, states, slots=2, max_len=48, page_size=8,
+                        prefix_cache=True)
+    outs = _serve_waves(eng, [
+        [Request(rid=0, prompt=prompt.copy(), adapter_id=0, max_new=4)],
+        [Request(rid=1, prompt=prompt.copy(), adapter_id=1, max_new=4)]])
+    assert eng.prefix_metrics()["hits"] == 0
+    ref = ServingEngine(m, params, states, slots=2, max_len=48, page_size=8)
+    expect = _serve_waves(ref, [
+        [Request(rid=0, prompt=prompt.copy(), adapter_id=0, max_new=4)],
+        [Request(rid=1, prompt=prompt.copy(), adapter_id=1, max_new=4)]])
+    assert outs == expect
+    # now a same-tenant resubmission DOES hit
+    outs2 = _serve_waves(eng, [
+        [Request(rid=2, prompt=prompt.copy(), adapter_id=1, max_new=4)]])
+    assert eng.prefix_metrics()["hits"] == 1
+    assert outs2[0] == expect[1]
+
+
+def test_engine_prefix_eviction_under_pressure():
+    """A pool too small to hold every retired prefix keeps serving: idle
+    cache entries evict on demand, every request completes, streams match
+    the cache-off engine, and the ledger invariants never break."""
+    m, params = _model()
+    states = _tenants(m, 1)
+    prompts = [(np.arange(16, dtype=np.int32) * k) % 90 + 4
+               for k in (1, 3, 5, 7)]
+    outs = {}
+    for on in (True, False):
+        # 5 allocatable pages; each trajectory needs 3 → at most one
+        # retired prefix (2 pages) can stay cached between admissions
+        eng = ServingEngine(m, params, states, slots=1, max_len=32,
+                            page_size=8, num_pages=6, prefix_cache=on)
+        waves = [[Request(rid=i, prompt=p.copy(), adapter_id=0, max_new=4)]
+                 for i, p in enumerate(prompts)]
+        outs[on] = _serve_waves(eng, waves)
+        if on:
+            assert eng.prefix_metrics()["evicted_pages"] > 0
+    assert outs[True] == outs[False]
+
+
+def test_engine_prefix_full_pool_roundtrip():
+    """After clearing the cache, every page returns to the free list —
+    retirement-into-cache leaks nothing."""
+    m, params = _model()
+    states = _tenants(m, 1)
+    eng = ServingEngine(m, params, states, slots=2, max_len=32, page_size=8,
+                        prefix_cache=True)
+    total = eng.pages.free_pages
+    _serve_waves(eng, [[Request(rid=i,
+                                prompt=(np.arange(12, dtype=np.int32)
+                                        + i) % 90 + 4,
+                                adapter_id=0, max_new=3)
+                        for i in range(2)]])
+    assert eng.pages.free_pages == total - eng.prefix.cached_pages
+    eng.prefix.clear()
+    eng.pages.check_invariants()
+    assert eng.pages.free_pages == total
+
+
+def test_engine_prefix_requires_unified_non_swa():
+    m, params = _model()
+    states = _tenants(m, 1)
+    with pytest.raises(ValueError, match="unified"):
+        ServingEngine(m, params, states, slots=2, max_len=32, paged=False,
+                      prefix_cache=True)
+    ms, mparams = _model("mixtral-8x7b")              # sliding window
+    with pytest.raises(ValueError, match="sliding-window"):
+        ServingEngine(ms, mparams, _tenants(ms, 1), slots=2, max_len=64,
+                      page_size=8, prefix_cache=True)
