@@ -48,6 +48,12 @@ resident unique KV pages over the run (shared pages counted once), cache
 hit rate / reused tokens, and a bitwise check that cache-hit streams
 equal the cache-disabled engine's.
 
+And the **preempt-pressure sweep** (``preempt_pressure``): pool size ×
+preemption on/off under a fixed mixed-priority arrival schedule —
+completed requests, interactive-class TTFT/ITL in engine ticks, and the
+preemption count per cell (the degradation-ladder price of evicting a
+background resident through the prefix cache vs plain backpressure).
+
 Writes BENCH_serving.json at the repo root so the perf trajectory is
 recorded from PR 1 onward.
 
@@ -68,8 +74,8 @@ from repro.configs import get_config, smoke
 from repro.core import AdapterConfig
 from repro.models import Model
 from repro.models.transformer import arch_stacks, cache_seq_len
-from repro.serving import (PagePool, Request, ServingEngine, make_serve_step,
-                           stack_tenants)
+from repro.serving import (PagePool, Request, ResilienceConfig, ServingEngine,
+                           make_serve_step, stack_tenants)
 
 MAX_LEN = 32
 PAGE_SIZE = 8
@@ -381,6 +387,80 @@ def bench_prefix_reuse(model, params, states, fast: bool = False):
     return rows
 
 
+def bench_preempt_pressure(model, params, states, fast: bool = False):
+    """Page-pressure sweep: pool size × preemption on/off.
+
+    A fixed arrival schedule mixes long low-priority background requests
+    with short high-priority interactive ones on a 2-slot engine; under
+    small pools the interactive class can only get in by evicting a
+    background resident through the prefix cache.  Each cell runs the
+    SAME schedule for a fixed tick budget and records completed
+    requests, interactive-class TTFT (engine ticks — deterministic
+    off-TPU), mean inter-token ticks, and the preemption count: the
+    throughput/latency price of the preempt rung vs plain backpressure."""
+    ps = PAGE_SIZE
+    budget = 48 if fast else 96
+    pools = [7, 9] if fast else [7, 9, 13]
+    rows = []
+    for num_pages in pools:
+        for preempt in (False, True):
+            eng = ServingEngine(model, params, states[:2], slots=2,
+                                max_len=MAX_LEN, page_size=ps,
+                                num_pages=num_pages, prefix_cache=True,
+                                resilience=ResilienceConfig(
+                                    preempt=preempt, pressure_ticks=2,
+                                    watchdog_ticks=budget + 8))
+            schedule, rid = [], 0
+            for t in range(0, budget - 16, 3):
+                schedule.append((t, Request(
+                    rid=(rid := rid + 1),
+                    prompt=(np.arange(16, dtype=np.int32) * (rid + 2))
+                    % 90 + 4, adapter_id=rid % 2, max_new=8)))
+                schedule.append((t + 1, Request(
+                    rid=(rid := rid + 1),
+                    prompt=(np.arange(8, dtype=np.int32) * (rid + 2))
+                    % 90 + 4, adapter_id=rid % 2, max_new=2, priority=5)))
+            interactive = {r.rid for _, r in schedule if r.priority > 0}
+            sub_tick, first_tick, fin_tick = {}, {}, {}
+            done = []
+            for tick in range(budget):
+                for t, r in schedule:
+                    if t == tick:
+                        sub_tick[r.rid] = tick
+                        eng.submit(r)
+                done += eng.step()
+                for _, r in schedule:
+                    if r.out and r.rid not in first_tick:
+                        first_tick[r.rid] = tick + 1
+                    if r.done and r.rid not in fin_tick:
+                        fin_tick[r.rid] = tick + 1
+            eng.pages.check_invariants()
+            ok = [r for r in done if r.error is None]
+            ttft = [first_tick[rid] - sub_tick[rid] for rid in interactive
+                    if rid in first_tick]
+            itl = [(fin_tick[r.rid] - first_tick[r.rid]) / (len(r.out) - 1)
+                   for r in ok if len(r.out) > 1 and r.rid in first_tick]
+            m = eng.resilience_metrics()
+            row = {"num_pages": num_pages, "preempt": preempt,
+                   "tick_budget": budget, "submitted": len(schedule),
+                   "completed": len(ok),
+                   "interactive_ttft_ticks_mean":
+                       float(np.mean(ttft)) if ttft else None,
+                   "interactive_ttft_ticks_max":
+                       int(np.max(ttft)) if ttft else None,
+                   "itl_ticks_mean": float(np.mean(itl)) if itl else None,
+                   "preemptions": m["preemptions"],
+                   "time_in_queue_hist": m["time_in_queue_hist"]}
+            rows.append(row)
+            print(f"preempt_pressure pages={num_pages:3d} "
+                  f"preempt={'on ' if preempt else 'off'} "
+                  f"done={row['completed']:3d}/{row['submitted']:3d} "
+                  f"ttft={row['interactive_ttft_ticks_mean'] or -1:6.2f} "
+                  f"ticks (max {row['interactive_ttft_ticks_max'] or -1}) "
+                  f"preemptions={row['preemptions']}")
+    return rows
+
+
 def main(fast: bool = False):
     cfg = smoke(get_config("granite-3-2b"))
     model = Model(cfg, ACFG)
@@ -423,6 +503,8 @@ def main(fast: bool = False):
               f"  ticks={r['ticks']}")
     device_loop = bench_device_loop(model, params, stag_states, fast=fast)
     prefix_reuse = bench_prefix_reuse(model, params, stag_states, fast=fast)
+    preempt_pressure = bench_preempt_pressure(model, params, stag_states,
+                                              fast=fast)
     report = {
         "config": {"model": "granite-3-2b (smoke)", "adapter": "mos",
                    "equiv_rank": ACFG.equiv_rank, "rank": ACFG.rank,
@@ -437,6 +519,7 @@ def main(fast: bool = False):
         "staggered_arrival": staggered,
         "device_loop": device_loop,
         "prefix_reuse": prefix_reuse,
+        "preempt_pressure": preempt_pressure,
     }
     OUT.write_text(json.dumps(report, indent=2) + "\n")
     print(f"wrote {OUT}")

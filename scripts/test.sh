@@ -3,11 +3,27 @@
 #   scripts/test.sh        — fast lane: skip the slow interpret-mode kernel
 #                            sweeps (developer inner loop)
 #   scripts/test.sh tier1  — the canonical tier-1 command (ROADMAP.md)
+#   scripts/test.sh chaos  — resilience chaos lane: the fixed-seed chaos
+#                            schedule plus ONE randomized seed (printed up
+#                            front; rerun with REPRO_CHAOS_SEED=<seed>)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-if [[ "${1:-fast}" == "tier1" ]]; then
+case "${1:-fast}" in
+  tier1)
     exec python -m pytest -x -q
-fi
-exec python -m pytest -q -m "not slow"
+    ;;
+  chaos)
+    # fixed seed first (the deterministic acceptance schedule), then a
+    # fresh random seed each run — REPRO_CHAOS_SEED pins it for repro
+    python -m pytest -q tests/test_resilience.py -k chaos
+    seed="${REPRO_CHAOS_SEED:-$((RANDOM * 32768 + RANDOM))}"
+    echo "chaos lane randomized seed: $seed (REPRO_CHAOS_SEED=$seed to repro)"
+    REPRO_CHAOS_SEED="$seed" exec python -m pytest -q \
+        tests/test_resilience.py -k test_chaos_randomized_seed
+    ;;
+  *)
+    exec python -m pytest -q -m "not slow"
+    ;;
+esac

@@ -25,6 +25,23 @@ import numpy as np
 SEP = "/"
 
 
+class _NpEncoder(json.JSONEncoder):
+    """Metadata JSON tolerant of numpy scalars/arrays — engine snapshots
+    (serving.resilience) carry block tables and counters straight from
+    numpy-backed host state."""
+
+    def default(self, o):
+        if isinstance(o, np.integer):
+            return int(o)
+        if isinstance(o, np.floating):
+            return float(o)
+        if isinstance(o, np.bool_):
+            return bool(o)
+        if isinstance(o, np.ndarray):
+            return o.tolist()
+        return super().default(o)
+
+
 def _flatten(tree, prefix="") -> Dict[str, Any]:
     out = {}
     if isinstance(tree, dict):
@@ -76,7 +93,7 @@ def save(path: Path, tree, metadata: Optional[Dict] = None):
         arrays[k] = store
         manifest["paths"][k] = {"shape": list(a.shape), "dtype": a.dtype.name}
     np.savez(tmp / "arrays.npz", **arrays)
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    (tmp / "manifest.json").write_text(json.dumps(manifest, cls=_NpEncoder))
     if path.exists():
         shutil.rmtree(path)
     os.replace(tmp, path)
@@ -132,7 +149,7 @@ def save_sharded(path: Path, tree, rules, axes_tree, metadata=None):
                                 "spec": [list(e) if isinstance(e, (list, tuple))
                                          else e for e in spec],
                                 "grid": grid}
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    (tmp / "manifest.json").write_text(json.dumps(manifest, cls=_NpEncoder))
     if path.exists():
         shutil.rmtree(path)
     os.replace(tmp, path)

@@ -4,4 +4,8 @@ from .engine import (ServingEngine, Request, make_serve_step,
 from .multi_tenant import stack_tenants, MTHooks, make_mt_factory
 from .paging import PagePool, paginate_cache
 from .prefix import PrefixCache, PrefixHit, PrefixStats, PrefixTree
+from .resilience import (DeadlineExceeded, Fault, FaultHarness, FaultPlan,
+                         NeverFitsError, RequestCancelled, RequestError,
+                         ResilienceConfig, ResilienceStats, SlotQuarantined,
+                         StarvationError, TTLExpired)
 from .sampling import SamplingParams, sample_tokens

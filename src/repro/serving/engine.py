@@ -60,6 +60,12 @@ from ..models.attention import INVALID_POS
 from .multi_tenant import make_mt_factory, stack_tenants
 from .paging import PagePool
 from .prefix import PrefixCache
+from .resilience.errors import (DeadlineExceeded, NeverFitsError,
+                                RequestCancelled, RequestError,
+                                SlotQuarantined, StarvationError,
+                                TTLExpired)
+from .resilience.policy import (ResilienceConfig, ResilienceStats,
+                                VictimCandidate, select_victim)
 from .sampling import SamplingParams, params_to_arrays, sample_tokens
 
 
@@ -176,6 +182,10 @@ def make_fused_step(model, decode_ticks: Optional[int], tenants: int = 0,
       eos       (slots,) int32     stop token (-1 disables)
       adapter_ids (slots,) int32   (donor lanes carry the donee's id)
       temperature/top_k/top_p/seed (slots,)  sampling params
+      poison    (D, slots) bool    fault-injection hook: overwrite the
+                                   slot's sampling row with NaN at that
+                                   micro-step (all-False in production —
+                                   the guard below is what's under test)
 
     Per micro-step: feeding slots override column 0 of their row with the
     carried token/position, the unified forward writes pages + attends,
@@ -185,10 +195,17 @@ def make_fused_step(model, decode_ticks: Optional[int], tenants: int = 0,
     when it sampled its ``cap``-th token or hit ``eos`` — pads from then
     on, so no page writes and no logits reads leak past the stop.
 
-    Returns ``(new_cache, tokens (D, slots) int32, valid (D, slots) bool)``
-    — the host drains the buffer in one device→host sync.  Carries
-    ``._traces`` like :func:`make_unified_step`; one trace per engine
-    lifetime regardless of the admitted mix.
+    Returns ``(new_cache, tokens (D, slots) int32, valid (D, slots) bool,
+    finite (D, slots) bool)`` — the host drains the buffer in one
+    device→host sync.  ``finite`` is the per-slot fault-isolation guard:
+    an all-finite reduction over each slot's sampled logits row, computed
+    in-graph for the price of one ``lax`` reduction per micro-step.  A
+    False entry means that slot's logits were poisoned (NaN/inf) at that
+    micro-step — the engine quarantines ONLY that slot (typed error,
+    pages freed); co-tenant rows are untouched because every kernel in
+    the micro-step is row-independent.  Carries ``._traces`` like
+    :func:`make_unified_step`; one trace per engine lifetime regardless
+    of the admitted mix.
     """
     traces: List[int] = []
 
@@ -206,7 +223,7 @@ def make_fused_step(model, decode_ticks: Optional[int], tenants: int = 0,
 
         def micro(carry, xs):
             cache, feed, tok, ln, made = carry
-            toks_t, pos_t, last_t, srow_t, final_t = xs
+            toks_t, pos_t, last_t, srow_t, final_t, poison_t = xs
             fcol = feed[:, None] & col0
             toks = jnp.where(fcol, tok[:, None], toks_t)
             pos = jnp.where(fcol, ln[:, None], pos_t)
@@ -216,6 +233,13 @@ def make_fused_step(model, decode_ticks: Optional[int], tenants: int = 0,
                 attn_backend=attn_backend, attn_interpret=interpret)
             logits = model.logits_at(params, h, last)              # (S, V)
             lrow = jnp.take(logits, srow_t, axis=0)
+            # fault injection point: the plan may poison a slot's row
+            # (all-False in production packs — same trace either way)
+            lrow = jnp.where(poison_t[:, None], jnp.nan, lrow)
+            # per-slot NaN/inf quarantine guard: one cheap reduction per
+            # micro-step.  The sample from a poisoned row is a valid
+            # token id (harmless), the host discards it via ``finite``.
+            fin = jnp.all(jnp.isfinite(lrow), axis=-1)
             emit = feed | final_t
             counter = jnp.where(final_t, plan["plen"], ln + 1)
             samp = sample_tokens(lrow, plan["temperature"], plan["top_k"],
@@ -226,14 +250,15 @@ def make_fused_step(model, decode_ticks: Optional[int], tenants: int = 0,
             made2 = made + emit.astype(jnp.int32)
             hit_eos = emit & (plan["eos"] >= 0) & (tok2 == plan["eos"])
             feed2 = emit & (made2 < plan["cap"]) & jnp.logical_not(hit_eos)
-            return (cache, feed2, tok2, ln2, made2), (tok2, emit)
+            return (cache, feed2, tok2, ln2, made2), (tok2, emit, fin)
 
         init = (cache, plan["feed0"], plan["tok0"], plan["len0"],
                 jnp.zeros((S,), jnp.int32))
         xs = (plan["tokens"], plan["positions"], plan["last_col"],
-              plan["samp_row"], plan["final"])
-        (cache, *_), (toks_out, valid_out) = jax.lax.scan(micro, init, xs)
-        return cache, toks_out, valid_out
+              plan["samp_row"], plan["final"], plan["poison"])
+        (cache, *_), (toks_out, valid_out, finite_out) = jax.lax.scan(
+            micro, init, xs)
+        return cache, toks_out, valid_out, finite_out
 
     fused_step._traces = traces
     return fused_step
@@ -249,6 +274,21 @@ class Request:
     eos_id: Optional[int] = None                # stop token (also emitted)
     out: Optional[List[int]] = None
     done: bool = False
+    # --- lifecycle (serving.resilience) -------------------------------
+    priority: int = 0            # preemption only ever evicts STRICTLY
+    #                              lower priority than the starved request
+    deadline_ticks: Optional[int] = None   # max ticks submit → completion
+    ttl: Optional[int] = None              # max ticks waiting in queue
+    error: Optional[Exception] = None      # RequestError | NeverFitsError
+    # engine bookkeeping (stamped by the engine, serialized by snapshot)
+    submit_tick: int = dataclasses.field(default=-1, repr=False)
+    admit_tick: int = dataclasses.field(default=-1, repr=False)
+    enq_tick: int = dataclasses.field(default=-1, repr=False)
+    preemptions: int = dataclasses.field(default=0, repr=False)
+
+    @property
+    def failed(self) -> bool:
+        return self.error is not None
 
 
 def batch_dim_of(leaf_name: str) -> int:
@@ -346,7 +386,8 @@ class ServingEngine:
                  attn_backend: str = "pallas", unified: bool = True,
                  chunk: Optional[int] = None, decode_ticks: int = 1,
                  sample_backend: str = "pallas",
-                 prefix_cache: bool = False, auto_ticks: bool = False):
+                 prefix_cache: bool = False, auto_ticks: bool = False,
+                 resilience: Optional[ResilienceConfig] = None):
         self.model, self.params = model, params
         self.tenants = len(tenant_states)
         self.backend = backend
@@ -453,6 +494,25 @@ class ServingEngine:
         self._len: Dict[int, int] = {}       # slot → total tokens written
         self._oversub_slot: Optional[int] = None
         self._last_valid: Optional[np.ndarray] = None   # debug/test hook
+        # --- resilience layer (serving.resilience) --------------------
+        self.rcfg = resilience if resilience is not None \
+            else ResilienceConfig()
+        self.rstats = ResilienceStats()
+        self.tick_count = 0                  # engine ticks ever stepped
+        self._rids: set = set()              # LIVE rids (queued + active)
+        self._cancel_req: set = set()        # rids to cancel at next tick
+        # slot → effective prompt: the ORIGINAL prompt plus any tokens
+        # already emitted before a preemption — re-admission streams this
+        # and the PRNG position-counter contract makes the resumed stream
+        # bitwise identical to an uninterrupted run
+        self._eff: Dict[int, np.ndarray] = {}
+        self._head_wait = 0                  # ticks the FIFO head waited
+        self._stall_ticks: Dict[int, int] = {}   # slot → page-stall ticks
+        self._no_progress = 0                # watchdog: no-progress ticks
+        self._poison_next: set = set()       # fault hook: slots to poison
+        self._progress = False               # set by any scheduler progress
+        self._stalled_now: set = set()       # slots page-stalled this tick
+        self._tick_failed: List[Request] = []   # failed mid-admission
 
     # ------------------------------------------------------------------
     # token selection (legacy host path)
@@ -528,7 +588,39 @@ class ServingEngine:
         it needs no page."""
         return len(req.prompt) + req.max_new - 1
 
+    def _never_fit_pages(self, req: Request) -> Tuple[int, int]:
+        """``(need_pages, cap_pages)`` of the never-fits check: resident
+        pages the trajectory requires at steady state vs the most the
+        pool could EVER free for one slot.  ``need > cap`` means no
+        amount of waiting admits this request."""
+        need = len(req.prompt) + req.max_new
+        cap = min(self.pages.max_pages_per_slot, self.num_pages - 1)
+        eff = self._effective_tokens(self._traj_tokens(req)
+                                     if self.unified else need)
+        return self.pages.pages_for(eff), cap
+
     def submit(self, req: Request):
+        if req.rid in self._rids:
+            # duplicate of a LIVE request (queued or in flight) — retired
+            # rids may be reused, which waves of benchmark traffic rely on
+            raise ValueError(f"request {req.rid}: duplicate of a live "
+                             f"request id")
+        if len(req.prompt) < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if req.max_new < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new {req.max_new} < 1")
+        if req.sampling is not None:
+            # re-run construction-time range validation: callers that
+            # built the params through __setattr__ tricks (or unpickled
+            # them) still get a clear ValueError here instead of silent
+            # kernel misbehavior downstream
+            dataclasses.replace(req.sampling)
+        if req.deadline_ticks is not None and req.deadline_ticks < 1:
+            raise ValueError(f"request {req.rid}: deadline_ticks "
+                             f"{req.deadline_ticks} < 1")
+        if req.ttl is not None and req.ttl < 1:
+            raise ValueError(f"request {req.rid}: ttl {req.ttl} < 1")
         req.out = []
         need = len(req.prompt) + req.max_new
         if need > self.max_len and (self.paged or self.window <= 0):
@@ -545,15 +637,253 @@ class ServingEngine:
             # (Unified mode gates on tokens actually written and, under a
             # sliding window, on the resident bound; legacy admission
             # backs the full trajectory upfront and must gate on it.)
-            cap = min(self.pages.max_pages_per_slot, self.num_pages - 1)
-            eff = self._effective_tokens(self._traj_tokens(req)
-                                         if self.unified else need)
-            if self.pages.pages_for(eff) > cap:
-                raise ValueError(
-                    f"request {req.rid}: needs {self.pages.pages_for(eff)} "
-                    f"resident pages but the pool can ever free at most "
-                    f"{cap}")
+            need_p, cap_p = self._never_fit_pages(req)
+            if need_p > cap_p:
+                self.rstats.never_fit_rejections += 1
+                raise NeverFitsError(req.rid, need_p, cap_p)
+        req.submit_tick = req.enq_tick = self.tick_count
+        self._rids.add(req.rid)
         self._queue.append(req)
+
+    # ------------------------------------------------------------------
+    # request lifecycle API (serving.resilience)
+    # ------------------------------------------------------------------
+
+    def cancel(self, rid: int) -> bool:
+        """Request cancellation of a LIVE (queued or active) request.
+        Takes effect at the next tick boundary: pages free/release-to-
+        cache there, the request comes back from ``step()`` with
+        ``error=RequestCancelled``.  Returns whether ``rid`` was live."""
+        if rid not in self._rids:
+            return False
+        self._cancel_req.add(rid)
+        return True
+
+    def preempt(self, rid: int) -> bool:
+        """Force-preempt an ACTIVE request now (between ticks): its pages
+        release through the prefix cache (when on), it re-enters the
+        queue head, and its resumed stream is bitwise identical to an
+        uninterrupted run.  The pressure policy calls the same mechanism;
+        this entry point exists for tests/operators.  Returns False when
+        ``rid`` is not active (nothing to preempt)."""
+        if not self.unified:
+            raise ValueError("preemption requires the unified scheduler")
+        for s, req in enumerate(self._active):
+            if req is not None and req.rid == rid:
+                self._preempt_slot(s, requeue_at=0)
+                return True
+        return False
+
+    def inject_nan(self, slot: int) -> bool:
+        """Fault-injection hook (``resilience.faults``): poison ``slot``'s
+        sampling row with NaN at the first micro-step of the NEXT macro
+        tick.  Arms only when the slot is currently active (returns
+        False otherwise); same executable either way — the poison mask
+        rides the plan."""
+        if not self.unified or not (0 <= slot < self.slots) \
+                or self._active[slot] is None:
+            return False
+        self._poison_next.add(slot)
+        return True
+
+    def snapshot(self, path) -> Dict[str, Any]:
+        """Serialize the engine (device cache pages + host scheduler
+        state) at the current tick boundary — see
+        ``resilience.snapshot``."""
+        from .resilience.snapshot import snapshot_engine
+        return snapshot_engine(self, path)
+
+    def restore(self, path) -> Dict[str, Any]:
+        """Load a snapshot into this freshly built engine and resume
+        mid-flight with bitwise-identical continuations."""
+        from .resilience.snapshot import restore_engine
+        return restore_engine(self, path)
+
+    def resilience_metrics(self) -> Dict[str, Any]:
+        """Cumulative resilience counters + latency histograms (ticks)."""
+        return self.rstats.as_dict()
+
+    # ------------------------------------------------------------------
+    # lifecycle internals (serving.resilience)
+    # ------------------------------------------------------------------
+
+    def _written_tokens(self, s: int) -> int:
+        """Tokens actually resident in ``s``'s pages right now: the chunk
+        cursor while prefilling, else the fed-token watermark."""
+        eff_len = len(self._eff.get(s, ()))
+        cur = self._cursor.get(s, eff_len)
+        return max(cur, self._len.get(s, 0))
+
+    def _reclaimable_pages(self, s: int) -> int:
+        """Full written pages a preemption of ``s`` would park in the
+        prefix cache (0 with the cache off) — the victim policy's
+        cheap-to-evict signal AND what :meth:`_release_slot` caches."""
+        if self.prefix is None or self.pages._base.get(s, 0) != 0:
+            return 0
+        n_full = self._written_tokens(s) // self.page_size
+        return min(n_full, self.pages.covered_cols(s))
+
+    def _release_slot(self, s: int, cache_prefix: bool):
+        """Free slot ``s`` mid-flight (cancel/deadline/quarantine/
+        preempt).  ``cache_prefix=True`` parks the full written pages in
+        the prefix tree (resume/recompute finds them); quarantine passes
+        False — poisoned KV must never be cached."""
+        req = self._active[s]
+        if self.paged and self.unified:
+            n_full = self._reclaimable_pages(s) if cache_prefix else 0
+            n_shared = len(self.pages._shared.get(s, ()))
+            if 0 < n_full and n_shared <= n_full:
+                pages = self.pages.release_to_cache(s, n_full)
+                toks = np.concatenate(
+                    [np.asarray(req.prompt, np.int32),
+                     np.asarray(req.out or [], np.int32)])
+                self.prefix.insert(req.adapter_id,
+                                   toks[:n_full * self.page_size], pages)
+            else:
+                self.pages.release(s)
+        elif self.paged:
+            self._legacy_paged_cleanup([s])
+        self._pending.pop(s, None)
+        self._active[s] = None
+        for d in (self._cursor, self._len, self._eff, self._stall_ticks):
+            d.pop(s, None)
+        self._poison_next.discard(s)
+        if self._oversub_slot == s:
+            self._oversub_slot = None
+
+    def _fail_active(self, s: int, err: Exception,
+                     cache_prefix: bool = True) -> Request:
+        req = self._active[s]
+        self._release_slot(s, cache_prefix)
+        req.error = err
+        req.done = True
+        self._rids.discard(req.rid)
+        self._cancel_req.discard(req.rid)
+        return req
+
+    def _preempt_slot(self, s: int, requeue_at: int = 0):
+        """Preempt-and-recompute: release ``s``'s pages through the
+        prefix cache and re-queue its request with the emitted tokens as
+        part of the effective prompt — re-admission's prefix hit maps the
+        cached pages back and only the uncached suffix re-prefills.  The
+        resumed stream is bitwise identical to an uninterrupted run (the
+        PRNG counter is the token's context position — slot-, tick- and
+        preemption-invariant)."""
+        req = self._active[s]
+        self._release_slot(s, cache_prefix=True)
+        req.preemptions += 1
+        self.rstats.preemptions += 1
+        if req.preemptions == 1:
+            self.rstats.time_to_first_preemption.append(
+                max(0, self.tick_count - max(req.submit_tick, 0)))
+        req.enq_tick = self.tick_count
+        self._queue.insert(min(requeue_at, len(self._queue)), req)
+        self._progress = True
+
+    def _lifecycle_sweep(self) -> List[Request]:
+        """Tick-boundary cancel/TTL/deadline processing over the queue
+        and the active slots; returns the requests failed here."""
+        failed: List[Request] = []
+        now = self.tick_count
+        if self._queue:
+            keep: List[Request] = []
+            for req in self._queue:
+                err: Optional[RequestError] = None
+                if req.rid in self._cancel_req:
+                    err = RequestCancelled(req.rid, now)
+                    self.rstats.cancellations += 1
+                elif req.ttl is not None \
+                        and now - req.enq_tick >= req.ttl:
+                    err = TTLExpired(
+                        req.rid, now,
+                        f"queued {now - req.enq_tick} >= ttl {req.ttl}")
+                    self.rstats.ttl_expirations += 1
+                elif req.deadline_ticks is not None \
+                        and now - req.submit_tick >= req.deadline_ticks:
+                    err = DeadlineExceeded(
+                        req.rid, now,
+                        f"submitted {now - req.submit_tick} ticks ago")
+                    self.rstats.deadline_expirations += 1
+                if err is None:
+                    keep.append(req)
+                else:
+                    req.error = err
+                    req.done = True
+                    self._rids.discard(req.rid)
+                    self._cancel_req.discard(req.rid)
+                    failed.append(req)
+            self._queue = keep
+        for s, req in enumerate(self._active):
+            if req is None:
+                continue
+            if req.rid in self._cancel_req:
+                self.rstats.cancellations += 1
+                failed.append(self._fail_active(
+                    s, RequestCancelled(req.rid, now)))
+            elif req.deadline_ticks is not None \
+                    and now - req.submit_tick >= req.deadline_ticks:
+                self.rstats.deadline_expirations += 1
+                failed.append(self._fail_active(
+                    s, DeadlineExceeded(
+                        req.rid, now,
+                        f"submitted {now - req.submit_tick} ticks ago")))
+        return failed
+
+    def _victim_candidates(self, exclude: Optional[int]
+                           ) -> List[VictimCandidate]:
+        return [VictimCandidate(slot=s, priority=req.priority,
+                                reclaimable_pages=self._reclaimable_pages(s),
+                                admit_tick=req.admit_tick)
+                for s, req in enumerate(self._active)
+                if req is not None and s != exclude]
+
+    def _pressure_preempt(self):
+        """The pressure rung of the degradation ladder: after
+        ``pressure_ticks`` of (a) the FIFO head waiting or (b) an
+        admitted oversubscribed decode stalled at allowance 0, evict ONE
+        strictly-lower-priority victim through the prefix cache.  With
+        uniform priorities this never fires — backpressure alone."""
+        if not (self.unified and self.rcfg.preempt):
+            return
+        pt = self.rcfg.pressure_ticks
+        if self._queue and self._head_wait >= pt:
+            head = self._queue[0]
+            v = select_victim(self._victim_candidates(None), head.priority)
+            if v is not None:
+                # victim resumes right behind the head it unblocked
+                self._preempt_slot(v, requeue_at=1)
+                self._head_wait = 0
+                return               # at most one preemption per tick
+        s = self._oversub_slot
+        if s is not None and self._stall_ticks.get(s, 0) >= pt \
+                and self._active[s] is not None:
+            v = select_victim(self._victim_candidates(s),
+                              self._active[s].priority)
+            if v is not None:
+                self._preempt_slot(v, requeue_at=0)
+                self._stall_ticks[s] = 0
+
+    def _watchdog(self):
+        """Raise ``StarvationError`` after ``watchdog_ticks`` consecutive
+        ticks with work pending but zero progress (no token drained, no
+        cursor advance, no admission/retirement/preemption) — livelocks
+        the admission ledger could not foresee, e.g. pages leaked outside
+        it.  The tick completed; engine state stays consistent."""
+        if not (self._queue or any(r is not None for r in self._active)) \
+                or self._progress:
+            self._no_progress = 0
+            return
+        self._no_progress += 1
+        if self._no_progress >= self.rcfg.watchdog_ticks:
+            self._no_progress = 0
+            self.rstats.starvation_aborts += 1
+            # blame the queue head, else the stalled (oversubscribed)
+            # resident — whoever the driver would cancel to unblock
+            head = (self._queue[0].rid if self._queue else
+                    next((r.rid for r in self._active if r is not None), -1))
+            raise StarvationError(
+                self.rcfg.watchdog_ticks, head, self.tick_count,
+                self.pages.free_pages if self.paged else -1)
 
     # ------------------------------------------------------------------
     # legacy admission (two-phase path)
@@ -576,6 +906,10 @@ class ServingEngine:
             else:
                 slot = free.pop(0)
             admitted.append((slot, self._queue.pop(0)))
+            req.admit_tick = self.tick_count
+            self.rstats.time_in_queue.append(
+                max(0, self.tick_count - max(req.enq_tick, 0)))
+            self._progress = True
         return admitted
 
     def _admit(self):
@@ -699,7 +1033,14 @@ class ServingEngine:
         tail copies one page on device (COW), and the chunk cursor starts
         past everything reused — only the uncached suffix is prefilled.
         Shared pages need no backing, so a hit also shrinks the private
-        reservation the admission must fit."""
+        reservation the admission must fit.
+
+        A PREEMPTED request re-admits with its emitted tokens appended to
+        its prompt — the **effective prompt** (``self._eff``): the match
+        probes it (finding the pages preemption cached, generated pages
+        included), the packer streams it, and ``plen`` counts it, so the
+        first resumed token samples with the same position counter the
+        uninterrupted run used — bitwise-identical resumption."""
         if self._oversub_slot is not None:
             s = self._oversub_slot
             req = self._active[s]
@@ -711,8 +1052,24 @@ class ServingEngine:
         free = [i for i in range(self.slots) if self._active[i] is None]
         while self._queue and free:
             req = self._queue[0]
-            traj = self._traj_tokens(req)
-            hit = (self.prefix.match(req.adapter_id, req.prompt)
+            # first-hold safety net for requests that bypassed submit()'s
+            # never-fits guard (direct queue injection, config drift):
+            # fail typed instead of holding the FIFO head forever
+            need_p, cap_max = self._never_fit_pages(req)
+            if need_p > cap_max:
+                self._queue.pop(0)
+                self._rids.discard(req.rid)
+                self._cancel_req.discard(req.rid)
+                self.rstats.never_fit_rejections += 1
+                req.error = NeverFitsError(req.rid, need_p, cap_max)
+                req.done = True
+                self._tick_failed.append(req)
+                continue
+            eff = (np.concatenate([np.asarray(req.prompt, np.int32),
+                                   np.asarray(req.out, np.int32)])
+                   if req.out else np.asarray(req.prompt, np.int32))
+            traj = self._traj_tokens(req)    # == len(eff) + remaining - 1
+            hit = (self.prefix.match(req.adapter_id, eff)
                    if self.prefix is not None else None)
             n_shared = len(hit.pages) if hit is not None else 0
             cap = self._swa_cap_pages()
@@ -729,8 +1086,13 @@ class ServingEngine:
             cursor = 0 if hit is None else self._map_prefix_hit(slot, hit)
             self._active[slot] = req
             self.adapter_ids[slot] = req.adapter_id
+            self._eff[slot] = eff
             self._cursor[slot] = cursor
             self._len[slot] = 0
+            req.admit_tick = self.tick_count
+            self.rstats.time_in_queue.append(
+                max(0, self.tick_count - max(req.enq_tick, 0)))
+            self._progress = True
             if self._oversub_slot is not None:
                 break
 
@@ -772,11 +1134,18 @@ class ServingEngine:
         any partial prompt tail free as usual."""
         if self.prefix is not None:
             n_full = len(req.prompt) // self.page_size
+            # a RESUMED request may share pages past its original prompt
+            # (generated tokens its preemption cached): release at least
+            # the shared span — re-inserting it walks existing tree
+            # nodes, so nothing new is cached by it
+            n_full = max(n_full, len(self.pages._shared.get(s, ())))
             if 0 < n_full <= self.pages.covered_cols(s):
                 pages = self.pages.release_to_cache(s, n_full)
-                self.prefix.insert(
-                    req.adapter_id,
-                    np.asarray(req.prompt[:n_full * self.page_size]), pages)
+                toks = np.concatenate(
+                    [np.asarray(req.prompt, np.int32),
+                     np.asarray(req.out or [], np.int32)])
+                self.prefix.insert(req.adapter_id,
+                                   toks[:n_full * self.page_size], pages)
                 return
         self.pages.release(s)
 
@@ -791,7 +1160,8 @@ class ServingEngine:
             if req is None:
                 continue
             written = self._len.get(s, 0)
-            if s in self._cursor and self._cursor[s] < len(req.prompt):
+            eff_len = len(self._eff.get(s, req.prompt))
+            if s in self._cursor and self._cursor[s] < eff_len:
                 written = self._cursor[s]
             # future queries sit at position >= written; kv index i stays
             # visible iff written - i < window, so block-table column j is
@@ -836,9 +1206,10 @@ class ServingEngine:
             if req is None:
                 continue
             rem = req.max_new - len(req.out)
-            cur = self._cursor.get(s, len(req.prompt))
-            if cur < len(req.prompt):
-                chunks = -(-(len(req.prompt) - cur) // self.chunk)
+            eff_len = len(self._eff.get(s, req.prompt))
+            cur = self._cursor.get(s, eff_len)
+            if cur < eff_len:
+                chunks = -(-(eff_len - cur) // self.chunk)
                 rem = min(chunks + rem, self.decode_ticks)
             need = max(need, rem)
         for d in self._tick_ladder:
@@ -868,15 +1239,23 @@ class ServingEngine:
         cap = np.zeros((S,), np.int32)
         plen = np.zeros((S,), np.int32)
         eos = np.full((S,), -1, np.int32)
+        poison = np.zeros((D, S), bool)
+        for s in self._poison_next:          # armed fault injection
+            poison[0, s] = True
+        self._poison_next.clear()
         sp = params_to_arrays([r.sampling if r is not None else None
                                for r in self._active])
         ids = self.adapter_ids.copy()
+        self._stalled_now = set()
 
         # dynamic per-tick chunk-budget split: idle decode lanes donate
-        # their token-budget columns to the earliest admitting request
+        # their token-budget columns to the earliest admitting request.
+        # All prompt streaming below runs over the EFFECTIVE prompt
+        # (original prompt + tokens emitted before a preemption).
         donee = next((s for s, r in enumerate(self._active)
                       if r is not None
-                      and self._cursor.get(s, 0) < len(r.prompt)), None)
+                      and self._cursor.get(s, 0) < len(self._eff[s])),
+                     None)
         donors = ([r for r in range(S) if self._active[r] is None]
                   if donee is not None else [])
         for r in donors:
@@ -885,7 +1264,8 @@ class ServingEngine:
         for s, req in enumerate(self._active):
             if req is None:
                 continue
-            L = len(req.prompt)
+            eff = self._eff[s]
+            L = len(eff)
             plen[s] = L
             if req.eos_id is not None:
                 eos[s] = int(req.eos_id)
@@ -910,7 +1290,7 @@ class ServingEngine:
                         q = min(Q, L - cur, budget - cur)
                         if q <= 0:
                             break
-                        toks[t, r, :q] = req.prompt[cur:cur + q]
+                        toks[t, r, :q] = eff[cur:cur + q]
                         pos[t, r, :q] = np.arange(cur, cur + q)
                         last[t, r] = q - 1
                         row_used = r
@@ -921,10 +1301,12 @@ class ServingEngine:
                         t_done = t
                         break
                     if row_used is None:
+                        self._stalled_now.add(s)
                         break            # stalled on pages this tick
                 if cur > start:
                     self.pages.ensure(s, cur)
                     self._cursor[s] = cur
+                    self._progress = True
                 if t_done is None:
                     continue             # still prefilling next tick
                 # decode tail after mid-tick completion: the first token
@@ -936,9 +1318,10 @@ class ServingEngine:
                 n = self._len[s]
                 avail = self._ensure_growth(s, n, min(D, rem))
                 if avail <= 0:
+                    self._stalled_now.add(s)
                     continue             # oversubscribed decode stall
                 feed0[s] = True
-                tok0[s] = req.out[-1] if req.out else int(req.prompt[-1])
+                tok0[s] = req.out[-1] if req.out else int(eff[-1])
                 len0[s] = n
                 cap[s] = min(rem, avail)
         # snapshot block tables AFTER packing — ensure() backed this tick's
@@ -949,48 +1332,84 @@ class ServingEngine:
         plan = {"tokens": toks, "positions": pos, "last_col": last,
                 "samp_row": srow, "final": final, "adapter_ids": ids,
                 "feed0": feed0, "tok0": tok0, "len0": len0, "cap": cap,
-                "plen": plen, "eos": eos, **sp}
+                "plen": plen, "eos": eos, "poison": poison, **sp}
         return plan, bt
 
     def _unified_tick(self) -> List[Request]:
+        self._progress = False
+        self._tick_failed = []
+        finished: List[Request] = self._lifecycle_sweep()
+        if finished:
+            self._progress = True
+        self._pressure_preempt()
         self._admit_unified()
+        finished += self._tick_failed
         D = self._tick_D()
         self.macro_ticks += 1
         self.tick_width_counts[D] = self.tick_width_counts.get(D, 0) + 1
         plan, bt = self._pack_macro(D)
         self.cache["block_tables"] = jnp.asarray(bt)
-        self.cache, toks_out, valid_out = self.fstep(
+        self.cache, toks_out, valid_out, finite_out = self.fstep(
             self.params, self.ad_stack, plan, self.cache)
         # the macro tick's ONE device→host sync: drain the token buffer
         toks_np = np.asarray(toks_out)
         valid_np = np.asarray(valid_out)
+        finite_np = np.asarray(finite_out)
         self.host_syncs += 1
         self._last_valid = valid_np
-        finished: List[Request] = []
         for s in range(self.slots):
             req = self._active[s]
             if req is None:
                 continue
+            poisoned_at: Optional[int] = None
             for t in range(D):
                 if not valid_np[t, s]:
                     continue
+                if not finite_np[t, s]:
+                    poisoned_at = t      # this and later tokens discarded
+                    break
                 tok = int(toks_np[t, s])
                 req.out.append(tok)
                 self.tokens_out += 1
+                self._progress = True
                 if len(req.out) >= req.max_new or self._hit_eos(req, tok):
                     req.done = True
                     break
+            if poisoned_at is not None:
+                # per-slot quarantine: typed failure, pages freed (NEVER
+                # cached — the KV may be poisoned), co-tenants untouched
+                self.rstats.quarantined_slots += 1
+                finished.append(self._fail_active(
+                    s, SlotQuarantined(
+                        req.rid, self.tick_count,
+                        f"non-finite logits in slot {s} at micro-step "
+                        f"{poisoned_at}"),
+                    cache_prefix=False))
+                continue
             if req.out:
                 self._len[s] = len(req.prompt) + len(req.out) - 1
             if req.done:
                 self._active[s] = None
                 self._retire_pages(s, req)
-                for d in (self._cursor, self._len):
+                self._rids.discard(req.rid)
+                for d in (self._cursor, self._len, self._eff,
+                          self._stall_ticks):
                     d.pop(s, None)
+                self._poison_next.discard(s)
                 if self._oversub_slot == s:
                     self._oversub_slot = None
                 finished.append(req)
+                self._progress = True
         self._free_swa_pages()
+        # pressure/watchdog accounting for the NEXT tick's decisions
+        self._head_wait = self._head_wait + 1 if self._queue else 0
+        for s in list(self._stall_ticks):
+            if s not in self._stalled_now:
+                self._stall_ticks.pop(s)
+        for s in self._stalled_now:
+            if self._active[s] is not None:
+                self._stall_ticks[s] = self._stall_ticks.get(s, 0) + 1
+        self._watchdog()
         return finished
 
     # ------------------------------------------------------------------
@@ -1003,8 +1422,10 @@ class ServingEngine:
         req.done = True
         self._active[i] = None
         self._len.pop(i, None)
+        self._rids.discard(req.rid)
         retired.append(i)
         finished.append(req)
+        self._progress = True
 
     def _legacy_paged_cleanup(self, retired: List[int]):
         if not (self.paged and retired):
@@ -1021,11 +1442,17 @@ class ServingEngine:
         step runs ``decode_ticks`` packed micro-steps (decode tokens +
         prefill chunks) with on-device sampling.  Legacy mode: admit
         (prefill), then decode one token per active slot.  Returns the
-        requests that finished this tick."""
+        requests that finished this tick — completed OR failed (check
+        ``req.error``); raises ``StarvationError`` on tick-level
+        livelock (see ``serving.resilience``)."""
+        self.tick_count += 1
         if self.unified:
             return self._unified_tick()
+        self._progress = False
+        finished: List[Request] = self._lifecycle_sweep()
+        if finished:
+            self._progress = True
         self._admit()
-        finished: List[Request] = []
         retired: List[int] = []
         # flush prefill-produced first tokens; a request whose budget was
         # a single token — or whose first token IS its stop token —
@@ -1036,6 +1463,7 @@ class ServingEngine:
                 continue
             req.out.append(tok)
             self.tokens_out += 1
+            self._progress = True
             del self._pending[i]
             if len(req.out) >= req.max_new or self._hit_eos(req, tok):
                 self._retire_legacy(i, retired, finished)
@@ -1061,11 +1489,13 @@ class ServingEngine:
             tok = int(nxt[i])
             req.out.append(tok)
             self.tokens_out += 1
+            self._progress = True
             self._len[i] = self._len.get(i, len(req.prompt)) + 1
             if len(req.out) >= req.max_new or self._hit_eos(req, tok):
                 self._retire_legacy(i, retired, finished)
         self._legacy_paged_cleanup(retired[pre_retired:])
         self._free_swa_pages()
+        self._watchdog()
         return finished
 
     def run(self, max_ticks: int = 64) -> List[Request]:

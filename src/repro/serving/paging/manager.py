@@ -398,6 +398,53 @@ class PagePool:
         self._push_free(page)
 
     # ------------------------------------------------------------------
+    # snapshot/restore (serving.resilience.snapshot)
+    # ------------------------------------------------------------------
+
+    def state_dict(self) -> Dict[str, object]:
+        """JSON-serializable full allocator state — free list ORDER
+        included (pops are LIFO, so restored allocation traces replay the
+        killed engine's exactly; that's part of snapshot determinism)."""
+        return {
+            "num_pages": self.num_pages, "page_size": self.page_size,
+            "slots": self.slots,
+            "max_pages_per_slot": self.max_pages_per_slot,
+            "free": [int(p) for p in self._free],
+            "owned": {str(s): [int(p) for p in pages]
+                      for s, pages in self._owned.items()},
+            "shared": {str(s): [int(p) for p in pages]
+                       for s, pages in self._shared.items()},
+            "base": {str(s): int(v) for s, v in self._base.items()},
+            "reserved": {str(s): int(v) for s, v in self._reserved.items()},
+            "traj": {str(s): int(v) for s, v in self._traj.items()},
+            "cached": sorted(int(p) for p in self._cached),
+            "ref": {str(p): int(c) for p, c in self._ref.items()},
+            "block_tables": self.block_tables.tolist(),
+        }
+
+    def load_state_dict(self, state: Dict[str, object]):
+        """Restore :meth:`state_dict` output into this (same-shaped) pool.
+        Attached cache hooks are kept — the prefix cache reloads its tree
+        separately and the hooks read live state."""
+        for key in ("num_pages", "page_size", "slots", "max_pages_per_slot"):
+            if int(state[key]) != getattr(self, key):
+                raise ValueError(f"pool geometry mismatch on {key}: "
+                                 f"{getattr(self, key)} != {state[key]}")
+        self._free = [int(p) for p in state["free"]]
+        self._free_set = set(self._free)
+        self._owned = {int(s): [int(p) for p in pages]
+                       for s, pages in state["owned"].items()}
+        self._shared = {int(s): [int(p) for p in pages]
+                        for s, pages in state["shared"].items()}
+        self._base = {int(s): int(v) for s, v in state["base"].items()}
+        self._reserved = {int(s): int(v)
+                          for s, v in state["reserved"].items()}
+        self._traj = {int(s): int(v) for s, v in state["traj"].items()}
+        self._cached = {int(p) for p in state["cached"]}
+        self._ref = {int(p): int(c) for p, c in state["ref"].items()}
+        self.block_tables = np.asarray(state["block_tables"], np.int32)
+
+    # ------------------------------------------------------------------
 
     def check_invariants(self):
         """Every page is free, owned by exactly one slot, or cached —

@@ -193,6 +193,23 @@ class PrefixCache:
         return self.evict(self.tree.size)
 
     # ------------------------------------------------------------------
+    # snapshot/restore (serving.resilience.snapshot)
+    # ------------------------------------------------------------------
+
+    def state_dict(self) -> Dict[str, object]:
+        records, clock = self.tree.to_records()
+        return {"records": records, "clock": clock,
+                "stats": dataclasses.asdict(self.stats)}
+
+    def load_state_dict(self, state: Dict[str, object]):
+        """Rebuild the tree (the pool's ``_cached``/``_ref`` state is
+        restored separately by ``PagePool.load_state_dict`` — ``check()``
+        asserts the two agree afterwards) and the cumulative counters."""
+        assert self.tree.size == 0, "load into a used cache"
+        self.tree.load_records(state["records"], state["clock"])
+        self.stats = PrefixStats(**state["stats"])
+
+    # ------------------------------------------------------------------
 
     @property
     def cached_pages(self) -> int:

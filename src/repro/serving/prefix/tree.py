@@ -156,3 +156,48 @@ class PrefixTree:
                 out.append(n)
             stack.extend(n.children.values())
         return out
+
+    # ------------------------------------------------------------------
+    # snapshot/restore (serving.resilience.snapshot)
+    # ------------------------------------------------------------------
+
+    def to_records(self) -> Tuple[List[dict], int]:
+        """Flatten to JSON-serializable ``(records, clock)``: one record
+        per page-holding node carrying its full root path in tokens plus
+        ``last_used`` — the LRU stamps round-trip so post-restore eviction
+        order matches the killed engine's exactly."""
+        records: List[dict] = []
+        for aid, root in self._roots.items():
+            stack: List[Tuple[Node, List[int]]] = [(root, [])]
+            while stack:
+                node, path = stack.pop()
+                for child in node.children.values():
+                    cpath = path + [int(t) for t in child.key]
+                    records.append({"adapter": int(aid), "tokens": cpath,
+                                    "page": int(child.page),
+                                    "last_used": int(child.last_used)})
+                    stack.append((child, cpath))
+        return records, self._clock
+
+    def load_records(self, records: List[dict], clock: int):
+        """Rebuild from :meth:`to_records` output into an EMPTY tree,
+        without touching the LRU clock (stamps come from the records)."""
+        assert not self._roots and self.size == 0, "load into a used tree"
+        ps = self.page_size
+        for rec in sorted(records, key=lambda r: len(r["tokens"])):
+            aid = int(rec["adapter"])
+            root = self._roots.get(aid)
+            if root is None:
+                root = self._roots[aid] = Node(None, None, None)
+            tokens = rec["tokens"]
+            node = root
+            for i in range(0, len(tokens) - ps, ps):
+                node = node.children[tuple(int(t)
+                                           for t in tokens[i:i + ps])]
+            key = tuple(int(t) for t in tokens[-ps:])
+            assert key not in node.children, "duplicate record"
+            child = Node(key, int(rec["page"]), node)
+            child.last_used = int(rec["last_used"])
+            node.children[key] = child
+            self.size += 1
+        self._clock = int(clock)

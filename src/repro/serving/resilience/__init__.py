@@ -1,0 +1,25 @@
+"""Request-lifecycle robustness layer for the serving engine.
+
+Four pieces (docs/serving.md §Failure semantics):
+
+  * ``errors``   — typed per-request failures + engine ``StarvationError``
+  * ``policy``   — ``ResilienceConfig``, deterministic preemption victim
+                   selection, ``ResilienceStats`` telemetry
+  * ``snapshot`` — engine kill/restore through ``checkpoint.io``
+  * ``faults``   — seedable deterministic ``FaultPlan`` injection harness
+"""
+from .errors import (DeadlineExceeded, NeverFitsError, RequestCancelled,
+                     RequestError, SlotQuarantined, StarvationError,
+                     TTLExpired)
+from .faults import FAULT_KINDS, Fault, FaultHarness, FaultPlan
+from .policy import (ResilienceConfig, ResilienceStats, VictimCandidate,
+                     select_victim)
+from .snapshot import restore_engine, snapshot_engine
+
+__all__ = [
+    "RequestError", "RequestCancelled", "DeadlineExceeded", "TTLExpired",
+    "SlotQuarantined", "NeverFitsError", "StarvationError",
+    "ResilienceConfig", "ResilienceStats", "VictimCandidate",
+    "select_victim", "Fault", "FaultPlan", "FaultHarness", "FAULT_KINDS",
+    "snapshot_engine", "restore_engine",
+]

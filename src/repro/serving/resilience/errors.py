@@ -1,0 +1,101 @@
+"""Typed request-lifecycle and engine-level failures.
+
+Per-request failures subclass :class:`RequestError` and are *attached* to
+the failed :class:`~..engine.Request` (``req.error``) rather than raised —
+the engine keeps serving co-tenants; the caller inspects the finished
+request.  Engine-level livelock raises :class:`StarvationError` out of
+``step()``/``run()`` so a driver can cancel the stuck head and continue
+(the engine's state stays consistent — the tick that detected starvation
+completed normally).
+
+:class:`NeverFitsError` subclasses ``ValueError`` on purpose: the
+pre-existing ``submit()`` rejection contract (and its tests) pinned
+``ValueError``; the typed subclass refines it without breaking callers.
+"""
+from __future__ import annotations
+
+
+class RequestError(Exception):
+    """Base of per-request failures. ``rid``/``tick`` say who and when;
+    subclass ``kind`` is the telemetry label."""
+
+    kind = "error"
+
+    def __init__(self, rid: int, tick: int, detail: str = ""):
+        self.rid = rid
+        self.tick = tick
+        self.detail = detail
+        msg = f"request {rid} {self.kind} at tick {tick}"
+        if detail:
+            msg += f": {detail}"
+        super().__init__(msg)
+
+
+class RequestCancelled(RequestError):
+    """``cancel(rid)`` took effect at a tick boundary."""
+
+    kind = "cancelled"
+
+
+class DeadlineExceeded(RequestError):
+    """``deadline_ticks`` elapsed since submit (queued or active)."""
+
+    kind = "deadline_expired"
+
+
+class TTLExpired(RequestError):
+    """``ttl`` ticks elapsed waiting in the queue without admission."""
+
+    kind = "ttl_expired"
+
+
+class SlotQuarantined(RequestError):
+    """Non-finite logits detected in this request's sampling row: the
+    slot's tokens from the poisoned micro-step on are discarded, its
+    pages freed (never cached — the KV may be poisoned), and co-tenant
+    streams are bitwise unaffected (row-independent kernels)."""
+
+    kind = "quarantined"
+
+
+class NeverFitsError(ValueError):
+    """The request's trajectory can never be resident — no amount of
+    waiting frees enough pages — so admitting it would hold the FIFO
+    head forever.  Raised at ``submit()`` (or first-hold time for
+    requests that bypassed it, e.g. restored from a snapshot of an
+    older engine config)."""
+
+    kind = "never_fits"
+
+    def __init__(self, rid: int, need_pages: int, cap_pages: int):
+        self.rid = rid
+        self.need_pages = need_pages
+        self.cap_pages = cap_pages
+        super().__init__(
+            f"request {rid}: needs {need_pages} resident pages but the "
+            f"pool can ever free at most {cap_pages}")
+
+
+class StarvationError(RuntimeError):
+    """The engine made no progress for ``waited`` consecutive ticks with
+    work pending — a tick-level livelock the admission gating could not
+    foresee (e.g. pages leaked outside the ledger).  The engine state is
+    consistent; cancel ``head_rid`` (or fix the pool) and keep stepping."""
+
+    def __init__(self, waited: int, head_rid: int, tick: int,
+                 free_pages: int, detail: str = ""):
+        self.waited = waited
+        self.head_rid = head_rid
+        self.tick = tick
+        self.free_pages = free_pages
+        msg = (f"no scheduler progress for {waited} ticks at tick {tick} "
+               f"(queue head rid={head_rid}, free_pages={free_pages})")
+        if detail:
+            msg += f": {detail}"
+        super().__init__(msg)
+
+
+__all__ = [
+    "RequestError", "RequestCancelled", "DeadlineExceeded", "TTLExpired",
+    "SlotQuarantined", "NeverFitsError", "StarvationError",
+]

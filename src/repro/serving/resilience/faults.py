@@ -1,0 +1,208 @@
+"""Deterministic, seedable fault injection for the serving engine.
+
+A :class:`FaultPlan` is a fixed schedule of fault events keyed by engine
+tick; :class:`FaultHarness` drives an engine through its workload while
+applying due events at each tick boundary and recording a structured
+textual **trace**.  Everything is a pure function of (plan seed, workload,
+engine config): running the same plan twice produces the identical trace
+and identical token streams — the chaos property test asserts exactly
+that, so any nondeterminism smuggled into the scheduler or the resilience
+layer shows up as a trace diff.
+
+Fault kinds:
+
+  * ``poison``       — arm a NaN injection in slot ``s``'s sampling row
+                       for the next macro tick (engine test hook
+                       ``inject_nan``): exercises per-slot quarantine.
+  * ``cancel``       — ``engine.cancel(rid)``: a no-op (logged) when the
+                       request already finished, so random cancel storms
+                       stay schedule-safe.
+  * ``pressure``     — submit a short high-priority ballast request sized
+                       in pages: forces pool pressure through the REAL
+                       admission path, triggering preempt-and-recompute
+                       against lower-priority tenants.
+  * ``kill_restore`` — snapshot the engine, construct a fresh one via the
+                       harness's ``engine_factory``, restore, and swap it
+                       in: the kill/restore roundtrip mid-flight.
+"""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .errors import StarvationError
+
+FAULT_KINDS = ("poison", "cancel", "pressure", "kill_restore")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scheduled event: ``kind`` at tick ``tick`` (see module doc).
+    ``slot`` targets poison, ``rid`` targets cancel, ``pages`` sizes the
+    pressure ballast's prompt."""
+
+    tick: int
+    kind: str
+    slot: int = -1
+    rid: int = -1
+    pages: int = 1
+
+    def __post_init__(self):
+        assert self.kind in FAULT_KINDS, self.kind
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An immutable, seed-stamped schedule of faults (sorted by tick)."""
+
+    seed: int
+    faults: Tuple[Fault, ...]
+
+    @classmethod
+    def random(cls, seed: int, *, ticks: int, slots: int,
+               rids: Sequence[int], kinds: Sequence[str] = FAULT_KINDS,
+               events: int = 8, ballast_pages: int = 1) -> "FaultPlan":
+        """Seeded random schedule guaranteed to contain >= 1 event of
+        every requested kind (``kill_restore`` appears exactly once —
+        restoring is heavyweight and one roundtrip proves the cut)."""
+        rng = np.random.default_rng(seed)
+        kinds = tuple(kinds)
+        picks: List[str] = [k for k in kinds]          # coverage floor
+        extra = [k for k in kinds if k != "kill_restore"]
+        while len(picks) < events and extra:
+            picks.append(extra[int(rng.integers(len(extra)))])
+        faults = []
+        for kind in picks:
+            f = Fault(
+                tick=int(rng.integers(1, max(2, ticks))),
+                kind=kind,
+                slot=int(rng.integers(slots)) if kind == "poison" else -1,
+                rid=(int(rids[int(rng.integers(len(rids)))])
+                     if kind == "cancel" and len(rids) else -1),
+                pages=ballast_pages if kind == "pressure" else 1)
+            faults.append(f)
+        faults.sort(key=lambda f: (f.tick, FAULT_KINDS.index(f.kind),
+                                   f.slot, f.rid))
+        return cls(seed=seed, faults=tuple(faults))
+
+    def due(self, tick: int) -> List[Fault]:
+        return [f for f in self.faults if f.tick == tick]
+
+
+class FaultHarness:
+    """Drive an engine through a workload under a :class:`FaultPlan`.
+
+    ``engine_factory`` builds a fresh, idle engine of the fixed
+    configuration — called once up front and once per ``kill_restore``.
+    ``workload`` maps submit-tick → requests; the harness submits a
+    *pristine clone* of each (the engine mutates requests in place, so
+    cloning lets the same workload dict drive many runs — the
+    determinism property is run-the-plan-twice, diff the traces).  The
+    harness owns submission so requests due after a kill land in the
+    restored engine.  ``harness.finished``
+    accumulates completed/failed requests by rid across restores (after a
+    kill, in-flight requests continue as restored clones — the harness's
+    view is the authoritative one).
+    """
+
+    def __init__(self, engine_factory: Callable[[], Any], plan: FaultPlan,
+                 workload: Dict[int, List[Any]],
+                 snapshot_dir: Optional[str] = None):
+        self.factory = engine_factory
+        self.plan = plan
+        self.workload = workload
+        self.engine = engine_factory()
+        self._tmp = None
+        if snapshot_dir is None:
+            self._tmp = tempfile.TemporaryDirectory(prefix="faultsnap_")
+            snapshot_dir = self._tmp.name
+        self.snapshot_path = Path(snapshot_dir) / "engine_snapshot"
+        self.trace: List[str] = []
+        self.finished: Dict[int, Any] = {}
+        self._ballast_n = 0
+
+    # ------------------------------------------------------------------
+
+    def _log(self, msg: str):
+        self.trace.append(f"t{self.engine.tick_count} {msg}")
+
+    def _apply(self, fault: Fault):
+        eng = self.engine
+        if fault.kind == "poison":
+            armed = eng.inject_nan(fault.slot)
+            self._log(f"poison slot={fault.slot} armed={armed}")
+        elif fault.kind == "cancel":
+            hit = eng.cancel(fault.rid)
+            self._log(f"cancel rid={fault.rid} live={hit}")
+        elif fault.kind == "pressure":
+            self._ballast_n += 1
+            rid = -1000 - self._ballast_n
+            ps = eng.page_size
+            n_tok = min(fault.pages * ps, eng.max_len - 2)
+            from ..engine import Request
+            ballast = Request(rid=rid, prompt=np.ones((n_tok,), np.int32),
+                              adapter_id=0, max_new=1, priority=1_000_000)
+            try:
+                eng.submit(ballast)
+                self._log(f"pressure rid={rid} pages={fault.pages}")
+            except ValueError as e:
+                self._log(f"pressure rid={rid} rejected: {e}")
+        elif fault.kind == "kill_restore":
+            eng.snapshot(self.snapshot_path)
+            fresh = self.factory()
+            fresh.restore(self.snapshot_path)
+            self.engine = fresh
+            self._log(f"kill_restore queue={len(fresh._queue)} "
+                      f"active={sum(r is not None for r in fresh._active)}")
+
+    # ------------------------------------------------------------------
+
+    def tick(self) -> List[Any]:
+        """Submit due workload, apply due faults, advance one engine tick.
+        ``StarvationError`` is recovery-handled: the starved queue head is
+        cancelled (logged) and the schedule continues — the degradation
+        ladder's last rung."""
+        now = self.engine.tick_count
+        for req in self.workload.get(now, ()):
+            clone = dataclasses.replace(
+                req, out=None, done=False, error=None,
+                submit_tick=-1, admit_tick=-1, enq_tick=-1, preemptions=0)
+            self.engine.submit(clone)
+            self._log(f"submit rid={req.rid}")
+        for fault in self.plan.due(now):
+            self._apply(fault)
+        try:
+            done = self.engine.step()
+        except StarvationError as e:
+            self._log(f"starvation head_rid={e.head_rid} waited={e.waited}")
+            if e.head_rid >= 0:
+                self.engine.cancel(e.head_rid)
+            done = []
+        for req in done:
+            kind = (req.error.kind if req.error is not None else "done")
+            self._log(f"finish rid={req.rid} {kind} n={len(req.out)}")
+            self.finished[req.rid] = req
+        return done
+
+    def run(self, max_ticks: int = 256) -> Dict[int, Any]:
+        """Tick until the workload is fully submitted and drained (or
+        ``max_ticks``).  Returns ``finished`` (rid → request)."""
+        last_submit = max(self.workload, default=0)
+        for _ in range(max_ticks):
+            eng = self.engine
+            pending = (eng.tick_count <= last_submit or eng._queue
+                       or any(r is not None for r in eng._active))
+            if not pending:
+                break
+            self.tick()
+        if self._tmp is not None:
+            self._tmp.cleanup()
+            self._tmp = None
+        return self.finished
+
+
+__all__ = ["Fault", "FaultPlan", "FaultHarness", "FAULT_KINDS"]

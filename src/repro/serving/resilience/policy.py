@@ -1,0 +1,133 @@
+"""Preemption policy + resilience configuration and telemetry.
+
+The engine consults :func:`select_victim` when page pressure has stalled
+the schedule past ``ResilienceConfig.pressure_ticks`` (FIFO head blocked,
+or an admitted oversubscribed decode starving at allowance 0).  Victim
+order is fully deterministic:
+
+  1. lowest ``Request.priority`` first — and only **strictly below** the
+     starver's priority, so equal-priority workloads (every pre-existing
+     test and benchmark: default priority 0) never preempt each other and
+     the ladder degrades to plain backpressure;
+  2. most reclaimable-via-prefix-cache: the victim whose written tokens
+     cover the most full pages loses the least — `release_to_cache`
+     parks those pages in the radix tree and re-admission's prefix hit
+     maps them back without recompute (with the cache off this tie-breaks
+     to 0 for everyone);
+  3. youngest admission (latest ``admit_tick``) — oldest work is closest
+     to finishing;
+  4. lowest slot index.
+
+Preempt-and-recompute is bitwise-safe by the PRNG position-keyed sampling
+contract: a resumed request re-enters the queue with its emitted tokens as
+part of its *effective prompt*, and every token at context position ``c``
+samples with counter ``c`` regardless of slot, tick width, or chunk
+boundaries — so the resumed stream replays the exact keys of the
+uninterrupted run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Knobs of the robustness layer (engine kwarg ``resilience=``).
+
+    ``preempt``        — enable pressure-triggered preempt-and-recompute.
+    ``pressure_ticks`` — consecutive stalled ticks (head blocked /
+                         oversubscribed decode at allowance 0) before a
+                         victim is sought.
+    ``watchdog_ticks`` — consecutive no-progress ticks with work pending
+                         before ``step()`` raises ``StarvationError``
+                         (strictly greater than ``pressure_ticks`` so
+                         preemption gets its chance first).
+    """
+
+    preempt: bool = True
+    pressure_ticks: int = 4
+    watchdog_ticks: int = 24
+
+    def __post_init__(self):
+        if self.pressure_ticks < 1:
+            raise ValueError(f"pressure_ticks {self.pressure_ticks} < 1")
+        if self.watchdog_ticks <= self.pressure_ticks:
+            raise ValueError(
+                f"watchdog_ticks {self.watchdog_ticks} must exceed "
+                f"pressure_ticks {self.pressure_ticks}")
+
+
+@dataclasses.dataclass
+class VictimCandidate:
+    """One active slot the engine offers to the victim policy."""
+
+    slot: int
+    priority: int
+    reclaimable_pages: int   # full written pages a preemption would cache
+    admit_tick: int
+
+
+def select_victim(candidates: Sequence[VictimCandidate],
+                  starver_priority: int) -> Optional[int]:
+    """Deterministic victim slot (see module docstring), or ``None`` when
+    no candidate sits strictly below the starver's priority."""
+    eligible = [c for c in candidates if c.priority < starver_priority]
+    if not eligible:
+        return None
+    best = min(eligible, key=lambda c: (c.priority, -c.reclaimable_pages,
+                                        -c.admit_tick, c.slot))
+    return best.slot
+
+
+def _histogram(values: Sequence[int]) -> Dict[str, int]:
+    """Power-of-two tick buckets: ``{"0": n, "1": n, "2-3": n, ...}``."""
+    out: Dict[str, int] = {}
+    for v in values:
+        v = max(0, int(v))
+        if v <= 1:
+            key = str(v)
+        else:
+            lo = 1 << (v.bit_length() - 1)
+            key = f"{lo}-{2 * lo - 1}"
+        out[key] = out.get(key, 0) + 1
+    return out
+
+
+@dataclasses.dataclass
+class ResilienceStats:
+    """Cumulative resilience counters (``ServingEngine.
+    resilience_metrics()`` renders them plus the histograms)."""
+
+    preemptions: int = 0
+    cancellations: int = 0
+    deadline_expirations: int = 0
+    ttl_expirations: int = 0
+    quarantined_slots: int = 0
+    restore_count: int = 0
+    starvation_aborts: int = 0
+    never_fit_rejections: int = 0
+    time_in_queue: List[int] = dataclasses.field(default_factory=list)
+    time_to_first_preemption: List[int] = dataclasses.field(
+        default_factory=list)
+
+    def as_dict(self) -> Dict[str, object]:
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self)
+             if f.name not in ("time_in_queue", "time_to_first_preemption")}
+        d["time_in_queue_hist"] = _histogram(self.time_in_queue)
+        d["time_to_first_preemption_hist"] = _histogram(
+            self.time_to_first_preemption)
+        return d
+
+    def state_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    def load_state_dict(self, state: Dict[str, object]):
+        for f in dataclasses.fields(self):
+            if f.name in state:
+                setattr(self, f.name, state[f.name])
+
+
+__all__ = ["ResilienceConfig", "ResilienceStats", "VictimCandidate",
+           "select_victim"]

@@ -1,0 +1,197 @@
+"""Engine snapshot/restore: resume a killed engine mid-flight.
+
+Between macro ticks ALL mutable serving state is (a) the device KV cache
+pages and (b) plain host-side python — queues, block tables, reservation
+ledger, prefix radix tree (including its LRU clock, so post-restore
+eviction order is deterministic), chunk cursors, and per-request progress.
+The decode carry is host-seeded every tick (``feed0/tok0/len0``), so a
+tick boundary is a complete cut: :func:`snapshot_engine` serializes (a)
+through the existing ``checkpoint.io`` atomic-directory format and (b)
+into its JSON metadata, and :func:`restore_engine` rebuilds both inside a
+freshly constructed engine of the same configuration.
+
+Restored continuations are **bitwise identical** to the uninterrupted
+run: the PRNG position-keyed sampling contract keys every token by its
+context position only, and the packed-buffer contract makes streams
+independent of slot/tick-width/chunk boundaries — so replaying from the
+cut replays the exact tokens.  The restored engine traces its own single
+fused executable on its first tick (one-executable-per-lifetime is per
+process; restore re-traces at most once).
+
+Unified mode only: the legacy two-phase path keeps per-slot state inside
+opaque model caches mid-prefill and is not snapshot-cut at tick
+boundaries the same way.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from ...checkpoint import io as ckpt_io
+
+SNAPSHOT_FORMAT = 1
+
+_CONFIG_KEYS = ("slots", "max_len", "page_size", "num_pages", "chunk",
+                "decode_ticks", "auto_ticks", "tenants", "window",
+                "unified", "has_prefix")
+
+
+def _engine_config(eng) -> Dict[str, Any]:
+    return {
+        "slots": eng.slots, "max_len": eng.max_len,
+        "page_size": eng.page_size, "num_pages": eng.num_pages,
+        "chunk": eng.chunk, "decode_ticks": eng.decode_ticks,
+        "auto_ticks": bool(eng.auto_ticks), "tenants": eng.tenants,
+        "window": int(eng.window), "unified": bool(eng.unified),
+        "has_prefix": eng.prefix is not None,
+    }
+
+
+def _req_state(req) -> Dict[str, Any]:
+    sp = req.sampling
+    return {
+        "rid": int(req.rid),
+        "prompt": [int(t) for t in req.prompt],
+        "adapter_id": int(req.adapter_id),
+        "max_new": int(req.max_new),
+        "sampling": (None if sp is None else {
+            "temperature": float(sp.temperature), "top_k": int(sp.top_k),
+            "top_p": float(sp.top_p), "seed": int(sp.seed)}),
+        "eos_id": None if req.eos_id is None else int(req.eos_id),
+        "out": [int(t) for t in (req.out or [])],
+        "priority": int(req.priority),
+        "deadline_ticks": req.deadline_ticks,
+        "ttl": req.ttl,
+        "submit_tick": int(req.submit_tick),
+        "admit_tick": int(req.admit_tick),
+        "enq_tick": int(req.enq_tick),
+        "preemptions": int(req.preemptions),
+    }
+
+
+def _req_restore(state: Dict[str, Any]):
+    from ..engine import Request
+    from ..sampling import SamplingParams
+    sp = state["sampling"]
+    req = Request(
+        rid=int(state["rid"]),
+        prompt=np.asarray(state["prompt"], np.int32),
+        adapter_id=int(state["adapter_id"]),
+        max_new=int(state["max_new"]),
+        sampling=None if sp is None else SamplingParams(**sp),
+        eos_id=state["eos_id"],
+        priority=int(state["priority"]),
+        deadline_ticks=state["deadline_ticks"],
+        ttl=state["ttl"])
+    req.out = [int(t) for t in state["out"]]
+    req.submit_tick = int(state["submit_tick"])
+    req.admit_tick = int(state["admit_tick"])
+    req.enq_tick = int(state["enq_tick"])
+    req.preemptions = int(state["preemptions"])
+    return req
+
+
+def snapshot_engine(eng, path) -> Dict[str, Any]:
+    """Serialize ``eng`` (at a tick boundary) to ``path``; returns the
+    metadata dict written alongside the device arrays."""
+    if not eng.unified:
+        raise ValueError("snapshot/restore requires the unified scheduler")
+    meta: Dict[str, Any] = {
+        "snapshot_format": SNAPSHOT_FORMAT,
+        "config": _engine_config(eng),
+        "tick": int(eng.tick_count),
+        "pool": eng.pages.state_dict(),
+        "prefix": None if eng.prefix is None else eng.prefix.state_dict(),
+        "queue": [_req_state(r) for r in eng._queue],
+        "active": {str(s): _req_state(r)
+                   for s, r in enumerate(eng._active) if r is not None},
+        "eff": {str(s): [int(t) for t in eff]
+                for s, eff in eng._eff.items()},
+        "cursor": {str(k): int(v) for k, v in eng._cursor.items()},
+        "len": {str(k): int(v) for k, v in eng._len.items()},
+        "oversub_slot": eng._oversub_slot,
+        "adapter_ids": [int(a) for a in eng.adapter_ids],
+        "cancel_req": sorted(int(r) for r in eng._cancel_req),
+        "head_wait": int(eng._head_wait),
+        "stall_ticks": {str(k): int(v)
+                        for k, v in eng._stall_ticks.items()},
+        "counters": {
+            "host_syncs": int(eng.host_syncs),
+            "tokens_out": int(eng.tokens_out),
+            "macro_ticks": int(eng.macro_ticks),
+            "tick_width_counts": {str(k): int(v)
+                                  for k, v in eng.tick_width_counts.items()},
+        },
+        "rstats": eng.rstats.state_dict(),
+    }
+    ckpt_io.save(Path(path), {"cache": eng.cache}, metadata=meta)
+    return meta
+
+
+def restore_engine(eng, path) -> Dict[str, Any]:
+    """Load a snapshot written by :func:`snapshot_engine` into ``eng`` —
+    a freshly constructed engine of the SAME configuration (model/params/
+    tenants are the caller's responsibility; everything checkable is
+    checked).  Returns the snapshot metadata."""
+    if not eng.unified:
+        raise ValueError("snapshot/restore requires the unified scheduler")
+    if eng._queue or any(r is not None for r in eng._active):
+        raise ValueError("restore target engine must be idle")
+    tree, meta = ckpt_io.load(Path(path), like={"cache": eng.cache})
+    if meta.get("snapshot_format") != SNAPSHOT_FORMAT:
+        raise ValueError(f"unknown snapshot format "
+                         f"{meta.get('snapshot_format')!r}")
+    cfg = meta["config"]
+    mine = _engine_config(eng)
+    bad = [k for k in _CONFIG_KEYS if cfg.get(k) != mine[k]]
+    if bad:
+        raise ValueError(
+            "engine/snapshot config mismatch on "
+            + ", ".join(f"{k}: {mine[k]} != {cfg.get(k)}" for k in bad))
+
+    eng.cache = tree["cache"]
+    eng.pages.load_state_dict(meta["pool"])
+    if eng.prefix is not None:
+        eng.prefix.load_state_dict(meta["prefix"])
+    eng.cache["block_tables"] = _as_jnp_block_tables(eng)
+
+    eng._queue = [_req_restore(r) for r in meta["queue"]]
+    eng._active = [None] * eng.slots
+    for s, state in meta["active"].items():
+        eng._active[int(s)] = _req_restore(state)
+    eng._rids = {r.rid for r in eng._queue} | {
+        r.rid for r in eng._active if r is not None}
+    eng._eff = {int(s): np.asarray(toks, np.int32)
+                for s, toks in meta["eff"].items()}
+    eng._cursor = {int(k): int(v) for k, v in meta["cursor"].items()}
+    eng._len = {int(k): int(v) for k, v in meta["len"].items()}
+    eng._oversub_slot = meta["oversub_slot"]
+    eng.adapter_ids = np.asarray(meta["adapter_ids"], np.int32)
+    eng._cancel_req = set(meta["cancel_req"])
+    eng._head_wait = int(meta["head_wait"])
+    eng._stall_ticks = {int(k): int(v)
+                        for k, v in meta["stall_ticks"].items()}
+    ctr = meta["counters"]
+    eng.host_syncs = int(ctr["host_syncs"])
+    eng.tokens_out = int(ctr["tokens_out"])
+    eng.macro_ticks = int(ctr["macro_ticks"])
+    eng.tick_width_counts = {int(k): int(v)
+                             for k, v in ctr["tick_width_counts"].items()}
+    eng.tick_count = int(meta["tick"])
+    eng.rstats.load_state_dict(meta["rstats"])
+    eng.rstats.restore_count += 1
+    eng._no_progress = 0
+    eng.pages.check_invariants()
+    if eng.prefix is not None:
+        eng.prefix.check()
+    return meta
+
+
+def _as_jnp_block_tables(eng):
+    import jax.numpy as jnp
+    return jnp.asarray(eng.pages.block_tables)
+
+
+__all__ = ["snapshot_engine", "restore_engine", "SNAPSHOT_FORMAT"]

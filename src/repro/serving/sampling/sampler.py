@@ -56,8 +56,20 @@ class SamplingParams:
     seed: int = 0
 
     def __post_init__(self):
-        assert self.temperature >= 0.0, self.temperature
-        assert 0.0 < self.top_p <= 1.0, self.top_p
+        # real ValueErrors, not asserts: out-of-range params would not
+        # crash the kernels, they would silently misbehave (negative
+        # temperature flips the distribution, top_p=0 masks every token)
+        # — ``ServingEngine.submit`` relies on construction-time
+        # validation to reject bad requests before admission
+        if not (np.isfinite(self.temperature) and self.temperature >= 0.0):
+            raise ValueError(
+                f"temperature must be finite and >= 0 (0 = greedy), got "
+                f"{self.temperature}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.top_k < 0:
+            raise ValueError(
+                f"top_k must be >= 0 (0 disables the cut), got {self.top_k}")
 
 
 GREEDY = SamplingParams()

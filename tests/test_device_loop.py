@@ -123,10 +123,12 @@ def test_unified_step_is_the_fused_micro_step():
             "len0": np.zeros((S,), np.int32), "cap": np.ones((S,), np.int32),
             "plen": np.array([3], np.int32), "eos": np.full((S,), -1,
                                                             np.int32),
+            "poison": np.zeros((1, S), bool),
             **params_to_arrays([None])}
     ffn = make_fused_step(m, decode_ticks=1, tenants=0, attn_backend="ref")
-    fcache, ftoks, fvalid = ffn(params, st, plan, fresh_cache())
+    fcache, ftoks, fvalid, ffin = ffn(params, st, plan, fresh_cache())
     assert bool(np.asarray(fvalid)[0, 0])
+    assert bool(np.asarray(ffin)[0, 0])
     assert int(np.asarray(ftoks)[0, 0]) == utok
     for (pu, lu), (pf, lf) in zip(
             jax.tree_util.tree_leaves_with_path(ucache),

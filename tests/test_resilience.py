@@ -1,0 +1,589 @@
+"""Request-lifecycle robustness: submit() hardening, cancel/deadline/TTL,
+preempt-and-recompute bitwise parity at EVERY preemption point, NaN
+quarantine isolating only the poisoned slot, engine snapshot/restore with
+identical continuations, the never-fits/watchdog livelock ladder, and a
+deterministic seeded chaos schedule driving all fault kinds through the
+FaultHarness — run twice, traces and streams must match exactly."""
+import dataclasses
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke
+from repro.core.types import AdapterConfig
+from repro.models import Model
+from repro.serving import (Request, SamplingParams, ServingEngine,
+                           DeadlineExceeded, Fault, FaultHarness, FaultPlan,
+                           NeverFitsError, RequestCancelled, RequestError,
+                           ResilienceConfig, ResilienceStats, SlotQuarantined,
+                           StarvationError, TTLExpired)
+from repro.serving.resilience.policy import (VictimCandidate, _histogram,
+                                             select_victim)
+
+ACFG = AdapterConfig(method="mos", equiv_rank=2, rank=4, shards_per_vector=2,
+                     private_rank=1, dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke(get_config("granite-3-2b"))
+    m = Model(cfg, ACFG)
+    params, _ = m.init_params(jax.random.key(0))
+    states = []
+    for t in range(2):
+        st = m.init_adapter(jax.random.key(100))
+        st["trainable"] = jax.tree.map(
+            lambda v, tt=t: v + 0.02 * (tt + 1) * jax.random.normal(
+                jax.random.key(7 + tt), v.shape, v.dtype), st["trainable"])
+        states.append(st)
+    return m, params, states
+
+
+def _mk(model, **kw):
+    m, params, states = model
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("page_size", 8)
+    return ServingEngine(m, params, states, **kw)
+
+
+def _drain(eng, max_ticks=100):
+    """step() until idle, returning every finished request (run() helper
+    that tolerates failures mid-stream)."""
+    fin = []
+    for _ in range(max_ticks):
+        fin += eng.step()
+        if not eng._queue and all(r is None for r in eng._active):
+            return fin
+    raise AssertionError("engine did not drain")
+
+
+def _req(rid, L=10, max_new=5, adapter_id=0, seed=None, **kw):
+    sp = (SamplingParams(temperature=0.8, top_k=20, seed=seed)
+          if seed is not None else None)
+    return Request(rid=rid, adapter_id=adapter_id, max_new=max_new,
+                   prompt=(np.arange(L, dtype=np.int32) * (rid % 7 + 2))
+                   % 90 + 4, sampling=sp, **kw)
+
+
+# ---------------------------------------------------------------------------
+# pure units: errors, policy, plan (no engine)
+# ---------------------------------------------------------------------------
+
+def test_error_types_and_kinds():
+    e = RequestCancelled(3, 7, "op")
+    assert e.kind == "cancelled" and e.rid == 3 and e.tick == 7
+    assert "request 3 cancelled at tick 7" in str(e)
+    assert isinstance(e, RequestError)
+    for cls, kind in [(DeadlineExceeded, "deadline_expired"),
+                      (TTLExpired, "ttl_expired"),
+                      (SlotQuarantined, "quarantined")]:
+        assert cls(0, 0).kind == kind
+    nf = NeverFitsError(9, need_pages=7, cap_pages=4)
+    assert isinstance(nf, ValueError) and nf.kind == "never_fits"
+    assert nf.need_pages == 7 and nf.cap_pages == 4
+    sv = StarvationError(24, head_rid=5, tick=99, free_pages=0)
+    assert sv.waited == 24 and sv.head_rid == 5 and "no scheduler" in str(sv)
+
+
+def test_resilience_config_validation():
+    ResilienceConfig(pressure_ticks=1, watchdog_ticks=2)
+    with pytest.raises(ValueError):
+        ResilienceConfig(pressure_ticks=0)
+    with pytest.raises(ValueError):
+        ResilienceConfig(pressure_ticks=4, watchdog_ticks=4)
+
+
+def test_select_victim_ordering():
+    C = VictimCandidate
+    cands = [C(slot=0, priority=0, reclaimable_pages=1, admit_tick=5),
+             C(slot=1, priority=0, reclaimable_pages=3, admit_tick=2),
+             C(slot=2, priority=1, reclaimable_pages=9, admit_tick=9)]
+    # only strictly-lower priority is eligible; equal priorities never
+    # preempt each other (the pre-existing-workload safety property)
+    assert select_victim(cands, starver_priority=0) is None
+    # lowest priority wins, then most reclaimable
+    assert select_victim(cands, starver_priority=1) == 1
+    assert select_victim(cands, starver_priority=2) == 1
+    # reclaimable tie → youngest admission
+    tie = [C(0, 0, 2, admit_tick=1), C(1, 0, 2, admit_tick=6)]
+    assert select_victim(tie, 5) == 1
+    # full tie → lowest slot
+    flat = [C(3, 0, 0, 0), C(1, 0, 0, 0)]
+    assert select_victim(flat, 5) == 1
+
+
+def test_histogram_buckets():
+    h = _histogram([0, 1, 1, 2, 3, 4, 7, 8, 100])
+    assert h == {"0": 1, "1": 2, "2-3": 2, "4-7": 2, "8-15": 1, "64-127": 1}
+
+
+def test_fault_plan_coverage_and_determinism():
+    p1 = FaultPlan.random(11, ticks=10, slots=2, rids=[1, 2, 3])
+    p2 = FaultPlan.random(11, ticks=10, slots=2, rids=[1, 2, 3])
+    assert p1 == p2                                   # pure fn of the seed
+    kinds = [f.kind for f in p1.faults]
+    for k in ("poison", "cancel", "pressure", "kill_restore"):
+        assert k in kinds                             # coverage floor
+    assert kinds.count("kill_restore") == 1           # exactly one roundtrip
+    assert all(f.tick <= e.tick for f, e in zip(p1.faults, p1.faults[1:]))
+    assert FaultPlan.random(12, ticks=10, slots=2, rids=[1]) != p1
+    due = p1.due(p1.faults[0].tick)
+    assert due and all(f.tick == p1.faults[0].tick for f in due)
+
+
+def test_stats_roundtrip():
+    st = ResilienceStats(preemptions=3, time_in_queue=[1, 4])
+    st2 = ResilienceStats()
+    st2.load_state_dict(st.state_dict())
+    assert st2 == st
+    d = st.as_dict()
+    assert d["preemptions"] == 3 and d["time_in_queue_hist"] == \
+        {"1": 1, "4-7": 1}
+
+
+# ---------------------------------------------------------------------------
+# submit() hardening
+# ---------------------------------------------------------------------------
+
+def test_sampling_params_range_validation():
+    for bad in [dict(temperature=-0.5), dict(temperature=float("nan")),
+                dict(temperature=float("inf")), dict(top_p=0.0),
+                dict(top_p=1.5), dict(top_p=-0.1), dict(top_k=-1)]:
+        with pytest.raises(ValueError):
+            SamplingParams(**bad)
+    # boundary values stay legal (0 = greedy / disabled sentinels)
+    SamplingParams(temperature=0.0, top_p=1.0, top_k=0)
+
+
+def test_submit_rejections(model):
+    eng = _mk(model)
+    eng.submit(_req(1, L=6, max_new=2))
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.submit(_req(1, L=6, max_new=2))           # rid 1 is live
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(rid=2, adapter_id=0, max_new=2,
+                           prompt=np.zeros((0,), np.int32)))
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit(_req(3, L=6, max_new=0))
+    with pytest.raises(ValueError, match="deadline_ticks"):
+        eng.submit(_req(4, L=6, max_new=2, deadline_ticks=0))
+    with pytest.raises(ValueError, match="ttl"):
+        eng.submit(_req(5, L=6, max_new=2, ttl=0))
+    # prompt+max_new past max_len keeps its historical ValueError
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(_req(6, L=100, max_new=2))
+    # a max_len-legal trajectory that exceeds what the POOL could ever
+    # free is rejected with the typed subclass of that ValueError contract
+    tiny = _mk(model, num_pages=3)                    # 2 usable pages
+    with pytest.raises(NeverFitsError) as ei:
+        tiny.submit(_req(6, L=20, max_new=4))
+    assert ei.value.need_pages > ei.value.cap_pages
+    assert tiny.resilience_metrics()["never_fit_rejections"] == 1
+    _drain(eng)
+    eng.submit(_req(1, L=6, max_new=2))               # retired rid reusable
+    _drain(eng)
+    eng.pages.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# cancel / deadline / ttl
+# ---------------------------------------------------------------------------
+
+def test_cancel_queued_and_active(model):
+    eng = _mk(model)
+    for i in range(3):                  # 2 slots → rid 2 queues
+        eng.submit(_req(i, L=8, max_new=12))
+    eng.step()
+    assert eng.cancel(0) and eng.cancel(2)            # active + queued
+    assert not eng.cancel(99)                         # unknown rid
+    fin = {r.rid: r for r in _drain(eng)}
+    assert isinstance(fin[0].error, RequestCancelled)
+    assert isinstance(fin[2].error, RequestCancelled) and fin[2].out == []
+    assert fin[1].error is None and len(fin[1].out) == 12
+    m = eng.resilience_metrics()
+    assert m["cancellations"] == 2
+    eng.pages.check_invariants()
+    assert eng.pages.free_pages == eng.num_pages - 1  # everything returned
+    assert not eng.cancel(0)                          # already finished
+
+
+def test_deadline_and_ttl_expiry(model):
+    eng = _mk(model, slots=1)
+    eng.submit(_req(0, L=8, max_new=16, deadline_ticks=3))   # expires active
+    eng.submit(_req(1, L=8, max_new=4, ttl=2))               # expires queued
+    fin = {r.rid: r for r in _drain(eng)}
+    assert isinstance(fin[0].error, DeadlineExceeded)
+    assert 0 < len(fin[0].out) < 16                   # partial output kept
+    assert isinstance(fin[1].error, TTLExpired) and fin[1].out == []
+    m = eng.resilience_metrics()
+    assert m["deadline_expirations"] == 1 and m["ttl_expirations"] == 1
+    assert eng.pages.free_pages == eng.num_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# preempt-and-recompute: bitwise parity at EVERY preemption point
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prefix_cache", [False, True])
+@pytest.mark.parametrize("sampled", [False, True])
+def test_preempt_every_tick_bitwise_parity(model, prefix_cache, sampled):
+    """Preempting at tick k for EVERY k must leave the resumed stream
+    bitwise identical to the uninterrupted run — greedy and sampled,
+    mixed adapters, with and without the prefix cache (ONE engine, one
+    traced executable throughout the whole sweep)."""
+    eng = _mk(model, prefix_cache=prefix_cache)
+    seeds = (11, 23) if sampled else (None, None)
+
+    def reqs():
+        return [_req(0, L=11, max_new=5, adapter_id=0, seed=seeds[0]),
+                _req(1, L=6, max_new=5, adapter_id=1, seed=seeds[1])]
+
+    for r in reqs():
+        eng.submit(r)
+    base = {r.rid: tuple(r.out) for r in _drain(eng)}
+    assert all(len(o) == 5 for o in base.values())
+
+    total = 0
+    for k in range(1, 8):
+        rs = reqs()
+        for r in rs:
+            eng.submit(r)
+        for _ in range(k):
+            eng.step()
+            if all(a is None for a in eng._active) and not eng._queue:
+                break
+        hit = [r.rid for r in rs if eng.preempt(r.rid)]
+        total += len(hit)
+        fin = {r.rid: r for r in _drain(eng)}
+        for rid, r in fin.items():
+            assert r.error is None
+            assert tuple(r.out) == base[rid], \
+                f"preempt@{k} rid={rid}: {r.out} != {base[rid]}"
+            assert r.preemptions == (1 if rid in hit else 0)
+        eng.pages.check_invariants()
+        if eng.prefix is not None:
+            eng.prefix.check()
+    assert total > 0
+    assert len(eng.unified_traces) == 1               # one executable ever
+    m = eng.resilience_metrics()
+    assert m["preemptions"] == total
+    assert sum(m["time_to_first_preemption_hist"].values()) > 0
+
+
+@pytest.mark.parametrize("prefix_cache", [False, True])
+def test_preempt_random_schedule_property(model, prefix_cache):
+    """Fuzzed variant of the sweep: preempt a randomly chosen request at
+    multiple random ticks (repeated preemptions included) — parity must
+    hold for ANY preemption schedule, greedy or sampled, still on one
+    traced executable."""
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _minihyp import given, settings, strategies as st
+
+    eng = _mk(model, prefix_cache=prefix_cache)
+    base = {}
+
+    def reqs(seeded):
+        seeds = (11, 23) if seeded else (None, None)
+        return [_req(0, L=11, max_new=5, adapter_id=0, seed=seeds[0]),
+                _req(1, L=6, max_new=5, adapter_id=1, seed=seeds[1])]
+
+    @settings(max_examples=6, deadline=None)
+    @given(ticks=st.lists(st.integers(1, 9), min_size=1, max_size=3),
+           which=st.integers(0, 1), seeded=st.integers(0, 1))
+    def prop(ticks, which, seeded):
+        if seeded not in base:
+            for r in reqs(seeded):
+                eng.submit(r)
+            base[seeded] = {r.rid: tuple(r.out) for r in _drain(eng)}
+        rs = reqs(seeded)
+        for r in rs:
+            eng.submit(r)
+        for t in range(1, 13):
+            eng.step()
+            if t in ticks:
+                eng.preempt(rs[which].rid)   # False when queued/finished
+            if not eng._queue and all(a is None for a in eng._active):
+                break
+        fin = {r.rid: r for r in _drain(eng)}
+        for rid, r in fin.items():
+            assert r.error is None and tuple(r.out) == base[seeded][rid]
+        eng.pages.check_invariants()
+
+    prop()
+    assert len(eng.unified_traces) == 1
+
+
+def test_pressure_preemption_respects_priority(model):
+    """A high-priority arrival that cannot fit evicts exactly one
+    strictly-lower-priority victim after pressure_ticks; the victim
+    resumes bitwise-identically.  With uniform priorities the ladder
+    stays at backpressure: no preemption ever fires."""
+    kw = dict(num_pages=7, prefix_cache=True,
+              resilience=ResilienceConfig(pressure_ticks=2,
+                                          watchdog_ticks=30))
+    base_eng = _mk(model, **kw)
+    for i in (0, 1):
+        base_eng.submit(_req(i, L=16, max_new=6, seed=3 + i))
+    base = {r.rid: tuple(r.out) for r in _drain(base_eng)}
+
+    eng = _mk(model, **kw)
+    for i in (0, 1):                     # 3 pages each → pool (6 usable) full
+        eng.submit(_req(i, L=16, max_new=6, seed=3 + i))
+    eng.step()
+    eng.submit(_req(2, L=16, max_new=2, seed=9, priority=5))
+    fin = {r.rid: r for r in _drain(eng)}
+    m = eng.resilience_metrics()
+    assert m["preemptions"] >= 1
+    assert fin[2].error is None and len(fin[2].out) == 2
+    for i in (0, 1):
+        assert fin[i].error is None and tuple(fin[i].out) == base[i]
+    assert sum(fin[i].preemptions for i in (0, 1)) == m["preemptions"]
+    eng.pages.check_invariants()
+
+    # uniform priorities: same pressure, zero preemptions (backpressure)
+    eng2 = _mk(model, **kw)
+    for i in (0, 1):
+        eng2.submit(_req(i, L=16, max_new=6, seed=3 + i))
+    eng2.step()
+    eng2.submit(_req(2, L=16, max_new=2, seed=9))
+    fin2 = {r.rid: r for r in _drain(eng2)}
+    assert all(r.error is None for r in fin2.values())
+    assert eng2.resilience_metrics()["preemptions"] == 0
+
+
+# ---------------------------------------------------------------------------
+# NaN quarantine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sampled", [False, True])
+def test_nan_quarantine_isolates_poisoned_slot(model, sampled):
+    """Poisoning one slot's logits quarantines ONLY that request: typed
+    error, pages freed (never cached), and the co-resident stream is
+    bitwise unchanged from an unpoisoned run."""
+    seeds = (7, 31) if sampled else (None, None)
+    ref = _mk(model)
+    ref.submit(_req(0, L=10, max_new=6, adapter_id=0, seed=seeds[0]))
+    base = tuple(_drain(ref)[0].out)
+
+    eng = _mk(model)
+    eng.submit(_req(0, L=10, max_new=6, adapter_id=0, seed=seeds[0]))
+    eng.submit(_req(1, L=7, max_new=6, adapter_id=1, seed=seeds[1]))
+    eng.step()
+    slot = next(s for s, r in enumerate(eng._active)
+                if r is not None and r.rid == 1)
+    assert eng.inject_nan(slot)
+    assert not eng.inject_nan(9)                      # out of range
+    fin = {r.rid: r for r in _drain(eng)}
+    err = fin[1].error
+    assert isinstance(err, SlotQuarantined) and err.rid == 1
+    assert len(fin[1].out) < 6                        # truncated at poison
+    assert all(0 <= t < ref.model.cfg.vocab_size for t in fin[1].out)
+    assert fin[0].error is None and tuple(fin[0].out) == base
+    assert eng.resilience_metrics()["quarantined_slots"] == 1
+    eng.pages.check_invariants()
+    assert eng.pages.free_pages == eng.num_pages - 1  # nothing leaked
+
+
+def test_quarantined_pages_never_enter_prefix_cache(model):
+    eng = _mk(model, prefix_cache=True)
+    eng.submit(_req(0, L=16, max_new=4))
+    eng.step()
+    assert eng.inject_nan(next(s for s, r in enumerate(eng._active)
+                               if r is not None))
+    fin = _drain(eng)
+    assert isinstance(fin[0].error, SlotQuarantined)
+    assert eng.prefix.cached_pages == 0               # poisoned KV not parked
+    eng.pages.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# snapshot / restore
+# ---------------------------------------------------------------------------
+
+def test_snapshot_restore_identical_continuation(model, tmp_path):
+    """Snapshot mid-flight (one active mid-prefill/decode, one queued),
+    restore into a fresh engine, and the continuations are bitwise
+    identical — with at most ONE traced executable in the restored
+    engine's lifetime."""
+    ref = _mk(model, slots=1, prefix_cache=True)
+    ref.submit(_req(0, L=12, max_new=6, seed=5))
+    ref.submit(_req(1, L=9, max_new=4, seed=17))
+    base = {r.rid: tuple(r.out) for r in _drain(ref)}
+
+    eng = _mk(model, slots=1, prefix_cache=True)
+    eng.submit(_req(0, L=12, max_new=6, seed=5))
+    eng.submit(_req(1, L=9, max_new=4, seed=17))
+    eng.step(); eng.step()
+    meta = eng.snapshot(tmp_path / "snap")
+    assert (tmp_path / "snap" / "manifest.json").exists()
+
+    eng2 = _mk(model, slots=1, prefix_cache=True)
+    eng2.restore(tmp_path / "snap")
+    assert eng2.tick_count == eng.tick_count
+    fin = {r.rid: r for r in _drain(eng2)}
+    assert {rid: tuple(r.out) for rid, r in fin.items()} == base
+    assert len(eng2.unified_traces) == 1              # re-traces at most once
+    assert eng2.resilience_metrics()["restore_count"] == 1
+    eng2.pages.check_invariants()
+    eng2.prefix.check()
+
+
+def test_restore_guards(model, tmp_path):
+    eng = _mk(model)
+    eng.submit(_req(0, L=8, max_new=3))
+    eng.step()
+    eng.snapshot(tmp_path / "snap")
+    # restore target must be idle
+    with pytest.raises(ValueError, match="idle"):
+        eng.restore(tmp_path / "snap")
+    # and of the identical configuration
+    other = _mk(model, page_size=4, max_len=16)
+    with pytest.raises(ValueError, match="config"):
+        other.restore(tmp_path / "snap")
+    # non-unified engines have no snapshot cut
+    legacy = _mk(model, unified=False)
+    with pytest.raises(ValueError, match="unified"):
+        legacy.snapshot(tmp_path / "snap2")
+    _drain(eng)
+
+
+# ---------------------------------------------------------------------------
+# never-fits + watchdog: the run() livelock regression
+# ---------------------------------------------------------------------------
+
+def test_never_fits_cannot_livelock_run(model):
+    """Regression: a queue head whose trajectory can never fit used to
+    spin run() forever.  submit() rejects it up front; one smuggled past
+    submit() (e.g. via an older snapshot) fails at first hold with the
+    typed error instead of blocking the queue."""
+    eng = _mk(model, num_pages=3)                     # 2 usable pages
+    with pytest.raises(NeverFitsError):
+        eng.submit(_req(0, L=20, max_new=4))
+    # bypass submit(): inject directly, with a well-formed request behind
+    bad = _req(0, L=20, max_new=4)
+    bad.out = []
+    eng._rids.add(bad.rid)
+    eng._queue.append(bad)
+    eng.submit(_req(1, L=8, max_new=3))
+    fin = {r.rid: r for r in _drain(eng, max_ticks=30)}
+    assert isinstance(fin[0].error, NeverFitsError)
+    assert fin[1].error is None and len(fin[1].out) == 3
+
+
+def test_watchdog_starvation_error(model):
+    """Pages leaked OUTSIDE the reservation ledger stall the head
+    forever — the watchdog turns the silent livelock into a structured
+    StarvationError, and cancelling the head unblocks the engine."""
+    eng = _mk(model, resilience=ResilienceConfig(pressure_ticks=2,
+                                                 watchdog_ticks=4))
+    leaked = [eng.pages._pop_free() for _ in range(eng.pages.free_pages)]
+    eng.submit(_req(0, L=8, max_new=3))
+    with pytest.raises(StarvationError) as ei:
+        for _ in range(10):
+            eng.step()
+    assert ei.value.head_rid == 0 and ei.value.free_pages == 0
+    assert eng.resilience_metrics()["starvation_aborts"] == 1
+    assert eng.cancel(0)
+    fin = _drain(eng, max_ticks=10)
+    assert isinstance(fin[0].error, RequestCancelled)
+    for p in leaked:                                  # undo the leak
+        eng.pages._push_free(p)
+    eng.submit(_req(1, L=8, max_new=3))
+    fin = _drain(eng)
+    assert fin[0].error is None and len(fin[0].out) == 3
+
+
+# ---------------------------------------------------------------------------
+# chaos: one randomized schedule, every fault kind, deterministic
+# ---------------------------------------------------------------------------
+
+CHAOS_SEED = 1        # scripts/test.sh chaos lane adds a randomized seed
+# (seed 1 manifests every fault kind against the fixed workload:
+#  exhaustion-preempt, cancel, deadline expiry, quarantine + kill/restore)
+
+
+def _chaos_workload():
+    """Fixed mixed workload: long low-priority tenants (preemption
+    victims + deadline candidates) and short arrivals, mixed adapters."""
+    w = {}
+    w[0] = [_req(100, L=16, max_new=6, adapter_id=0, seed=1),
+            _req(101, L=16, max_new=6, adapter_id=1, seed=2)]
+    w[2] = [_req(102, L=9, max_new=8, adapter_id=0, seed=3,
+                 deadline_ticks=4)]
+    w[4] = [_req(103, L=12, max_new=5, adapter_id=1, seed=4)]
+    w[6] = [_req(104, L=7, max_new=4, adapter_id=0, seed=5,
+                 deadline_ticks=20)]
+    return w
+
+
+def _chaos_run(model, seed, tmp_path):
+    def factory():
+        return _mk(model, num_pages=7, prefix_cache=True,
+                   resilience=ResilienceConfig(pressure_ticks=2,
+                                               watchdog_ticks=8))
+
+    plan = FaultPlan.random(seed, ticks=10, slots=2,
+                            rids=[100, 101, 102, 103, 104],
+                            events=8, ballast_pages=3)
+    h = FaultHarness(factory, plan, _chaos_workload(),
+                     snapshot_dir=str(tmp_path))
+    h.run(max_ticks=120)
+    return h
+
+
+def test_chaos_deterministic_and_covers_fault_kinds(model, tmp_path):
+    """One seeded random schedule drives exhaustion-preemption, cancel,
+    deadline expiry, NaN quarantine AND a kill/restore roundtrip; the
+    whole thing replays bit-for-bit (trace + streams), and the telemetry
+    counters all advance."""
+    h1 = _chaos_run(model, CHAOS_SEED, tmp_path / "a")
+    h2 = _chaos_run(model, CHAOS_SEED, tmp_path / "b")
+    assert h1.trace == h2.trace                       # deterministic replay
+    assert set(h1.finished) == set(h2.finished)
+    for rid, r in h1.finished.items():
+        assert r.out == h2.finished[rid].out
+        assert type(r.error) is type(h2.finished[rid].error)
+
+    tr = "\n".join(h1.trace)
+    assert "kill_restore" in tr                       # roundtrip happened
+    m = h1.engine.resilience_metrics()                # survives the restore
+    assert m["preemptions"] >= 1                      # exhaustion-preempt
+    assert m["cancellations"] >= 1
+    assert m["deadline_expirations"] >= 1
+    assert m["quarantined_slots"] >= 1
+    assert m["restore_count"] == 1
+    assert sum(m["time_in_queue_hist"].values()) > 0
+    # every workload request reached a terminal state exactly once
+    for rid in (100, 101, 102, 103, 104):
+        assert rid in h1.finished
+    h1.engine.pages.check_invariants()
+
+
+def test_chaos_randomized_seed(model, tmp_path):
+    """The chaos lane's fuzz entry: any seed must satisfy the structural
+    properties (determinism, telemetry coherence) even when the specific
+    fault mix differs.  Seed comes from REPRO_CHAOS_SEED (printed on
+    failure) or hypothesis/minihyp when run directly."""
+    import os
+    env = os.environ.get("REPRO_CHAOS_SEED")
+    seeds = [int(env)] if env else [1]
+    for seed in seeds:
+        try:
+            h1 = _chaos_run(model, seed, tmp_path / f"s{seed}a")
+            h2 = _chaos_run(model, seed, tmp_path / f"s{seed}b")
+            assert h1.trace == h2.trace
+            m = h1.engine.resilience_metrics()
+            assert m["restore_count"] == 1
+            for rid in (100, 101, 102, 103, 104):
+                assert rid in h1.finished
+            h1.engine.pages.check_invariants()
+        except Exception:
+            print(f"REPRO_CHAOS_SEED={seed} failed — rerun with "
+                  f"REPRO_CHAOS_SEED={seed} to reproduce")
+            raise
