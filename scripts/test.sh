@@ -6,6 +6,11 @@
 #   scripts/test.sh chaos  — resilience chaos lane: the fixed-seed chaos
 #                            schedule plus ONE randomized seed (printed up
 #                            front; rerun with REPRO_CHAOS_SEED=<seed>)
+#   scripts/test.sh obs    — observability lane: telemetry invariance +
+#                            exporter schema tests, then the fast bench
+#                            (which writes the BENCH_serving.json report
+#                            and the metrics.json / metrics.prom /
+#                            trace.json CI artifacts)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -22,6 +27,10 @@ case "${1:-fast}" in
     echo "chaos lane randomized seed: $seed (REPRO_CHAOS_SEED=$seed to repro)"
     REPRO_CHAOS_SEED="$seed" exec python -m pytest -q \
         tests/test_resilience.py -k test_chaos_randomized_seed
+    ;;
+  obs)
+    python -m pytest -q tests/test_observability.py
+    exec python benchmarks/bench_serving.py --fast
     ;;
   *)
     exec python -m pytest -q -m "not slow"

@@ -25,10 +25,12 @@ import numpy as np
 SEP = "/"
 
 
-class _NpEncoder(json.JSONEncoder):
-    """Metadata JSON tolerant of numpy scalars/arrays — engine snapshots
+class NpEncoder(json.JSONEncoder):
+    """JSON tolerant of numpy scalars/arrays — engine snapshots
     (serving.resilience) carry block tables and counters straight from
-    numpy-backed host state."""
+    numpy-backed host state, and every telemetry exporter
+    (``engine.metrics()``, ``bench_serving``, trace dumps) routes its
+    serialization through here rather than hand-rolling conversions."""
 
     def default(self, o):
         if isinstance(o, np.integer):
@@ -40,6 +42,14 @@ class _NpEncoder(json.JSONEncoder):
         if isinstance(o, np.ndarray):
             return o.tolist()
         return super().default(o)
+
+
+_NpEncoder = NpEncoder   # old private name, kept for callers/tests
+
+
+def json_dumps(obj, indent=None, **kw) -> str:
+    """``json.dumps`` with the numpy-tolerant encoder pre-applied."""
+    return json.dumps(obj, cls=NpEncoder, indent=indent, **kw)
 
 
 def _flatten(tree, prefix="") -> Dict[str, Any]:

@@ -1,7 +1,12 @@
 """Multi-tenant adapter serving (the paper's motivating scenario)."""
 from .engine import (ServingEngine, Request, make_serve_step,
                      make_prefill_step, make_unified_step, make_fused_step)
-from .multi_tenant import stack_tenants, MTHooks, make_mt_factory
+from .multi_tenant import (stack_tenants, MTHooks, make_mt_factory,
+                           shard_pool_stats)
+from .observability import (MetricsRegistry, ObservabilityConfig,
+                            Pow2Histogram, Tracer, profile_kernels,
+                            profile_serving_kernels, validate_chrome_trace,
+                            validate_prometheus)
 from .paging import PagePool, paginate_cache
 from .prefix import PrefixCache, PrefixHit, PrefixStats, PrefixTree
 from .resilience import (DeadlineExceeded, Fault, FaultHarness, FaultPlan,

@@ -58,6 +58,9 @@ import numpy as np
 
 from ..models.attention import INVALID_POS
 from .multi_tenant import make_mt_factory, stack_tenants
+from .observability import (QUEUE_LANE, TICK_LANE, MetricsRegistry,
+                            ObservabilityConfig, Pow2Histogram, Tracer,
+                            slot_lane)
 from .paging import PagePool
 from .prefix import PrefixCache
 from .resilience.errors import (DeadlineExceeded, NeverFitsError,
@@ -158,7 +161,8 @@ def make_unified_step(model, tenants: int = 0, backend: str = "fused",
 def make_fused_step(model, decode_ticks: Optional[int], tenants: int = 0,
                     backend: str = "fused", interpret: bool = True,
                     attn_backend: str = "pallas",
-                    sample_backend: str = "pallas"):
+                    sample_backend: str = "pallas",
+                    page_size: int = 0):
     """The device-resident macro-step: ``decode_ticks`` (D) unified
     micro-steps + on-device sampling fused into ONE jitted call.
     ``decode_ticks=None`` leaves D to the plan's leading dimension — the
@@ -196,8 +200,14 @@ def make_fused_step(model, decode_ticks: Optional[int], tenants: int = 0,
     on, so no page writes and no logits reads leak past the stop.
 
     Returns ``(new_cache, tokens (D, slots) int32, valid (D, slots) bool,
-    finite (D, slots) bool)`` — the host drains the buffer in one
-    device→host sync.  ``finite`` is the per-slot fault-isolation guard:
+    finite (D, slots) bool, stats (D, 4) int32)`` — the host drains the
+    buffers in one device→host sync.  ``stats`` is the device tick-counter
+    lane (``serving.observability``): per micro-step ``[tokens emitted,
+    slots doing real work, fresh pages opened, NaN-guard trips]`` —
+    one fused reduction set per micro-step, always compiled in
+    (shape-static), so toggling telemetry never changes the executable or
+    the streams; ``page_size=0`` (non-paged) pins the page counter to 0.
+    ``finite`` is the per-slot fault-isolation guard:
     an all-finite reduction over each slot's sampled logits row, computed
     in-graph for the price of one ``lax`` reduction per micro-step.  A
     False entry means that slot's logits were poisoned (NaN/inf) at that
@@ -250,15 +260,29 @@ def make_fused_step(model, decode_ticks: Optional[int], tenants: int = 0,
             made2 = made + emit.astype(jnp.int32)
             hit_eos = emit & (plan["eos"] >= 0) & (tok2 == plan["eos"])
             feed2 = emit & (made2 < plan["cap"]) & jnp.logical_not(hit_eos)
-            return (cache, feed2, tok2, ln2, made2), (tok2, emit, fin)
+            # device tick counters (observability stats lane): tokens
+            # emitted, slots doing real work, fresh pages opened (a write
+            # at a page-aligned position claims a new page), NaN trips
+            written = pos < jnp.int32(INVALID_POS)
+            if page_size > 0:
+                new_page = written & (pos % jnp.int32(page_size) == 0)
+            else:
+                new_page = jnp.zeros_like(written)
+            active = feed | final_t | jnp.any(written, axis=1)
+            stats = jnp.stack([
+                jnp.sum(emit.astype(jnp.int32)),
+                jnp.sum(active.astype(jnp.int32)),
+                jnp.sum(new_page.astype(jnp.int32)),
+                jnp.sum((emit & jnp.logical_not(fin)).astype(jnp.int32))])
+            return (cache, feed2, tok2, ln2, made2), (tok2, emit, fin, stats)
 
         init = (cache, plan["feed0"], plan["tok0"], plan["len0"],
                 jnp.zeros((S,), jnp.int32))
         xs = (plan["tokens"], plan["positions"], plan["last_col"],
               plan["samp_row"], plan["final"], plan["poison"])
-        (cache, *_), (toks_out, valid_out, finite_out) = jax.lax.scan(
-            micro, init, xs)
-        return cache, toks_out, valid_out, finite_out
+        (cache, *_), (toks_out, valid_out, finite_out,
+                      stats_out) = jax.lax.scan(micro, init, xs)
+        return cache, toks_out, valid_out, finite_out, stats_out
 
     fused_step._traces = traces
     return fused_step
@@ -354,8 +378,9 @@ class ServingEngine:
     block-table entries) and re-credits the reservation, so a long
     trajectory only ever holds ~window worth of pages.
 
-    ``prefix_cache=True`` layers the refcounted **prefix cache**
-    (``serving.prefix``) over the pool: admission probes a radix tree
+    ``prefix_cache`` (default ``None`` → ON for unified non-SWA paged
+    engines, pass ``False`` to opt out) layers the refcounted **prefix
+    cache** (``serving.prefix``) over the pool: admission probes a radix tree
     keyed on (adapter_id, page-aligned token blocks), maps matched pages
     directly onto the slot's block-table columns (refcounted sharing —
     no KV recompute, no copies), COW-copies the one divergence page of a
@@ -372,6 +397,16 @@ class ServingEngine:
     below ``decode_ticks`` (ladder of powers of two) when the in-flight
     completions couldn't fill it — same streams, fewer dead lanes.
 
+    ``observability=ObservabilityConfig(...)`` selects the telemetry
+    layer (``serving.observability``): ``metrics()`` /
+    ``metrics_prometheus()`` / ``metrics_json()`` snapshot a registry of
+    per-tenant, page/prefix, resilience, device-counter, and MoS
+    shard-pool series; ``trace=True`` buffers request-lifecycle events
+    for ``export_trace()`` (Chrome-trace JSON).  Telemetry never changes
+    the streams: the fused step's stats lane is shape-static and always
+    compiled in, and host-side gauges are lazy callbacks.  See
+    ``docs/observability.md``.
+
     **Legacy mode** (``unified=False``, mamba-bearing archs, or
     ``paged=False``) keeps the two-phase path: batched admission prefills
     followed by one-token decode steps, with token selection through the
@@ -386,8 +421,10 @@ class ServingEngine:
                  attn_backend: str = "pallas", unified: bool = True,
                  chunk: Optional[int] = None, decode_ticks: int = 1,
                  sample_backend: str = "pallas",
-                 prefix_cache: bool = False, auto_ticks: bool = False,
-                 resilience: Optional[ResilienceConfig] = None):
+                 prefix_cache: Optional[bool] = None,
+                 auto_ticks: bool = False,
+                 resilience: Optional[ResilienceConfig] = None,
+                 observability: Optional[ObservabilityConfig] = None):
         self.model, self.params = model, params
         self.tenants = len(tenant_states)
         self.backend = backend
@@ -447,7 +484,8 @@ class ServingEngine:
                                   tenants=self.tenants, backend=backend,
                                   interpret=interpret,
                                   attn_backend=attn_backend,
-                                  sample_backend=sample_backend)
+                                  sample_backend=sample_backend,
+                                  page_size=page_size)
             self.unified_traces = ffn._traces
             self.fstep = jax.jit(ffn, donate_argnums=(3,))
         self._queue: List[Request] = []
@@ -466,6 +504,13 @@ class ServingEngine:
         else:
             self.cache = model.init_cache(slots, max_len)
         self.prefix: Optional[PrefixCache] = None
+        if prefix_cache is None:
+            # default ON wherever it is supported (unified scheduler,
+            # full attention) — the hit-rate telemetry below plus the
+            # bench assertion that prefix-free traffic shows hit_rate 0
+            # with no page regression gate this default; pass False to
+            # opt out explicitly
+            prefix_cache = self.unified and self.window <= 0
         if prefix_cache:
             if not self.unified:
                 raise ValueError(
@@ -513,6 +558,20 @@ class ServingEngine:
         self._progress = False               # set by any scheduler progress
         self._stalled_now: set = set()       # slots page-stalled this tick
         self._tick_failed: List[Request] = []   # failed mid-admission
+        # --- unified telemetry (serving.observability) ----------------
+        self.obs = observability if observability is not None \
+            else ObservabilityConfig()
+        self.registry = MetricsRegistry()
+        self.tracer: Optional[Tracer] = (
+            Tracer(self.obs.trace_capacity) if self.obs.trace else None)
+        # device tick counters, drained from the fused step's stats lane
+        # (the same once-per-tick sync as the token buffer)
+        self.device_counters: Dict[str, int] = {
+            "tokens_emitted": 0, "active_micro_steps": 0,
+            "pages_written": 0, "nan_trips": 0}
+        self._submit_us: Dict[int, float] = {}   # rid → submit ts (trace)
+        self._slot_t0: Dict[int, float] = {}     # slot → admit ts (trace)
+        self._init_metrics()
 
     # ------------------------------------------------------------------
     # token selection (legacy host path)
@@ -644,6 +703,12 @@ class ServingEngine:
         req.submit_tick = req.enq_tick = self.tick_count
         self._rids.add(req.rid)
         self._queue.append(req)
+        if self.obs.metrics:
+            self._m_submitted.inc(tenant=self._tenant_of(req))
+        if self.tracer is not None:
+            self._submit_us[req.rid] = self.tracer.now_us()
+            self.tracer.instant("submit", QUEUE_LANE, rid=int(req.rid),
+                                tenant=int(req.adapter_id))
 
     # ------------------------------------------------------------------
     # request lifecycle API (serving.resilience)
@@ -704,6 +769,272 @@ class ServingEngine:
         return self.rstats.as_dict()
 
     # ------------------------------------------------------------------
+    # unified telemetry (serving.observability)
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _tenant_of(req: Request) -> str:
+        return str(int(req.adapter_id))
+
+    def _pages_by_tenant(self, kind: str):
+        def fn():
+            out: Dict[tuple, int] = {}
+            for s, req in enumerate(self._active):
+                if req is None:
+                    continue
+                key = (self._tenant_of(req),)
+                v = (self.pages.resident_pages(s) if kind == "resident"
+                     else len(self.pages._shared.get(s, ())))
+                out[key] = out.get(key, 0) + v
+            return out
+        return fn
+
+    def _resilience_counters(self) -> Dict[tuple, float]:
+        return {(k,): v for k, v in self.rstats.as_dict().items()
+                if isinstance(v, (int, float))}
+
+    def _prefix_gauges(self) -> Dict[tuple, float]:
+        d = self.prefix_metrics() or {}
+        return {(k,): v for k, v in d.items()
+                if isinstance(v, (int, float))}
+
+    def _mos_pool_stats(self) -> Dict[str, Dict[str, Any]]:
+        from .multi_tenant import shard_pool_stats
+        return shard_pool_stats(self.model.plan, self.ad_stack)
+
+    def _mos_gauge(self, field: str):
+        def fn():
+            return {(pool, mat): v[field]
+                    for pool, mats in self._mos_pool_stats().items()
+                    for mat, v in mats.items()}
+        return fn
+
+    def _init_metrics(self):
+        """Register every metric once.  Event counters are incremented on
+        the scheduler paths (gated on ``obs.metrics``); everything else is
+        a collect-time callback over live engine state — zero per-tick
+        cost either way."""
+        R = self.registry
+        self._m_tokens = R.counter(
+            "serving_tokens_total",
+            "Generated tokens drained to the host", labelnames=("tenant",))
+        self._m_submitted = R.counter(
+            "serving_requests_submitted_total",
+            "Requests accepted by submit()", labelnames=("tenant",))
+        self._m_finished = R.counter(
+            "serving_requests_finished_total",
+            "Requests retired, by outcome (completed or the error class)",
+            labelnames=("tenant", "outcome"))
+        self._m_preempt = R.counter(
+            "serving_preemptions_total",
+            "Preempt-and-recompute evictions", labelnames=("tenant",))
+        self._m_plookup = R.counter(
+            "serving_prefix_lookups_total",
+            "Prefix-cache admission probes", labelnames=("tenant",))
+        self._m_phit = R.counter(
+            "serving_prefix_hits_total",
+            "Probes that leased at least one cached page",
+            labelnames=("tenant",))
+        R.counter("serving_engine_ticks_total", "Engine ticks stepped",
+                  fn=lambda: self.tick_count)
+        R.counter("serving_macro_ticks_total",
+                  "Fused macro steps dispatched", fn=lambda: self.macro_ticks)
+        R.counter("serving_host_syncs_total", "Device→host syncs",
+                  fn=lambda: self.host_syncs)
+        R.counter("serving_device_events_total",
+                  "On-device tick counters (fused-step stats lane)",
+                  labelnames=("event",),
+                  fn=lambda: {(k,): v
+                              for k, v in self.device_counters.items()})
+        R.counter("serving_tick_width_ticks_total",
+                  "Macro ticks by packed width D", labelnames=("width",),
+                  fn=lambda: {(str(k),): v for k, v in
+                              sorted(self.tick_width_counts.items())})
+        R.gauge("serving_queue_depth", "Requests waiting in the FIFO",
+                fn=lambda: len(self._queue))
+        R.gauge("serving_active_slots", "Slots with a resident request",
+                fn=lambda: sum(r is not None for r in self._active))
+        if self.tracer is not None:
+            R.counter("serving_trace_events_dropped_total",
+                      "Lifecycle trace ring-buffer evictions",
+                      fn=lambda: self.tracer.dropped)
+        if self.paged:
+            R.gauge("serving_pages", "Page-pool state (PagePool.metrics)",
+                    labelnames=("state",),
+                    fn=lambda: {(k,): v
+                                for k, v in self.pages.metrics().items()})
+            R.gauge("serving_tenant_resident_pages",
+                    "Pages mapped by active requests, per tenant",
+                    labelnames=("tenant",), fn=self._pages_by_tenant(
+                        "resident"))
+            R.gauge("serving_tenant_shared_pages",
+                    "Prefix-cache shared pages mapped, per tenant",
+                    labelnames=("tenant",),
+                    fn=self._pages_by_tenant("shared"))
+        R.counter("serving_resilience_events_total",
+                  "ResilienceStats counters", labelnames=("event",),
+                  fn=self._resilience_counters)
+        R.histogram("serving_time_in_queue_ticks",
+                    "Submit/requeue → admission wait",
+                    fn=lambda: {(): Pow2Histogram.from_values(
+                        self.rstats.time_in_queue)})
+        R.histogram("serving_time_to_first_preemption_ticks",
+                    "Submit → first preemption",
+                    fn=lambda: {(): Pow2Histogram.from_values(
+                        self.rstats.time_to_first_preemption)})
+        if self.prefix is not None:
+            R.gauge("serving_prefix_cache", "Prefix-cache pool gauges",
+                    labelnames=("stat",), fn=self._prefix_gauges)
+        if self.model.plan.method in ("mos", "pure"):
+            # per-pool MoS telemetry from the frozen routing indices —
+            # a pure-sharing collapse (all tenants on few public shards)
+            # shows up as low utilization / high max_selection
+            R.gauge("mos_shard_pool_utilization",
+                    "Fraction of pool shards referenced by the routing "
+                    "indices", labelnames=("pool", "matrix"),
+                    fn=self._mos_gauge("utilization"))
+            R.gauge("mos_shard_pool_public_ref_fraction",
+                    "Fraction of index references landing on public "
+                    "shards", labelnames=("pool", "matrix"),
+                    fn=self._mos_gauge("public_ref_fraction"))
+            R.gauge("mos_shard_pool_max_selection",
+                    "Highest per-shard reference count",
+                    labelnames=("pool", "matrix"),
+                    fn=self._mos_gauge("max_selection"))
+            R.histogram("mos_shard_selection",
+                        "Per-shard reference counts (pow-2 buckets)",
+                        labelnames=("pool", "matrix"),
+                        fn=lambda: {
+                            (pool, mat): Pow2Histogram.from_values(
+                                v["selection"].values())
+                            for pool, mats in
+                            self._mos_pool_stats().items()
+                            for mat, v in mats.items()})
+
+    def metrics(self) -> Dict[str, Any]:
+        """ONE unified telemetry snapshot: engine/tick counters, device
+        tick counters, page-pool and prefix-cache state, resilience
+        stats, per-tenant breakdowns, MoS shard-pool stats, and the full
+        registry collect().  JSON-able via :meth:`metrics_json` (numpy
+        scalars tolerated)."""
+        per_tenant: Dict[str, Dict[str, Any]] = {}
+
+        def ten(t: str) -> Dict[str, Any]:
+            return per_tenant.setdefault(t, {
+                "tokens": 0, "submitted": 0, "completed": 0, "failed": 0,
+                "preemptions": 0, "prefix_lookups": 0, "prefix_hits": 0,
+                "prefix_hit_rate": 0.0, "resident_pages": 0,
+                "shared_pages": 0})
+
+        for (t,), v in self._m_tokens.series().items():
+            ten(t)["tokens"] = v
+        for (t,), v in self._m_submitted.series().items():
+            ten(t)["submitted"] = v
+        for (t, outcome), v in self._m_finished.series().items():
+            key = "completed" if outcome == "completed" else "failed"
+            ten(t)[key] += v
+        for (t,), v in self._m_preempt.series().items():
+            ten(t)["preemptions"] = v
+        for (t,), v in self._m_plookup.series().items():
+            ten(t)["prefix_lookups"] = v
+        for (t,), v in self._m_phit.series().items():
+            ten(t)["prefix_hits"] = v
+        for t, d in per_tenant.items():
+            if d["prefix_lookups"]:
+                d["prefix_hit_rate"] = d["prefix_hits"] / d["prefix_lookups"]
+        if self.paged:
+            for (t,), v in self._pages_by_tenant("resident")().items():
+                ten(t)["resident_pages"] = v
+            for (t,), v in self._pages_by_tenant("shared")().items():
+                ten(t)["shared_pages"] = v
+        out: Dict[str, Any] = {
+            "engine": {
+                "tick_count": self.tick_count,
+                "macro_ticks": self.macro_ticks,
+                "host_syncs": self.host_syncs,
+                "tokens_out": self.tokens_out,
+                "tick_width_counts": dict(self.tick_width_counts),
+                "unified_traces": (len(self.unified_traces)
+                                   if self.unified else 0),
+                "slots": self.slots,
+                "queue_depth": len(self._queue),
+                "active_slots": sum(r is not None for r in self._active),
+            },
+            "device": dict(self.device_counters),
+            "pages": self.pages.metrics() if self.paged else None,
+            "prefix": self.prefix_metrics(),
+            "resilience": self.rstats.as_dict(),
+            "per_tenant": per_tenant,
+            "mos": (self._mos_pool_stats()
+                    if self.model.plan.method in ("mos", "pure") else None),
+            "registry": self.registry.collect(),
+        }
+        return out
+
+    def metrics_prometheus(self) -> str:
+        """The registry in Prometheus text exposition format."""
+        return self.registry.to_prometheus()
+
+    def metrics_json(self, indent: Optional[int] = None) -> str:
+        from ..checkpoint.io import json_dumps
+        return json_dumps(self.metrics(), indent=indent)
+
+    def trace_events(self) -> List[dict]:
+        """Buffered lifecycle trace events ([] with tracing off)."""
+        return [] if self.tracer is None else self.tracer.events()
+
+    def export_trace(self, path=None) -> Dict[str, Any]:
+        """Chrome-trace / Perfetto JSON of the lifecycle ring buffer
+        (metadata-only when tracing is off); optionally written to
+        ``path`` through the numpy-tolerant encoder."""
+        tracer = self.tracer if self.tracer is not None \
+            else Tracer(capacity=1)
+        obj = tracer.to_chrome(slots=self.slots)
+        if path is not None:
+            from pathlib import Path as _Path
+            from ..checkpoint.io import json_dumps
+            _Path(path).write_text(json_dumps(obj))
+        return obj
+
+    # --- scheduler-path hooks (cheap no-ops when telemetry is off) ----
+
+    def _note_admit(self, req: Request, slot: int):
+        if self.tracer is None:
+            return
+        now = self.tracer.now_us()
+        t0 = self._submit_us.pop(req.rid, now)
+        self.tracer.complete("queued", QUEUE_LANE, t0, now - t0,
+                             rid=int(req.rid))
+        self.tracer.instant("admit", slot_lane(slot), now,
+                            rid=int(req.rid),
+                            preemptions=int(req.preemptions))
+        self._slot_t0[slot] = now
+
+    def _note_slot_close(self, slot: int, req: Request, outcome: str):
+        if self.obs.metrics and outcome != "preempt":
+            self._m_finished.inc(tenant=self._tenant_of(req),
+                                 outcome=outcome)
+        if self.tracer is None:
+            return
+        now = self.tracer.now_us()
+        t0 = self._slot_t0.pop(slot, now)
+        self.tracer.complete(f"req {int(req.rid)}", slot_lane(slot), t0,
+                             now - t0, rid=int(req.rid), outcome=outcome,
+                             tokens=len(req.out or ()))
+
+    def _note_queue_fail(self, req: Request, err: Exception):
+        if self.obs.metrics:
+            self._m_finished.inc(tenant=self._tenant_of(req),
+                                 outcome=type(err).__name__)
+        if self.tracer is None:
+            return
+        now = self.tracer.now_us()
+        t0 = self._submit_us.pop(req.rid, now)
+        self.tracer.complete("queued", QUEUE_LANE, t0, now - t0,
+                             rid=int(req.rid),
+                             outcome=type(err).__name__)
+
+    # ------------------------------------------------------------------
     # lifecycle internals (serving.resilience)
     # ------------------------------------------------------------------
 
@@ -759,6 +1090,7 @@ class ServingEngine:
         req.done = True
         self._rids.discard(req.rid)
         self._cancel_req.discard(req.rid)
+        self._note_slot_close(s, req, type(err).__name__)
         return req
 
     def _preempt_slot(self, s: int, requeue_at: int = 0):
@@ -776,6 +1108,13 @@ class ServingEngine:
         if req.preemptions == 1:
             self.rstats.time_to_first_preemption.append(
                 max(0, self.tick_count - max(req.submit_tick, 0)))
+        if self.obs.metrics:
+            self._m_preempt.inc(tenant=self._tenant_of(req))
+        self._note_slot_close(s, req, "preempt")
+        if self.tracer is not None:
+            self.tracer.instant("preempt", slot_lane(s), rid=int(req.rid))
+            self._submit_us[req.rid] = self.tracer.now_us()
+            self.tracer.instant("requeue", QUEUE_LANE, rid=int(req.rid))
         req.enq_tick = self.tick_count
         self._queue.insert(min(requeue_at, len(self._queue)), req)
         self._progress = True
@@ -811,6 +1150,7 @@ class ServingEngine:
                     req.done = True
                     self._rids.discard(req.rid)
                     self._cancel_req.discard(req.rid)
+                    self._note_queue_fail(req, err)
                     failed.append(req)
             self._queue = keep
         for s, req in enumerate(self._active):
@@ -909,6 +1249,7 @@ class ServingEngine:
             req.admit_tick = self.tick_count
             self.rstats.time_in_queue.append(
                 max(0, self.tick_count - max(req.enq_tick, 0)))
+            self._note_admit(req, slot)
             self._progress = True
         return admitted
 
@@ -1063,6 +1404,7 @@ class ServingEngine:
                 self.rstats.never_fit_rejections += 1
                 req.error = NeverFitsError(req.rid, need_p, cap_max)
                 req.done = True
+                self._note_queue_fail(req, req.error)
                 self._tick_failed.append(req)
                 continue
             eff = (np.concatenate([np.asarray(req.prompt, np.int32),
@@ -1071,6 +1413,10 @@ class ServingEngine:
             traj = self._traj_tokens(req)    # == len(eff) + remaining - 1
             hit = (self.prefix.match(req.adapter_id, eff)
                    if self.prefix is not None else None)
+            if self.prefix is not None and self.obs.metrics:
+                self._m_plookup.inc(tenant=self._tenant_of(req))
+                if hit is not None:
+                    self._m_phit.inc(tenant=self._tenant_of(req))
             n_shared = len(hit.pages) if hit is not None else 0
             cap = self._swa_cap_pages()
             eff_pages = self.pages.pages_for(self._effective_tokens(traj))
@@ -1092,6 +1438,7 @@ class ServingEngine:
             req.admit_tick = self.tick_count
             self.rstats.time_in_queue.append(
                 max(0, self.tick_count - max(req.enq_tick, 0)))
+            self._note_admit(req, slot)
             self._progress = True
             if self._oversub_slot is not None:
                 break
@@ -1347,15 +1694,38 @@ class ServingEngine:
         D = self._tick_D()
         self.macro_ticks += 1
         self.tick_width_counts[D] = self.tick_width_counts.get(D, 0) + 1
+        tr = self.tracer
+        if tr is not None:
+            # per-slot tick spans need the pre-step view: who was still
+            # prefilling, and each resident's token count before drain
+            t_tick0 = tr.now_us()
+            pre_req = {s: r for s, r in enumerate(self._active)
+                       if r is not None}
+            pre_out = {s: len(r.out or ()) for s, r in pre_req.items()}
+            pre_fill = {s: (self._cursor.get(s, 0)
+                            < len(self._eff.get(s, ())))
+                        for s in pre_req}
         plan, bt = self._pack_macro(D)
         self.cache["block_tables"] = jnp.asarray(bt)
-        self.cache, toks_out, valid_out, finite_out = self.fstep(
-            self.params, self.ad_stack, plan, self.cache)
+        t_fs0 = tr.now_us() if tr is not None else 0.0
+        (self.cache, toks_out, valid_out, finite_out,
+         stats_out) = self.fstep(self.params, self.ad_stack, plan,
+                                 self.cache)
         # the macro tick's ONE device→host sync: drain the token buffer
+        # (+ the stats lane — same sync)
         toks_np = np.asarray(toks_out)
         valid_np = np.asarray(valid_out)
         finite_np = np.asarray(finite_out)
+        stats_np = np.asarray(stats_out)
         self.host_syncs += 1
+        t_fs1 = tr.now_us() if tr is not None else 0.0
+        if self.obs.metrics:
+            tot = stats_np.sum(axis=0)
+            dc = self.device_counters
+            dc["tokens_emitted"] += int(tot[0])
+            dc["active_micro_steps"] += int(tot[1])
+            dc["pages_written"] += int(tot[2])
+            dc["nan_trips"] += int(tot[3])
         self._last_valid = valid_np
         for s in range(self.slots):
             req = self._active[s]
@@ -1371,6 +1741,8 @@ class ServingEngine:
                 tok = int(toks_np[t, s])
                 req.out.append(tok)
                 self.tokens_out += 1
+                if self.obs.metrics:
+                    self._m_tokens.inc(tenant=self._tenant_of(req))
                 self._progress = True
                 if len(req.out) >= req.max_new or self._hit_eos(req, tok):
                     req.done = True
@@ -1379,6 +1751,9 @@ class ServingEngine:
                 # per-slot quarantine: typed failure, pages freed (NEVER
                 # cached — the KV may be poisoned), co-tenants untouched
                 self.rstats.quarantined_slots += 1
+                if tr is not None:
+                    tr.instant("quarantine", slot_lane(s),
+                               rid=int(req.rid), micro_step=int(poisoned_at))
                 finished.append(self._fail_active(
                     s, SlotQuarantined(
                         req.rid, self.tick_count,
@@ -1398,8 +1773,18 @@ class ServingEngine:
                 self._poison_next.discard(s)
                 if self._oversub_slot == s:
                     self._oversub_slot = None
+                self._note_slot_close(s, req, "completed")
                 finished.append(req)
                 self._progress = True
+        if tr is not None:
+            for s, r in pre_req.items():
+                ntok = len(r.out or ()) - pre_out[s]
+                name = ("prefill+decode" if pre_fill[s] and ntok > 0
+                        else "prefill" if pre_fill[s] else "decode")
+                tr.complete(name, slot_lane(s), t_fs0, t_fs1 - t_fs0,
+                            rid=int(r.rid), tokens=int(ntok))
+            tr.complete("tick", TICK_LANE, t_tick0, tr.now_us() - t_tick0,
+                        tick=int(self.tick_count), D=int(D))
         self._free_swa_pages()
         # pressure/watchdog accounting for the NEXT tick's decisions
         self._head_wait = self._head_wait + 1 if self._queue else 0
@@ -1423,6 +1808,7 @@ class ServingEngine:
         self._active[i] = None
         self._len.pop(i, None)
         self._rids.discard(req.rid)
+        self._note_slot_close(i, req, "completed")
         retired.append(i)
         finished.append(req)
         self._progress = True
@@ -1463,6 +1849,8 @@ class ServingEngine:
                 continue
             req.out.append(tok)
             self.tokens_out += 1
+            if self.obs.metrics:
+                self._m_tokens.inc(tenant=self._tenant_of(req))
             self._progress = True
             del self._pending[i]
             if len(req.out) >= req.max_new or self._hit_eos(req, tok):
@@ -1489,6 +1877,8 @@ class ServingEngine:
             tok = int(nxt[i])
             req.out.append(tok)
             self.tokens_out += 1
+            if self.obs.metrics:
+                self._m_tokens.inc(tenant=self._tenant_of(req))
             self._progress = True
             self._len[i] = self._len.get(i, len(req.prompt)) + 1
             if len(req.out) >= req.max_new or self._hit_eos(req, tok):

@@ -96,6 +96,50 @@ def stack_tenants(plan: ad.AdapterPlan, states: Sequence[Any],
     return {"trainable": out_tr, "static": out_st}
 
 
+def shard_pool_stats(plan: ad.AdapterPlan, stacked) -> Dict[str, Any]:
+    """MoS routing telemetry from the frozen index matrices: per pool and
+    per matrix (A/B), the selection count of every shard, a pow-2
+    histogram of those counts, and the utilization fraction (shards
+    referenced at least once).  The routing is input-independent and
+    shared across tenants (asserted in :func:`stack_tenants`), so this is
+    a pure host-side recount of static state — ``engine.metrics()`` calls
+    it lazily, nothing runs per tick.
+
+    A **pure-sharing collapse** (the failure mode MoS's shard
+    privatization exists to avoid, paper §3) shows up directly: every
+    instance selecting the same few shards drives utilization down and
+    piles the selection histogram into one high bucket.
+    """
+    import numpy as np
+
+    from .observability.registry import Pow2Histogram
+
+    out: Dict[str, Any] = {}
+    for name, st in stacked["static"].items():
+        if "idx_a" not in st:
+            continue
+        g = plan.geoms[name]
+        pool: Dict[str, Any] = {}
+        for mat, key in (("a", "idx_a"), ("b", "idx_b")):
+            idx = np.asarray(st[key])
+            sel = np.bincount(idx.reshape(-1), minlength=g.n_shards)
+            refs = int(sel.sum())
+            pub = int(sel[:g.n_public].sum())
+            pool[mat] = {
+                "n_shards": int(g.n_shards),
+                "n_public": int(g.n_public),
+                "refs": refs,
+                "utilization": float((sel > 0).mean()) if g.n_shards else 0.0,
+                "public_ref_fraction": pub / refs if refs else 0.0,
+                "max_selection": int(sel.max()) if g.n_shards else 0,
+                "selection": {str(i): int(c) for i, c in enumerate(sel)
+                              if c > 0},
+                "selection_hist": Pow2Histogram.from_values(sel).to_dict(),
+            }
+        out[name] = pool
+    return out
+
+
 def _materialize_tenant_stack(pools, idx, interpret: bool):
     """pools (T, n, s), idx (L, r, l) → (L, T, r, l·s) hoisted cache.
 

@@ -1,0 +1,71 @@
+"""Unified serving telemetry: metrics registry, lifecycle tracing, and
+kernel roofline profiling.
+
+Three pillars (see ``docs/observability.md``):
+
+  * :mod:`.registry` — typed metric series (counters / gauges / pow-2
+    histograms) with JSON and Prometheus-text exporters; one registry per
+    engine, snapshotted via ``engine.metrics()``.
+  * :mod:`.trace` — request-lifecycle span events on a bounded ring
+    buffer, exported as Chrome-trace / Perfetto JSON with one lane per
+    engine slot (``engine.export_trace()``).
+  * :mod:`.rooflines` — out-of-graph kernel profiling hooks reporting
+    achieved-vs-analytic roofline fractions for the Pallas families.
+
+:class:`ObservabilityConfig` selects what the engine pays for.  The
+default (metrics on, tracing off) adds only host-side dict updates on the
+existing once-per-tick sync; everything that could perturb the device
+program is shape-static and always compiled in, so toggling telemetry
+never changes the numerics (``tests/test_observability.py`` pins the
+token streams bitwise across all three settings).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .registry import (Counter, Gauge, Histogram, MetricsRegistry,
+                       Pow2Histogram, pow2_bucket, validate_prometheus)
+from .rooflines import (HBM_BW, PEAK_FLOPS, KernelProfile, KernelProfiler,
+                        profile_kernels, profile_serving_kernels)
+from .trace import (QUEUE_LANE, SLOT_LANE0, TICK_LANE, Tracer, slot_lane,
+                    validate_chrome_trace)
+
+
+@dataclasses.dataclass(frozen=True)
+class ObservabilityConfig:
+    """What telemetry the serving engine collects.
+
+    ``metrics``
+        Maintain the metrics registry, per-tenant counters, and device
+        tick-counter accumulation.  Host-side only; on by default.
+    ``trace``
+        Emit request-lifecycle span events onto the ring buffer for
+        Chrome-trace export.  Off by default (it adds per-event
+        ``perf_counter`` calls on the submit/admit/retire paths).
+    ``trace_capacity``
+        Ring-buffer size; the oldest events are dropped (and counted)
+        beyond this.
+    """
+
+    metrics: bool = True
+    trace: bool = False
+    trace_capacity: int = 4096
+
+    def __post_init__(self):
+        if self.trace_capacity < 1:
+            raise ValueError(
+                f"trace_capacity {self.trace_capacity} < 1")
+
+
+__all__ = [
+    "ObservabilityConfig",
+    # registry
+    "MetricsRegistry", "Counter", "Gauge", "Histogram", "Pow2Histogram",
+    "pow2_bucket", "validate_prometheus",
+    # trace
+    "Tracer", "validate_chrome_trace", "slot_lane",
+    "QUEUE_LANE", "TICK_LANE", "SLOT_LANE0",
+    # rooflines
+    "profile_kernels", "profile_serving_kernels", "KernelProfiler",
+    "KernelProfile", "PEAK_FLOPS", "HBM_BW",
+]

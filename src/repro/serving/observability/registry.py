@@ -1,0 +1,335 @@
+"""Metrics registry: counters, gauges, and power-of-two histograms behind
+one snapshot/export surface.
+
+Every ad-hoc stat the serving stack grew (``ResilienceStats`` counters,
+``PrefixStats``, the engine's ``host_syncs``/``tokens_out``/
+``tick_width_counts``) renders through this module now — one schema, two
+exporters:
+
+  * :meth:`MetricsRegistry.collect` — a nested, JSON-able snapshot
+    (serialized through ``checkpoint.io``'s numpy-tolerant encoder, so
+    numpy scalars riding in from engine state never crash an export);
+  * :meth:`MetricsRegistry.to_prometheus` — Prometheus text exposition
+    (counters/gauges as-is, pow-2 histograms as cumulative ``le`` buckets).
+
+Design constraints, in order:
+
+  1. **Zero hot-path cost when idle.**  Gauges are *callbacks* evaluated at
+     collect time — registering one costs nothing per tick.  Counters are
+     a dict add.  Nothing allocates per tick.
+  2. **Label support** for the per-tenant / per-shard-pool breakdowns the
+     multi-tenant engine needs (``tokens_total{tenant="3"}``,
+     ``shard_pool_utilization{pool="blocks/attn/q"}``).
+  3. **One histogram implementation.**  :class:`Pow2Histogram` is the
+     power-of-two bucketing that ``resilience.policy`` used to hand-roll —
+     same bucket-key format (``"0"``, ``"1"``, ``"2-3"``, ``"4-7"`` …), so
+     existing telemetry consumers keep parsing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple, Union
+
+LabelKey = Tuple[str, ...]
+
+
+def pow2_bucket(v: int) -> str:
+    """Bucket key for value ``v``: ``"0"``, ``"1"``, ``"2-3"``, ``"4-7"``…
+    (negative values clamp to 0)."""
+    v = max(0, int(v))
+    if v <= 1:
+        return str(v)
+    lo = 1 << (v.bit_length() - 1)
+    return f"{lo}-{2 * lo - 1}"
+
+
+def _bucket_upper(key: str) -> int:
+    """Inclusive upper bound of a pow-2 bucket key (for ``le`` export)."""
+    return int(key.split("-")[-1])
+
+
+class Pow2Histogram:
+    """Power-of-two bucket histogram over non-negative integers.
+
+    Stores bucket counts plus the running count/sum — O(buckets) memory
+    regardless of how many values were observed (the raw lists the old
+    ``resilience.policy._histogram`` kept are gone)."""
+
+    __slots__ = ("buckets", "count", "sum")
+
+    def __init__(self):
+        self.buckets: Dict[str, int] = {}
+        self.count = 0
+        self.sum = 0
+
+    def observe(self, v: int):
+        v = max(0, int(v))
+        key = pow2_bucket(v)
+        self.buckets[key] = self.buckets.get(key, 0) + 1
+        self.count += 1
+        self.sum += v
+
+    @classmethod
+    def from_values(cls, values: Iterable[int]) -> "Pow2Histogram":
+        h = cls()
+        for v in values:
+            h.observe(v)
+        return h
+
+    def to_dict(self) -> Dict[str, int]:
+        """The legacy wire format: ``{bucket_key: count}``."""
+        return dict(self.buckets)
+
+    def state_dict(self) -> Dict[str, object]:
+        return {"buckets": dict(self.buckets), "count": self.count,
+                "sum": self.sum}
+
+    def load_state_dict(self, state: Mapping[str, object]):
+        self.buckets = {str(k): int(v)
+                        for k, v in dict(state["buckets"]).items()}
+        self.count = int(state["count"])
+        self.sum = int(state["sum"])
+
+    def __eq__(self, other):
+        return (isinstance(other, Pow2Histogram)
+                and self.buckets == other.buckets
+                and self.count == other.count and self.sum == other.sum)
+
+    def __repr__(self):
+        return f"Pow2Histogram({self.buckets})"
+
+
+def _label_key(labelnames: Sequence[str], labels: Mapping[str, object]
+               ) -> LabelKey:
+    assert set(labels) == set(labelnames), \
+        f"labels {sorted(labels)} != declared {sorted(labelnames)}"
+    return tuple(str(labels[n]) for n in labelnames)
+
+
+@dataclasses.dataclass
+class _Metric:
+    name: str
+    kind: str
+    help: str
+    labelnames: Tuple[str, ...]
+
+
+class Counter(_Metric):
+    """Monotonic counter, optionally labelled.  ``fn`` mirrors a counter
+    that lives elsewhere (e.g. a ``ResilienceStats`` field): a zero-arg
+    callback returning the current scalar / labelled dict, read at
+    collect time."""
+
+    def __init__(self, name, help="", labelnames=(), fn=None):
+        super().__init__(name, "counter", help, tuple(labelnames))
+        self._series: Dict[LabelKey, float] = {}
+        self._fn: Optional[Callable] = fn
+
+    def inc(self, n: Union[int, float] = 1, **labels):
+        assert self._fn is None, f"counter {self.name} is callback-backed"
+        assert n >= 0, f"counter {self.name} decremented by {n}"
+        key = _label_key(self.labelnames, labels)
+        self._series[key] = self._series.get(key, 0) + n
+
+    def value(self, **labels) -> float:
+        return self.series().get(_label_key(self.labelnames, labels), 0)
+
+    def total(self) -> float:
+        return sum(self.series().values())
+
+    def series(self) -> Dict[LabelKey, float]:
+        if self._fn is None:
+            return dict(self._series)
+        out = self._fn()
+        if not isinstance(out, Mapping):
+            assert not self.labelnames, \
+                f"counter {self.name} declared labels but fn returned scalar"
+            return {(): out}
+        return {tuple(str(x) for x in (k if isinstance(k, tuple) else (k,))):
+                v for k, v in out.items()}
+
+
+class Gauge(_Metric):
+    """Instantaneous value.  Either ``set()`` explicitly or register a
+    zero-arg callback returning a scalar (no labels) / ``{label_tuple:
+    value}`` (labelled) — evaluated lazily at collect time, so a gauge
+    over live engine state costs nothing per tick."""
+
+    def __init__(self, name, help="", labelnames=(), fn=None):
+        super().__init__(name, "gauge", help, tuple(labelnames))
+        self._series: Dict[LabelKey, float] = {}
+        self._fn: Optional[Callable] = fn
+
+    def set(self, v, **labels):
+        self._series[_label_key(self.labelnames, labels)] = v
+
+    def series(self) -> Dict[LabelKey, float]:
+        if self._fn is None:
+            return dict(self._series)
+        out = self._fn()
+        if not isinstance(out, Mapping):
+            assert not self.labelnames, \
+                f"gauge {self.name} declared labels but fn returned scalar"
+            return {(): out}
+        return {tuple(str(x) for x in (k if isinstance(k, tuple) else (k,))):
+                v for k, v in out.items()}
+
+
+class Histogram(_Metric):
+    """Labelled family of :class:`Pow2Histogram`.  ``fn`` may supply the
+    series lazily (returning ``{label_tuple: Pow2Histogram}``) for stores
+    that live elsewhere — e.g. ``ResilienceStats``."""
+
+    def __init__(self, name, help="", labelnames=(), fn=None):
+        super().__init__(name, "histogram", help, tuple(labelnames))
+        self._series: Dict[LabelKey, Pow2Histogram] = {}
+        self._fn: Optional[Callable] = fn
+
+    def observe(self, v: int, **labels):
+        key = _label_key(self.labelnames, labels)
+        if key not in self._series:
+            self._series[key] = Pow2Histogram()
+        self._series[key].observe(v)
+
+    def series(self) -> Dict[LabelKey, Pow2Histogram]:
+        if self._fn is None:
+            return dict(self._series)
+        out = self._fn()
+        return {tuple(str(x) for x in (k if isinstance(k, tuple) else (k,))):
+                h for k, h in out.items()}
+
+
+class MetricsRegistry:
+    """A named collection of metrics with snapshot + Prometheus export."""
+
+    def __init__(self):
+        self._metrics: Dict[str, _Metric] = {}
+
+    def _register(self, metric: _Metric):
+        prev = self._metrics.get(metric.name)
+        if prev is not None:
+            assert prev.kind == metric.kind and \
+                prev.labelnames == metric.labelnames, \
+                f"metric {metric.name} re-registered with a different schema"
+            return prev
+        self._metrics[metric.name] = metric
+        return metric
+
+    def counter(self, name, help="", labelnames=(), fn=None) -> Counter:
+        return self._register(Counter(name, help, labelnames, fn=fn))
+
+    def gauge(self, name, help="", labelnames=(), fn=None) -> Gauge:
+        return self._register(Gauge(name, help, labelnames, fn=fn))
+
+    def histogram(self, name, help="", labelnames=(), fn=None) -> Histogram:
+        return self._register(Histogram(name, help, labelnames, fn=fn))
+
+    def __contains__(self, name):
+        return name in self._metrics
+
+    def __getitem__(self, name) -> _Metric:
+        return self._metrics[name]
+
+    # ------------------------------------------------------------------
+    # exporters
+    # ------------------------------------------------------------------
+
+    def collect(self) -> Dict[str, dict]:
+        """Nested JSON-able snapshot: ``{name: {kind, help, series: [
+        {labels: {...}, value | buckets/count/sum}]}}`` (gauge callbacks
+        evaluated now)."""
+        out: Dict[str, dict] = {}
+        for name, m in sorted(self._metrics.items()):
+            series = []
+            for key, v in sorted(m.series().items()):
+                entry: Dict[str, object] = {
+                    "labels": dict(zip(m.labelnames, key))}
+                if isinstance(v, Pow2Histogram):
+                    entry.update(buckets=v.to_dict(), count=v.count,
+                                 sum=v.sum)
+                else:
+                    entry["value"] = v
+                series.append(entry)
+            out[name] = {"kind": m.kind, "help": m.help, "series": series}
+        return out
+
+    def to_prometheus(self) -> str:
+        """Prometheus text exposition format (0.0.4).  Pow-2 histograms
+        export as cumulative ``_bucket{le=...}`` series plus ``_sum`` /
+        ``_count``."""
+        lines: List[str] = []
+        for name, m in sorted(self._metrics.items()):
+            if m.help:
+                lines.append(f"# HELP {name} {m.help}")
+            lines.append(f"# TYPE {name} {m.kind}")
+            for key, v in sorted(m.series().items()):
+                base = dict(zip(m.labelnames, key))
+                if isinstance(v, Pow2Histogram):
+                    uppers = sorted(v.buckets, key=_bucket_upper)
+                    cum = 0
+                    for bk in uppers:
+                        cum += v.buckets[bk]
+                        lines.append(_prom_line(
+                            f"{name}_bucket",
+                            {**base, "le": str(_bucket_upper(bk))}, cum))
+                    lines.append(_prom_line(f"{name}_bucket",
+                                            {**base, "le": "+Inf"}, v.count))
+                    lines.append(_prom_line(f"{name}_sum", base, v.sum))
+                    lines.append(_prom_line(f"{name}_count", base, v.count))
+                else:
+                    lines.append(_prom_line(name, base, v))
+        return "\n".join(lines) + "\n"
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        """Snapshot as JSON via the checkpoint numpy-tolerant encoder."""
+        from ...checkpoint.io import json_dumps
+        return json_dumps(self.collect(), indent=indent)
+
+
+def _prom_line(name: str, labels: Mapping[str, str], value) -> str:
+    if labels:
+        inner = ",".join(f'{k}="{_escape(str(v))}"'
+                         for k, v in sorted(labels.items()))
+        return f"{name}{{{inner}}} {_prom_num(value)}"
+    return f"{name} {_prom_num(value)}"
+
+
+def _escape(s: str) -> str:
+    return s.replace("\\", r"\\").replace('"', r'\"').replace("\n", r"\n")
+
+
+def _prom_num(v) -> str:
+    f = float(v)
+    if f == int(f) and abs(f) < 1e15:
+        return str(int(f))
+    return repr(f)
+
+
+_PROM_NAME = r"[a-zA-Z_:][a-zA-Z0-9_:]*"
+
+
+def validate_prometheus(text: str) -> int:
+    """Minimal exposition-format parser: raises ``ValueError`` on a line
+    that is neither a comment nor ``name{labels} value``; returns the
+    number of samples parsed.  The test/CI gate that ``metrics.prom``
+    actually parses."""
+    import re
+    sample = re.compile(
+        rf"^{_PROM_NAME}"                                  # metric name
+        r'(\{[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*"'     # first label
+        r'(,[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*")*\})?'  # more labels
+        r"\s[-+0-9.eEinfa]+$")                             # value
+    n = 0
+    for i, line in enumerate(text.splitlines()):
+        if not line or line.startswith("#"):
+            continue
+        if not sample.match(line):
+            raise ValueError(f"line {i + 1} is not a prometheus sample: "
+                             f"{line!r}")
+        float(line.rsplit(" ", 1)[1])      # value must be numeric
+        n += 1
+    return n
+
+
+__all__ = ["MetricsRegistry", "Counter", "Gauge", "Histogram",
+           "Pow2Histogram", "pow2_bucket", "validate_prometheus"]

@@ -1,0 +1,289 @@
+"""Kernel-level roofline profiling hooks.
+
+:func:`profile_kernels` yields a :class:`KernelProfiler` that measures any
+jitted kernel out-of-graph: wall time over warmed repeats (every output
+``block_until_ready``), XLA ``cost_analysis()`` flops / bytes from the
+compiled executable, and the caller's **analytic** flops/bytes model.  From
+those it reports the roofline position:
+
+  * ``t_compute = analytic_flops / peak_flops`` and
+    ``t_memory = analytic_bytes / hbm_bw`` — the two analytic bounds;
+  * ``bound`` — which side of the ridge the kernel sits on;
+  * ``roofline_frac = max(t_compute, t_memory) / wall`` — the achieved
+    fraction of the analytic bound (1.0 = running at the roofline).
+
+:func:`profile_serving_kernels` is the serving battery: it profiles the
+four Pallas families on the engine's *actual* shapes — ``bgmv_shrink_mos``
+/ ``bgmv_expand_mos`` (pool-resident adapter delta), ``paged_decode_pallas``
+/ ``paged_chunk_pallas`` (KV page walk) and ``topk_topp_pallas`` (sampling
+filter) — and lands the report in ``BENCH_serving.json`` via
+``benchmarks/bench_serving.py``.
+
+Methodology notes:
+
+  * the profiler runs kernels **standalone**, not by monkeypatching the
+    engine's call sites: ``multi_tenant`` binds ``bgmv_mos`` at import
+    time and the serving calls sit inside one fused jit where a wrapper
+    would measure trace time, not run time.  Standalone timing on the
+    same shapes is the honest measurement.
+  * off-TPU (interpret-mode Pallas on CPU) the achieved fractions are
+    tiny and only the *relative* numbers mean anything; the analytic
+    fields and the report structure are what CI pins.  On a real TPU the
+    same battery reports true roofline fractions.
+  * peak/bandwidth defaults are the TPU v5e numbers used by
+    ``launch.dryrun`` (197 Tflop/s bf16, 819 GB/s HBM).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# TPU v5e, per chip — keep in sync with launch.dryrun
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # B/s
+
+
+def _cost_analysis(compiled) -> Dict[str, float]:
+    """Version-tolerant ``cost_analysis`` (older jax returns a per-device
+    list; may be absent/empty for some backends)."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
+@dataclasses.dataclass
+class KernelProfile:
+    """One profiled kernel: measured wall/cost, analytic model, roofline."""
+
+    name: str
+    shapes: str
+    wall_s: float                  # best-of-repeats wall seconds per call
+    wall_s_mean: float
+    repeats: int
+    flops: float                   # XLA cost_analysis (0 when unavailable)
+    bytes_accessed: float
+    analytic_flops: float
+    analytic_bytes: float
+    t_compute_s: float
+    t_memory_s: float
+    bound: str                     # "compute" | "memory"
+    roofline_frac: float           # analytic-bound time / measured wall
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+class KernelProfiler:
+    """Collects :class:`KernelProfile` records via :meth:`profile`."""
+
+    def __init__(self, peak_flops: float = PEAK_FLOPS,
+                 hbm_bw: float = HBM_BW, warmup: int = 1, repeats: int = 3):
+        assert warmup >= 1 and repeats >= 1
+        self.peak_flops, self.hbm_bw = peak_flops, hbm_bw
+        self.warmup, self.repeats = warmup, repeats
+        self.profiles: List[KernelProfile] = []
+
+    def profile(self, name: str, fn: Callable, args: Tuple,
+                kwargs: Optional[Dict[str, Any]] = None, *,
+                analytic_flops: float, analytic_bytes: float,
+                ) -> KernelProfile:
+        """Measure one kernel call.  ``fn`` must be jit-wrapped (have
+        ``.lower``); plain functions are wrapped on the fly."""
+        kwargs = kwargs or {}
+        if not hasattr(fn, "lower"):
+            fn = jax.jit(fn, static_argnames=tuple(
+                k for k, v in kwargs.items()
+                if isinstance(v, (bool, int, float, str, type(None)))))
+        ca = _cost_analysis(fn.lower(*args, **kwargs).compile())
+        for _ in range(self.warmup):
+            jax.block_until_ready(fn(*args, **kwargs))
+        walls = []
+        for _ in range(self.repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args, **kwargs))
+            walls.append(time.perf_counter() - t0)
+        wall = min(walls)
+        t_c = analytic_flops / self.peak_flops
+        t_m = analytic_bytes / self.hbm_bw
+        prof = KernelProfile(
+            name=name,
+            shapes=", ".join(f"{np.shape(a)}" for a in args),
+            wall_s=wall, wall_s_mean=sum(walls) / len(walls),
+            repeats=self.repeats,
+            flops=float(ca.get("flops", 0.0)),
+            bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+            analytic_flops=float(analytic_flops),
+            analytic_bytes=float(analytic_bytes),
+            t_compute_s=t_c, t_memory_s=t_m,
+            bound="compute" if t_c >= t_m else "memory",
+            roofline_frac=max(t_c, t_m) / wall if wall > 0 else 0.0,
+        )
+        self.profiles.append(prof)
+        return prof
+
+    def report(self) -> Dict[str, Any]:
+        return {p.name: p.as_dict() for p in self.profiles}
+
+
+@contextlib.contextmanager
+def profile_kernels(peak_flops: float = PEAK_FLOPS, hbm_bw: float = HBM_BW,
+                    warmup: int = 1, repeats: int = 3):
+    """``with profile_kernels() as prof: prof.profile(...)`` — the hook
+    benchmarks and operators wrap kernel calls in."""
+    yield KernelProfiler(peak_flops=peak_flops, hbm_bw=hbm_bw,
+                         warmup=warmup, repeats=repeats)
+
+
+# ---------------------------------------------------------------------------
+# analytic bytes/flops models (itemsize 4: the serving stack runs f32 KV
+# and f32 pools in tests/bench; pass itemsize=2 for bf16 deployments)
+# ---------------------------------------------------------------------------
+
+def analytic_bgmv_shrink_mos(B, h, r, itemsize=4) -> Tuple[float, float]:
+    """x (B, h) · Aᵀ (r, h gathered from pools) → u (B, r)."""
+    flops = 2.0 * B * r * h
+    bytes_ = itemsize * (B * h + B * r * h + B * r)   # x + gathered A + u
+    return flops, bytes_
+
+
+def analytic_bgmv_expand_mos(B, r, o, itemsize=4) -> Tuple[float, float]:
+    """u (B, r) · B (r, o gathered from pools) → y (B, o)."""
+    flops = 2.0 * B * r * o
+    bytes_ = itemsize * (B * r + B * r * o + B * o)
+    return flops, bytes_
+
+
+def analytic_paged_attention(B, Q, KVp, G, hd, ctx, page_size,
+                             itemsize=4) -> Tuple[float, float]:
+    """Q query tokens per sequence attending over ``ctx`` paged KV tokens:
+    QKᵀ + PV flops, and K/V page traffic rounded up to whole pages."""
+    flops = 2.0 * 2.0 * B * Q * KVp * G * hd * ctx
+    pages = -(-ctx // page_size)
+    bytes_ = itemsize * (2 * B * Q * KVp * G * hd            # q + out
+                         + 2 * B * pages * page_size * KVp * hd)   # k + v
+    return flops, bytes_
+
+
+def analytic_topk_topp(S, V, itemsize=4) -> Tuple[float, float]:
+    """Bit-search filter over (S, V) logits: HBM traffic is one read and
+    one write of the row (the 31-step search runs in VMEM); count the
+    O(V) per-step compare/accumulate work as flops."""
+    flops = 2.0 * 31 * S * V
+    bytes_ = itemsize * 2 * S * V
+    return flops, bytes_
+
+
+# ---------------------------------------------------------------------------
+# the serving battery
+# ---------------------------------------------------------------------------
+
+def profile_serving_kernels(engine, warmup: int = 1, repeats: int = 3,
+                            peak_flops: float = PEAK_FLOPS,
+                            hbm_bw: float = HBM_BW) -> Dict[str, Any]:
+    """Profile the serving stack's Pallas kernel families on ``engine``'s
+    actual shapes (pools, page geometry, slot count, vocab) and return
+    ``{kernel: KernelProfile dict}`` — the ``kernel_roofline`` section of
+    ``BENCH_serving.json``."""
+    from ...kernels.bgmv.kernel import bgmv_expand_mos, bgmv_shrink_mos
+    from ...kernels.paged_attention.kernel import (paged_chunk_pallas,
+                                                   paged_decode_pallas)
+    from ...kernels.sampling.kernel import topk_topp_pallas
+
+    model, cache = engine.model, engine.cache
+    interp = {"interpret": True}
+    B, Q = engine.slots, engine.chunk
+    rng = np.random.default_rng(0)
+
+    with profile_kernels(peak_flops=peak_flops, hbm_bw=hbm_bw,
+                         warmup=warmup, repeats=repeats) as prof:
+        # --- BGMV (pool-resident MoS adapter delta), decode shape -------
+        name = next((n for n, st in engine.ad_stack["static"].items()
+                     if "idx_a" in st), None)
+        if name is not None:
+            tr = engine.ad_stack["trainable"][name]
+            sst = engine.ad_stack["static"][name]
+            g = model.plan.geoms[name]
+            a_pool = sst.get("a_pool_lanes", tr["a_pool"])
+            b_pool = sst.get("b_pool_lanes", tr["b_pool"])
+            h = int(g.l * g.shard_len_a)
+            o = int(g.l * g.shard_len_b)
+            x = jnp.asarray(rng.standard_normal((B, h)), jnp.float32)
+            ids = jnp.asarray(rng.integers(0, engine.tenants, B), jnp.int32)
+            idx_a = jnp.asarray(sst["idx_a"][0])
+            idx_b = jnp.asarray(sst["idx_b"][0])
+            f, by = analytic_bgmv_shrink_mos(B, h, g.r)
+            prof.profile("bgmv_shrink_mos", bgmv_shrink_mos,
+                         (x, a_pool, ids, idx_a), interp,
+                         analytic_flops=f, analytic_bytes=by)
+            u = jnp.asarray(rng.standard_normal((B, g.r)), jnp.float32)
+            f, by = analytic_bgmv_expand_mos(B, g.r, o)
+            prof.profile("bgmv_expand_mos", bgmv_expand_mos,
+                         (u, b_pool, ids, idx_b),
+                         {**interp, "shard_len": g.shard_len_b},
+                         analytic_flops=f, analytic_bytes=by)
+
+        # --- paged attention (decode + chunk page walks) ----------------
+        kp = next((leaf for path, leaf in
+                   jax.tree_util.tree_leaves_with_path(cache)
+                   if getattr(path[-1], "key", None) == "kp"), None)
+        if kp is not None and engine.paged:
+            P, ps, KVp, hd = kp.shape[-4:]
+            kpages = jnp.asarray(
+                rng.standard_normal((P, ps, KVp, hd)), jnp.float32)
+            vpages = jnp.asarray(
+                rng.standard_normal((P, ps, KVp, hd)), jnp.float32)
+            mp = engine.pages.max_pages_per_slot
+            ctx_pages = min(mp, max(1, (P - 1) // max(1, B)))
+            ctx = ctx_pages * ps
+            bt = np.zeros((B, mp), np.int32)
+            for b in range(B):                  # disjoint in-bounds pages
+                bt[b, :ctx_pages] = 1 + (np.arange(ctx_pages)
+                                         + b * ctx_pages) % (P - 1)
+            bt_j = jnp.asarray(bt)
+            G = max(1, int(getattr(model.cfg, "group_size", 1)))
+            q1 = jnp.asarray(
+                rng.standard_normal((B, KVp, G, hd)), jnp.float32)
+            pos1 = jnp.full((B,), ctx - 1, jnp.int32)
+            f, by = analytic_paged_attention(B, 1, KVp, G, hd, ctx, ps)
+            prof.profile("paged_decode_pallas", paged_decode_pallas,
+                         (q1, kpages, vpages, bt_j, pos1),
+                         {"window": 0, **interp},
+                         analytic_flops=f, analytic_bytes=by)
+            qc = jnp.asarray(
+                rng.standard_normal((B, Q, KVp, G, hd)), jnp.float32)
+            posc = jnp.broadcast_to(
+                jnp.arange(Q, dtype=jnp.int32)[None, :]
+                + (ctx - Q), (B, Q)).astype(jnp.int32)
+            f, by = analytic_paged_attention(B, Q, KVp, G, hd, ctx, ps)
+            prof.profile("paged_chunk_pallas", paged_chunk_pallas,
+                         (qc, kpages, vpages, bt_j, posc),
+                         {"window": 0, **interp},
+                         analytic_flops=f, analytic_bytes=by)
+
+        # --- sampling filter --------------------------------------------
+        V = model.cfg.vocab_size
+        logits = jnp.asarray(rng.standard_normal((B, V)), jnp.float32)
+        top_k = jnp.full((B,), max(2, min(40, V // 2)), jnp.int32)
+        top_p = jnp.full((B,), 0.9, jnp.float32)
+        f, by = analytic_topk_topp(B, V)
+        prof.profile("topk_topp_pallas", topk_topp_pallas,
+                     (logits, top_k, top_p), interp,
+                     analytic_flops=f, analytic_bytes=by)
+
+    return prof.report()
+
+
+__all__ = ["profile_kernels", "profile_serving_kernels", "KernelProfiler",
+           "KernelProfile", "analytic_bgmv_shrink_mos",
+           "analytic_bgmv_expand_mos", "analytic_paged_attention",
+           "analytic_topk_topp", "PEAK_FLOPS", "HBM_BW"]

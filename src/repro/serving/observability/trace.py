@@ -1,0 +1,152 @@
+"""Request-lifecycle tracer with a Chrome-trace / Perfetto exporter.
+
+The engine emits structured span events as requests move through their
+lifecycle (submit → admit → prefill-chunk×N → decode → retire, plus the
+preempt / requeue / quarantine / cancel edges the resilience layer adds)
+onto a bounded ring buffer.  :meth:`Tracer.to_chrome` renders the buffer
+in the Chrome trace-event JSON format — load it at ``chrome://tracing``
+or https://ui.perfetto.dev to see the tick timeline with one lane per
+engine slot plus queue and tick lanes.
+
+Lane model (all under one pid):
+
+  * tid ``0``      — ``queue``: one ``queued`` span per request covering
+    submit→admit (or submit→failure), plus submit/requeue instants;
+  * tid ``1``      — ``ticks``: one span per macro tick (covers the
+    fused-step dispatch + host drain), args carry the packed width;
+  * tid ``2 + s`` — ``slot s``: a ``req <id>`` span covering the whole
+    residency, with per-tick ``prefill`` / ``decode`` child spans and
+    instant markers for the resilience edges.
+
+The buffer is a ``deque(maxlen=capacity)``: a long-running engine keeps
+the most recent events and counts what it dropped rather than growing
+without bound.  Timestamps are wall-clock microseconds from a
+``perf_counter`` epoch captured at construction.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Dict, Iterable, List, Optional
+
+QUEUE_LANE = 0
+TICK_LANE = 1
+SLOT_LANE0 = 2          # slot s renders on lane SLOT_LANE0 + s
+_PID = 1
+
+
+def slot_lane(slot: int) -> int:
+    return SLOT_LANE0 + int(slot)
+
+
+class Tracer:
+    """Bounded ring buffer of Chrome trace events."""
+
+    def __init__(self, capacity: int = 4096):
+        if capacity < 1:
+            raise ValueError(f"trace capacity {capacity} < 1")
+        self.capacity = capacity
+        self._events: deque = deque(maxlen=capacity)
+        self.dropped = 0
+        self._t0 = time.perf_counter()
+
+    def __len__(self):
+        return len(self._events)
+
+    def now_us(self) -> float:
+        return (time.perf_counter() - self._t0) * 1e6
+
+    def _push(self, ev: dict):
+        if len(self._events) == self.capacity:
+            self.dropped += 1
+        self._events.append(ev)
+
+    def complete(self, name: str, lane: int, ts_us: float, dur_us: float,
+                 **args):
+        """A ``ph="X"`` complete span: ``[ts, ts+dur]`` on ``lane``."""
+        self._push({"name": name, "ph": "X", "ts": ts_us,
+                    "dur": max(0.0, dur_us), "pid": _PID, "tid": int(lane),
+                    "args": args})
+
+    def instant(self, name: str, lane: int, ts_us: Optional[float] = None,
+                **args):
+        """A ``ph="i"`` thread-scoped instant marker."""
+        self._push({"name": name, "ph": "i", "s": "t",
+                    "ts": self.now_us() if ts_us is None else ts_us,
+                    "pid": _PID, "tid": int(lane), "args": args})
+
+    def events(self) -> List[dict]:
+        return list(self._events)
+
+    def to_chrome(self, slots: int = 0) -> dict:
+        """The full trace-event JSON object (metadata + buffered events).
+
+        ``slots`` adds thread-name metadata for that many slot lanes even
+        if some emitted no events, so Perfetto shows the engine's real
+        slot count."""
+        meta: List[dict] = [
+            {"name": "process_name", "ph": "M", "pid": _PID, "tid": 0,
+             "args": {"name": "serving-engine"}},
+            {"name": "thread_name", "ph": "M", "pid": _PID,
+             "tid": QUEUE_LANE, "args": {"name": "queue"}},
+            {"name": "thread_name", "ph": "M", "pid": _PID,
+             "tid": TICK_LANE, "args": {"name": "ticks"}},
+        ]
+        lanes = {e["tid"] for e in self._events if e["tid"] >= SLOT_LANE0}
+        lanes.update(slot_lane(s) for s in range(slots))
+        for lane in sorted(lanes):
+            meta.append({"name": "thread_name", "ph": "M", "pid": _PID,
+                         "tid": lane,
+                         "args": {"name": f"slot {lane - SLOT_LANE0}"}})
+        return {"traceEvents": meta + self.events(),
+                "displayTimeUnit": "ms",
+                "otherData": {"dropped_events": self.dropped}}
+
+
+_PHASES = {
+    "X": {"name", "ph", "ts", "dur", "pid", "tid"},
+    "i": {"name", "ph", "ts", "pid", "tid"},
+    "M": {"name", "ph", "pid", "tid", "args"},
+    "B": {"name", "ph", "ts", "pid", "tid"},
+    "E": {"ph", "ts", "pid", "tid"},
+    "C": {"name", "ph", "ts", "pid", "tid"},
+}
+
+
+def validate_chrome_trace(obj: dict) -> int:
+    """Check ``obj`` against the trace-event JSON schema (the subset the
+    Chrome/Perfetto loaders require): a ``traceEvents`` list whose entries
+    carry the mandatory fields for their phase, numeric non-negative
+    timestamps/durations, and JSON-able ``args``.  Returns the number of
+    non-metadata events; raises ``ValueError`` on the first violation."""
+    import json as _json
+
+    if not isinstance(obj, dict) or "traceEvents" not in obj:
+        raise ValueError("trace object lacks a traceEvents list")
+    evs = obj["traceEvents"]
+    if not isinstance(evs, list):
+        raise ValueError("traceEvents is not a list")
+    n = 0
+    for i, e in enumerate(evs):
+        if not isinstance(e, dict):
+            raise ValueError(f"event {i} is not an object")
+        ph = e.get("ph")
+        if ph not in _PHASES:
+            raise ValueError(f"event {i} has unknown phase {ph!r}")
+        missing = _PHASES[ph] - set(e)
+        if missing:
+            raise ValueError(f"event {i} (ph={ph}) missing {sorted(missing)}")
+        for field in ("ts", "dur"):
+            if field in e:
+                v = e[field]
+                if not isinstance(v, (int, float)) or v < 0:
+                    raise ValueError(f"event {i} field {field}={v!r}")
+        if "args" in e:
+            _json.dumps(e["args"])       # must be JSON-able as-is
+        if ph != "M":
+            n += 1
+    return n
+
+
+__all__ = ["Tracer", "validate_chrome_trace", "slot_lane",
+           "QUEUE_LANE", "TICK_LANE", "SLOT_LANE0"]

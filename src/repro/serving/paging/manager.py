@@ -397,6 +397,24 @@ class PagePool:
         self._cached.discard(page)
         self._push_free(page)
 
+    def metrics(self) -> Dict[str, object]:
+        """Instantaneous pool gauges, registry-ready (``serving.
+        observability`` re-exports them under ``pages_*``): free /
+        available / reclaimable counts, the unbacked-promise ledger, and
+        the sharing footprint."""
+        alloc = self.num_pages - 1          # allocatable (minus trash)
+        return {
+            "num_pages": self.num_pages,
+            "free_pages": self.free_pages,
+            "available": self.available,
+            "evictable_pages": self.evictable_pages,
+            "unbacked_reserved": self.unbacked_total(),
+            "cached_pages": len(self._cached),
+            "resident_unique_pages": self.resident_unique_pages(),
+            "shared_mapped_pages": self.shared_mapped(),
+            "occupancy": (alloc - self.free_pages) / max(1, alloc),
+        }
+
     # ------------------------------------------------------------------
     # snapshot/restore (serving.resilience.snapshot)
     # ------------------------------------------------------------------

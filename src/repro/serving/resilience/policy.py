@@ -30,6 +30,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from ..observability.registry import Pow2Histogram
+
 
 @dataclasses.dataclass(frozen=True)
 class ResilienceConfig:
@@ -80,20 +82,6 @@ def select_victim(candidates: Sequence[VictimCandidate],
     return best.slot
 
 
-def _histogram(values: Sequence[int]) -> Dict[str, int]:
-    """Power-of-two tick buckets: ``{"0": n, "1": n, "2-3": n, ...}``."""
-    out: Dict[str, int] = {}
-    for v in values:
-        v = max(0, int(v))
-        if v <= 1:
-            key = str(v)
-        else:
-            lo = 1 << (v.bit_length() - 1)
-            key = f"{lo}-{2 * lo - 1}"
-        out[key] = out.get(key, 0) + 1
-    return out
-
-
 @dataclasses.dataclass
 class ResilienceStats:
     """Cumulative resilience counters (``ServingEngine.
@@ -115,9 +103,10 @@ class ResilienceStats:
         d = {f.name: getattr(self, f.name)
              for f in dataclasses.fields(self)
              if f.name not in ("time_in_queue", "time_to_first_preemption")}
-        d["time_in_queue_hist"] = _histogram(self.time_in_queue)
-        d["time_to_first_preemption_hist"] = _histogram(
-            self.time_to_first_preemption)
+        d["time_in_queue_hist"] = Pow2Histogram.from_values(
+            self.time_in_queue).to_dict()
+        d["time_to_first_preemption_hist"] = Pow2Histogram.from_values(
+            self.time_to_first_preemption).to_dict()
         return d
 
     def state_dict(self) -> Dict[str, object]:

@@ -1,0 +1,322 @@
+"""Unified serving telemetry: the metrics registry (counters / gauges /
+pow-2 histograms with Prometheus + JSON exporters), request-lifecycle
+tracing on a bounded ring buffer with Chrome-trace export, device-side
+tick counters, per-tenant breakdowns, MoS shard-pool gauges recounted
+against the raw routing indices, and kernel roofline profiling — all
+under the bitwise-invariance contract: toggling telemetry never changes
+the token streams or the one-executable-per-lifetime guarantee."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke
+from repro.core.types import AdapterConfig
+from repro.models import Model
+from repro.serving import (MetricsRegistry, ObservabilityConfig,
+                           Pow2Histogram, Request, SamplingParams,
+                           ServingEngine, Tracer, profile_serving_kernels,
+                           validate_chrome_trace, validate_prometheus)
+from repro.serving.observability import (QUEUE_LANE, SLOT_LANE0, TICK_LANE,
+                                         Counter, Gauge, Histogram,
+                                         KernelProfiler, pow2_bucket,
+                                         slot_lane)
+
+ACFG = AdapterConfig(method="mos", equiv_rank=2, rank=4, shards_per_vector=2,
+                     private_rank=1, dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke(get_config("granite-3-2b"))
+    m = Model(cfg, ACFG)
+    params, _ = m.init_params(jax.random.key(0))
+    states = []
+    for t in range(2):
+        st = m.init_adapter(jax.random.key(100))
+        st["trainable"] = jax.tree.map(
+            lambda v, tt=t: v + 0.02 * (tt + 1) * jax.random.normal(
+                jax.random.key(7 + tt), v.shape, v.dtype), st["trainable"])
+        states.append(st)
+    return m, params, states
+
+
+def _mk(model, **kw):
+    m, params, states = model
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("page_size", 8)
+    return ServingEngine(m, params, states, **kw)
+
+
+def _reqs(n=4, sampled=False):
+    out = []
+    for i in range(n):
+        sp = (SamplingParams(temperature=0.8, top_k=20, seed=11 + i)
+              if sampled else None)
+        out.append(Request(
+            rid=i, adapter_id=i % 2, max_new=4, sampling=sp,
+            prompt=(np.arange(6 + i, dtype=np.int32) * (i + 2)) % 90 + 4))
+    return out
+
+
+def _drain(eng, max_ticks=100):
+    fin = []
+    for _ in range(max_ticks):
+        fin += eng.step()
+        if not eng._queue and all(r is None for r in eng._active):
+            return fin
+    raise AssertionError("engine did not drain")
+
+
+def _run(eng):
+    for r in _reqs():
+        eng.submit(r)
+    return {r.rid: tuple(r.out) for r in _drain(eng)}
+
+
+# ---------------------------------------------------------------------------
+# registry units (no engine, no jit)
+# ---------------------------------------------------------------------------
+
+def test_pow2_bucket_labels():
+    assert [pow2_bucket(v) for v in (0, 1, 2, 3, 4, 7, 8)] == \
+        ["0", "1", "2-3", "2-3", "4-7", "4-7", "8-15"]
+
+
+def test_pow2_histogram_roundtrip():
+    h = Pow2Histogram()
+    for v in (1, 5, 5, 130):
+        h.observe(v)
+    assert h.count == 4 and h.sum == 141
+    assert h.to_dict() == {"1": 1, "4-7": 2, "128-255": 1}
+    h2 = Pow2Histogram()
+    h2.load_state_dict(h.state_dict())
+    assert h2 == h
+    assert Pow2Histogram.from_values([1, 5, 5, 130]) == h
+
+
+def test_registry_counters_labels_and_exporters():
+    reg = MetricsRegistry()
+    c = reg.counter("req_total", "requests", labelnames=("tenant",))
+    c.inc(tenant="0")
+    c.inc(2, tenant="1")
+    reg.gauge("depth", "queue depth", fn=lambda: 3)
+    reg.gauge("pages", "by state", labelnames=("state",),
+              fn=lambda: {("free",): 5, ("used",): 2})
+    hist = reg.histogram("lat", "ticks")
+    hist.observe(1)
+    hist.observe(6)
+    snap = reg.collect()
+    assert snap["req_total"]["kind"] == "counter"
+    series = {tuple(s["labels"].values()): s["value"]
+              for s in snap["req_total"]["series"]}
+    assert series == {("0",): 1, ("1",): 2}
+    assert snap["depth"]["series"][0]["value"] == 3
+    text = reg.to_prometheus()
+    assert validate_prometheus(text) >= 8     # 4 scalars + hist buckets
+    assert 'req_total{tenant="1"} 2' in text
+    json.loads(reg.to_json())                 # numpy-tolerant encoder path
+    # registering the same schema again returns the same object
+    assert reg.counter("req_total", "requests", labelnames=("tenant",)) is c
+    with pytest.raises(AssertionError):
+        reg.counter("req_total", "requests", labelnames=("other",))
+
+
+def test_callback_metrics_are_lazy_and_uncountable():
+    calls = []
+    reg = MetricsRegistry()
+    reg.counter("ticks", "t", fn=lambda: calls.append(1) or 7)
+    assert not calls                          # nothing until collect()
+    assert reg.collect()["ticks"]["series"][0]["value"] == 7
+    assert len(calls) == 1
+    with pytest.raises(AssertionError):
+        reg.counter("ticks", "t", fn=lambda: 7).inc()
+
+
+# ---------------------------------------------------------------------------
+# tracer units
+# ---------------------------------------------------------------------------
+
+def test_tracer_ring_buffer_and_chrome_schema():
+    tr = Tracer(capacity=4)
+    tr.instant("submit", QUEUE_LANE, ts_us=0.0, rid=0)
+    for i in range(5):
+        tr.complete("tick", TICK_LANE, ts_us=float(i), dur_us=1.0, width=1)
+    assert len(tr.events()) == 4 and tr.dropped == 2
+    chrome = tr.to_chrome(slots=2)
+    n = validate_chrome_trace(chrome)
+    assert n == 4
+    names = {e["name"] for e in chrome["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert names                              # lane metadata present
+    assert slot_lane(0) == SLOT_LANE0 and slot_lane(3) == SLOT_LANE0 + 3
+
+
+def test_tracer_rejects_unjsonable_args():
+    tr = Tracer()
+    tr.instant("bad", QUEUE_LANE, ts_us=0.0, obj=np.int32(3))
+    with pytest.raises((TypeError, AssertionError)):
+        validate_chrome_trace(tr.to_chrome())
+
+
+def test_observability_config_validation():
+    with pytest.raises(ValueError):
+        ObservabilityConfig(trace_capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# engine integration: bitwise invariance + breakdowns
+# ---------------------------------------------------------------------------
+
+def test_streams_bitwise_invariant_across_telemetry_modes(model):
+    """Default (metrics on), everything off, and full tracing all produce
+    identical token streams with ONE traced executable each — telemetry
+    can never perturb the numerics."""
+    base = _run(_mk(model))
+    off = _mk(model, observability=ObservabilityConfig(metrics=False))
+    on = _mk(model, observability=ObservabilityConfig(metrics=True,
+                                                      trace=True))
+    assert _run(off) == base
+    assert _run(on) == base
+    assert len(off.unified_traces) == 1
+    assert len(on.unified_traces) == 1
+    # off: no host accumulation, no trace events
+    assert off.device_counters["tokens_emitted"] == 0
+    assert off.trace_events() == []
+    # export still yields a valid (metadata-only) chrome document
+    validate_chrome_trace(off.export_trace())
+
+
+def test_metrics_snapshot_per_tenant_and_device(model):
+    eng = _mk(model, observability=ObservabilityConfig(metrics=True))
+    out = _run(eng)
+    snap = eng.metrics()
+    assert snap["engine"]["tokens_out"] == eng.tokens_out == \
+        sum(len(v) for v in out.values())
+    # device counters come off the fused step's stats lane
+    assert snap["device"]["tokens_emitted"] == eng.tokens_out
+    assert snap["device"]["nan_trips"] == 0
+    assert snap["device"]["active_micro_steps"] >= eng.tokens_out
+    # per-tenant tokens partition the global count
+    per = snap["per_tenant"]
+    assert sum(t["tokens"] for t in per.values()) == eng.tokens_out
+    assert sum(t["submitted"] for t in per.values()) == len(out)
+    assert sum(t["completed"] for t in per.values()) == len(out)
+    assert all(t["failed"] == 0 for t in per.values())
+    assert snap["engine"]["unified_traces"] == 1
+    # exporters: Prometheus text parses, JSON round-trips
+    assert validate_prometheus(eng.metrics_prometheus()) > 20
+    assert json.loads(eng.metrics_json())["engine"]["tokens_out"] == \
+        eng.tokens_out
+
+
+def test_chrome_trace_export_schema_and_lanes(model):
+    eng = _mk(model, observability=ObservabilityConfig(trace=True))
+    _run(eng)
+    chrome = eng.export_trace()
+    n = validate_chrome_trace(chrome)
+    assert n == len(eng.trace_events()) > 0
+    names = {e["name"] for e in chrome["traceEvents"]}
+    for expected in ("submit", "queued", "admit", "tick"):
+        assert expected in names, names
+    # every slot span lives on a per-slot lane
+    tids = {e["tid"] for e in chrome["traceEvents"]
+            if e.get("ph") in ("X", "i") and e["name"].startswith("req ")}
+    assert tids and all(t >= SLOT_LANE0 for t in tids)
+    json.dumps(chrome)                        # serializes as-is
+
+
+def test_trace_to_file(model, tmp_path):
+    eng = _mk(model, observability=ObservabilityConfig(trace=True))
+    _run(eng)
+    path = tmp_path / "trace.json"
+    eng.export_trace(path)
+    assert validate_chrome_trace(json.loads(path.read_text())) > 0
+
+
+def test_shard_selection_matches_host_recount(model):
+    """The MoS shard-pool gauges must agree with a from-scratch numpy
+    recount of the frozen routing indices — pure-sharing collapse would
+    be visible here as utilization < 1 and a piled-up histogram."""
+    eng = _mk(model)
+    mos = eng.metrics()["mos"]
+    assert mos, "mos section missing for a MoS adapter"
+    for name, st in eng.ad_stack["static"].items():
+        if "idx_a" not in st:
+            continue
+        g = eng.model.plan.geoms[name]
+        for mat, key in (("a", "idx_a"), ("b", "idx_b")):
+            idx = np.asarray(st[key]).reshape(-1)
+            sel = np.bincount(idx, minlength=g.n_shards)
+            got = mos[name][mat]
+            assert got["refs"] == int(sel.sum())
+            assert got["utilization"] == pytest.approx(float(
+                (sel > 0).mean()))
+            assert got["max_selection"] == int(sel.max())
+            assert got["selection"] == {str(i): int(c)
+                                        for i, c in enumerate(sel) if c}
+            assert got["selection_hist"] == \
+                Pow2Histogram.from_values(sel).to_dict()
+            pub = int(sel[:g.n_public].sum())
+            assert got["public_ref_fraction"] == pytest.approx(
+                pub / sel.sum())
+
+
+def test_prefix_default_resolution(model):
+    """prefix_cache=None resolves to ON exactly for unified full-attention
+    engines; explicit False always wins."""
+    assert _mk(model).prefix is not None
+    assert _mk(model, prefix_cache=False).prefix is None
+    assert _mk(model, unified=False).prefix is None
+
+
+def test_prefix_hit_rate_telemetry(model):
+    eng = _mk(model)
+    r0 = Request(rid=0, adapter_id=0, max_new=2,
+                 prompt=np.arange(16, dtype=np.int32) % 90 + 4)
+    eng.submit(r0)
+    _drain(eng)
+    r1 = Request(rid=1, adapter_id=0, max_new=2,
+                 prompt=np.arange(16, dtype=np.int32) % 90 + 4)
+    eng.submit(r1)
+    _drain(eng)
+    assert tuple(r1.out) == tuple(r0.out)     # cache reuse is bitwise-safe
+    snap = eng.metrics()
+    assert snap["prefix"]["lookups"] == 2
+    assert snap["prefix"]["hits"] >= 1
+    assert snap["per_tenant"]["0"]["prefix_hit_rate"] > 0
+
+
+# ---------------------------------------------------------------------------
+# rooflines
+# ---------------------------------------------------------------------------
+
+def test_kernel_profiler_toy_matmul():
+    prof = KernelProfiler(warmup=1, repeats=2)
+    x = jnp.ones((64, 64), jnp.float32)
+    p = prof.profile("matmul", lambda a, b: a @ b, (x, x),
+                     analytic_flops=2 * 64**3,
+                     analytic_bytes=3 * 64 * 64 * 4)
+    assert p.wall_s > 0 and np.isfinite(p.wall_s)
+    assert p.analytic_flops == 2 * 64**3
+    assert p.bound in ("compute", "memory")
+    assert 0 <= p.roofline_frac
+    rep = prof.report()
+    assert set(rep) == {"matmul"}
+    json.loads(json.dumps(rep))
+
+
+def test_profile_serving_kernels_battery(model):
+    eng = _mk(model)
+    rep = profile_serving_kernels(eng, warmup=1, repeats=1)
+    assert {"bgmv_shrink_mos", "bgmv_expand_mos", "paged_decode_pallas",
+            "paged_chunk_pallas", "topk_topp_pallas"} <= set(rep)
+    for name, d in rep.items():
+        assert d["wall_s"] > 0 and np.isfinite(d["wall_s"]), name
+        assert d["analytic_flops"] > 0 and d["analytic_bytes"] > 0, name
+        assert d["roofline_frac"] >= 0, name
+        assert d["bound"] in ("compute", "memory"), name
+    json.loads(json.dumps(rep))               # BENCH-ready

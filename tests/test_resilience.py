@@ -20,8 +20,8 @@ from repro.serving import (Request, SamplingParams, ServingEngine,
                            NeverFitsError, RequestCancelled, RequestError,
                            ResilienceConfig, ResilienceStats, SlotQuarantined,
                            StarvationError, TTLExpired)
-from repro.serving.resilience.policy import (VictimCandidate, _histogram,
-                                             select_victim)
+from repro.serving.observability import Pow2Histogram
+from repro.serving.resilience.policy import VictimCandidate, select_victim
 
 ACFG = AdapterConfig(method="mos", equiv_rank=2, rank=4, shards_per_vector=2,
                      private_rank=1, dtype=jnp.float32)
@@ -117,8 +117,10 @@ def test_select_victim_ordering():
 
 
 def test_histogram_buckets():
-    h = _histogram([0, 1, 1, 2, 3, 4, 7, 8, 100])
-    assert h == {"0": 1, "1": 2, "2-3": 2, "4-7": 2, "8-15": 1, "64-127": 1}
+    h = Pow2Histogram.from_values([0, 1, 1, 2, 3, 4, 7, 8, 100])
+    assert h.to_dict() == \
+        {"0": 1, "1": 2, "2-3": 2, "4-7": 2, "8-15": 1, "64-127": 1}
+    assert h.count == 9 and h.sum == 126
 
 
 def test_fault_plan_coverage_and_determinism():
@@ -207,7 +209,8 @@ def test_cancel_queued_and_active(model):
     m = eng.resilience_metrics()
     assert m["cancellations"] == 2
     eng.pages.check_invariants()
-    assert eng.pages.free_pages == eng.num_pages - 1  # everything returned
+    cached = eng.prefix.cached_pages if eng.prefix else 0
+    assert eng.pages.free_pages + cached == eng.num_pages - 1  # all returned
     assert not eng.cancel(0)                          # already finished
 
 
@@ -221,7 +224,8 @@ def test_deadline_and_ttl_expiry(model):
     assert isinstance(fin[1].error, TTLExpired) and fin[1].out == []
     m = eng.resilience_metrics()
     assert m["deadline_expirations"] == 1 and m["ttl_expirations"] == 1
-    assert eng.pages.free_pages == eng.num_pages - 1
+    cached = eng.prefix.cached_pages if eng.prefix else 0
+    assert eng.pages.free_pages + cached == eng.num_pages - 1
 
 
 # ---------------------------------------------------------------------------
@@ -387,7 +391,8 @@ def test_nan_quarantine_isolates_poisoned_slot(model, sampled):
     assert fin[0].error is None and tuple(fin[0].out) == base
     assert eng.resilience_metrics()["quarantined_slots"] == 1
     eng.pages.check_invariants()
-    assert eng.pages.free_pages == eng.num_pages - 1  # nothing leaked
+    cached = eng.prefix.cached_pages if eng.prefix else 0
+    assert eng.pages.free_pages + cached == eng.num_pages - 1  # nothing leaked
 
 
 def test_quarantined_pages_never_enter_prefix_cache(model):

@@ -230,7 +230,8 @@ def test_engine_unified_matches_legacy_one_compile():
         done = eng.run(max_ticks=100)
         assert len(done) == 4 and all(r.done for r in reqs)
         eng.pages.check_invariants()
-        assert eng.pages.free_pages == 7          # everything released
+        cached = eng.prefix.cached_pages if eng.prefix else 0
+        assert eng.pages.free_pages + cached == 7  # everything released
         if unified:
             assert len(eng.unified_traces) == 1, len(eng.unified_traces)
             assert not pf_calls                   # no prefill call, ever
