@@ -1,0 +1,207 @@
+#!/usr/bin/env python
+"""CI perf-trajectory gate: fresh BENCH_serving.json vs the committed one.
+
+The serving benchmark has recorded its rows in ``BENCH_serving.json``
+since PR 1, but nothing ever *read* them — a regression only surfaced
+when a human diffed the file.  This gate closes the loop: CI reruns the
+benchmark (``--fast``) and fails if any row got meaningfully slower than
+the committed baseline.
+
+Matching.  Sweeps are lists of row dicts; a fresh row is matched to the
+baseline row agreeing on every IDENTITY field present (workload shape:
+tenants, batch, backend, K, …).  Rows with no baseline match — new
+sweeps, new cells — are skipped, so adding coverage never trips the
+gate; only making an EXISTING cell slower does.
+
+Comparison.  Absolute interpret-mode wall clock is meaningless across
+machines (the committed baseline and the CI runner are different
+hardware under different load), so the gate is **self-normalizing**:
+for every matched metric it computes the fresh/baseline ratio, takes
+the median ratio over all throughput metrics as the run's speed shift,
+and fails only cells whose ratio falls more than ``tol`` below that
+median — i.e. cells that regressed *relative to the rest of the
+suite*.  A uniformly slower runner moves every ratio together and
+passes; one workload getting slower than its peers does not.  Latency
+metrics (TTFT mean/max) are gated the same way against their own
+median.  With fewer than ``MIN_NORM`` matched metrics the gate falls
+back to absolute comparison at the same ``tol``.
+
+Wall-clock-free invariants (tick counts, bitwise stream equality, the
+speculative ≥2× speedup floor) are asserted exactly *inside* the bench
+— this gate only watches the wall-clock trajectory.
+
+``tol`` defaults to 10 % — right for a quiet same-machine comparison —
+and is overridable via ``REPRO_BENCH_TOL``.  CI sets a much looser
+value: the bench runs Pallas kernels in interpret mode on shared
+runners whose CPUs differ from the baseline's machine, so even
+*relative* ratios spread, and the gate there is a tripwire for
+order-of-magnitude regressions (an accidental per-tick retrace, a
+kernel falling off its fast path), not a percent-level monitor.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_serving.py --fast
+    python scripts/check_bench.py [--fresh BENCH_serving.json]
+                                  [--baseline <path>] [--tol 0.10]
+
+With no ``--baseline`` the committed copy is read via
+``git show HEAD:BENCH_serving.json`` — the working-tree file is the
+fresh run's output, so the gate needs the pre-run version.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# workload-shape fields: two rows describe the same cell iff they agree
+# on every one of these that both rows carry
+IDENTITY = ("T", "B", "backend", "cache", "mode", "decode_ticks",
+            "unified", "tenants", "shared_frac", "prefix_cache",
+            "num_pages", "preempt", "telemetry", "k", "shared_tokens")
+
+HIGHER_IS_BETTER = lambda key: "tokens_per_sec" in key      # noqa: E731
+LOWER_IS_BETTER = ("ttft_ms_mean", "ttft_ms_max", "ttft_ticks_mean")
+
+MIN_NORM = 4        # metrics needed before median normalization kicks in
+
+
+def _identity(row: dict) -> tuple:
+    return tuple((f, row[f]) for f in IDENTITY if f in row)
+
+
+def _match(fresh_row: dict, base_rows: list) -> dict | None:
+    """Baseline row agreeing on every identity field the rows share."""
+    for b in base_rows:
+        shared = [f for f in IDENTITY if f in fresh_row and f in b]
+        if shared and all(fresh_row[f] == b[f] for f in shared):
+            return b
+    return None
+
+
+def _collect(fresh: dict, base: dict):
+    """Yield (sweep, cell, key, fresh_val, base_val, higher_is_better)
+    for every gated metric with a matched baseline row; also return the
+    skipped-row labels."""
+    metrics, skipped = [], []
+    for name, rows in fresh.items():
+        if not (isinstance(rows, list) and rows
+                and isinstance(rows[0], dict)):
+            continue
+        base_rows = base.get(name)
+        if not (isinstance(base_rows, list) and base_rows):
+            skipped.append(f"{name} (no baseline sweep)")
+            continue
+        for row in rows:
+            b = _match(row, base_rows)
+            if b is None:
+                skipped.append(f"{name}{dict(_identity(row))}")
+                continue
+            cell = dict(_identity(row))
+            for key, fval in row.items():
+                if key not in b:
+                    continue
+                bval = b[key]
+                if any(isinstance(v, bool)
+                       or not isinstance(v, (int, float))
+                       for v in (fval, bval)) or bval <= 0:
+                    continue
+                if HIGHER_IS_BETTER(key):
+                    metrics.append((name, cell, key, fval, bval, True))
+                elif key in LOWER_IS_BETTER:
+                    metrics.append((name, cell, key, fval, bval, False))
+    return metrics, skipped
+
+
+def check(fresh: dict, base: dict, tol: float):
+    metrics, skipped = _collect(fresh, base)
+    failures, notes = [], []
+    for hib in (True, False):
+        group = [m for m in metrics if m[5] is hib]
+        if not group:
+            continue
+        ratios = [f / b for (_, _, _, f, b, _) in group]
+        if len(group) >= MIN_NORM:
+            med = statistics.median(ratios)
+        else:
+            med = 1.0       # too few points: absolute comparison
+        kind = "throughput" if hib else "latency"
+        notes.append(f"{kind}: {len(group)} metrics, median "
+                     f"fresh/baseline ratio {med:.2f}")
+        for (name, cell, key, fval, bval, _), r in zip(group, ratios):
+            if hib:
+                floor = med * (1.0 - tol)
+                if r < floor:
+                    failures.append(
+                        f"{name} {cell}: {key} ratio {r:.2f} < "
+                        f"{floor:.2f} (fresh {fval:.2f} vs baseline "
+                        f"{bval:.2f}; suite median {med:.2f}, "
+                        f"tol {tol:.0%})")
+            else:
+                ceil = med * (1.0 + tol)
+                if r > ceil:
+                    failures.append(
+                        f"{name} {cell}: {key} ratio {r:.2f} > "
+                        f"{ceil:.2f} (fresh {fval:.2f} vs baseline "
+                        f"{bval:.2f}; suite median {med:.2f}, "
+                        f"tol {tol:.0%})")
+    return failures, metrics, skipped, notes
+
+
+def _git_baseline() -> dict:
+    out = subprocess.run(
+        ["git", "show", "HEAD:BENCH_serving.json"], cwd=REPO,
+        capture_output=True, text=True, check=True)
+    return json.loads(out.stdout)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default=str(REPO / "BENCH_serving.json"),
+                    help="freshly generated bench report")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline report (default: HEAD's committed copy)")
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("REPRO_BENCH_TOL", 0.10)),
+                    help="fractional deviation from the suite-median "
+                         "ratio (env REPRO_BENCH_TOL)")
+    args = ap.parse_args(argv)
+
+    fresh = json.loads(Path(args.fresh).read_text())
+    base = (json.loads(Path(args.baseline).read_text())
+            if args.baseline else _git_baseline())
+
+    fmode = fresh.get("config", {}).get("fast")
+    bmode = base.get("config", {}).get("fast")
+    if fmode is not None and bmode is not None and fmode != bmode:
+        print("check_bench: WARNING — fresh and baseline reports were "
+              "generated in different modes "
+              f"(fast={fmode} vs fast={bmode}); fast/full change the "
+              "workloads themselves, so per-cell ratios will spread "
+              "structurally.  Regenerate the baseline in the same mode.",
+              file=sys.stderr)
+
+    failures, metrics, skipped, notes = check(fresh, base, args.tol)
+    print(f"check_bench: {len(metrics)} metrics gated at tol="
+          f"{args.tol:.0%}, {len(skipped)} unmatched rows skipped")
+    for n in notes:
+        print(f"  {n}")
+    for s in skipped:
+        print(f"  skip {s}")
+    if failures:
+        print(f"\n{len(failures)} relative perf regression(s) vs "
+              f"committed baseline:", file=sys.stderr)
+        for f in failures:
+            print(f"  FAIL {f}", file=sys.stderr)
+        return 1
+    print("check_bench: OK — no regression beyond tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,7 +10,8 @@
 #                            exporter schema tests, then the fast bench
 #                            (which writes the BENCH_serving.json report
 #                            and the metrics.json / metrics.prom /
-#                            trace.json CI artifacts)
+#                            trace.json CI artifacts under
+#                            benchmarks/out/)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

@@ -24,29 +24,46 @@ import jax.numpy as jnp
 from .kernel import INVALID_POS, paged_chunk_pallas, paged_decode_pallas
 
 
-def _flat_slots(block_tables, positions, num_pages: int, page_size: int):
+def _flat_slots(block_tables, positions, num_pages: int, page_size: int,
+                mask=None):
     """positions (..., ) logical indices → flat pool slot ids, with invalid
     (negative / INVALID_POS-marked / overflowing) positions mapped OUT OF
-    BOUNDS so a ``mode="drop"`` scatter discards them."""
+    BOUNDS so a ``mode="drop"`` scatter discards them.  ``mask`` (same
+    shape, bool) further vetoes writes independently of the position
+    value."""
     max_pages = block_tables.shape[-1]
     valid = (positions >= 0) & (positions < max_pages * page_size)
+    if mask is not None:
+        valid = valid & mask
     page_idx = jnp.clip(positions // page_size, 0, max_pages - 1)
     pages = jnp.take_along_axis(block_tables, page_idx, axis=-1)
     flat = pages * page_size + positions % page_size
     return jnp.where(valid, flat, num_pages * page_size)     # OOB → dropped
 
 
-def write_prefill_pages(pool, new, block_tables, positions):
-    """Scatter a prefill's K or V rows into the page pool, compactly.
+def write_prefill_pages(pool, new, block_tables, positions, mask=None):
+    """Scatter a packed span's K or V rows into the page pool, compactly.
 
     pool (P, ps, KVp, hd); new (B, S, KVp, hd); block_tables (B, max_pages);
     positions (B, S) logical token indices — left-pad slots carry
     ``INVALID_POS`` (or any negative/overflow value) and are dropped, which
     is what makes one left-padded mixed-length prefill write only the real
     tokens of every request.
+
+    This is also the speculative-chunk write: a verifying row carries its
+    fed token at column 0 plus K draft positions ``ln+1..ln+K``.  Draft
+    writes land like any chunk column; positions past the row's backed
+    coverage map to the trash page via the block table, and a *rejected*
+    draft's page entry is never advertised — queries never carry a
+    position at or past it, the ``kv_idx <= pos`` mask hides it, and the
+    corrective feed overwrites the slot in place next micro-step (rollback
+    is a block-table cursor move, no copy).  ``mask`` (B, S) bool, when
+    given, vetoes writes beyond position validity — callers that know
+    validity out-of-band (explicitly masked spans) pass it instead of
+    mutating positions.
     """
     P, ps = pool.shape[0], pool.shape[1]
-    flat = _flat_slots(block_tables, positions, P, ps)       # (B, S)
+    flat = _flat_slots(block_tables, positions, P, ps, mask=mask)  # (B, S)
     pool_flat = pool.reshape((P * ps,) + pool.shape[2:])
     pool_flat = pool_flat.at[flat.reshape(-1)].set(
         new.astype(pool.dtype).reshape((-1,) + new.shape[2:]), mode="drop")

@@ -149,6 +149,23 @@ class Model:
         sel = h[jnp.arange(h.shape[0]), cols]
         return self.logits(params, sel[:, None])[:, 0]
 
+    def logits_cols(self, params, h, cols):
+        """Speculative verification head: project C hidden columns per row.
+
+        ``h`` (B, Q, d) is a packed-span forward's output, ``cols`` (B, C)
+        names the columns to score — for a speculating row these are the
+        fed token plus its K draft positions; for everyone else the same
+        last-valid column replicated C times.  Returns logits (B, C, V).
+
+        With C == 1 this is ``logits_at`` exactly; the vocab einsum is
+        row-independent (each (b, c) output is an isolated dot over d), so
+        column 0 of a C-wide projection is bitwise the single-column
+        projection — the property the spec-on/spec-off stream-parity tests
+        pin.
+        """
+        sel = jnp.take_along_axis(h, cols[..., None], axis=1)
+        return self.logits(params, sel)
+
     def logits(self, params, x):
         w = params["embed"] if self.cfg.tie_embeddings else params["lm_head"]
         w = constrain_use(w, self.axes["embed" if self.cfg.tie_embeddings

@@ -14,3 +14,4 @@ from .resilience import (DeadlineExceeded, Fault, FaultHarness, FaultPlan,
                          ResilienceConfig, ResilienceStats, SlotQuarantined,
                          StarvationError, TTLExpired)
 from .sampling import SamplingParams, sample_tokens
+from .spec import DraftProposer, SpecConfig, ngram_propose

@@ -68,8 +68,11 @@ from .resilience.errors import (DeadlineExceeded, NeverFitsError,
                                 SlotQuarantined, StarvationError,
                                 TTLExpired)
 from .resilience.policy import (ResilienceConfig, ResilienceStats,
-                                VictimCandidate, select_victim)
-from .sampling import SamplingParams, params_to_arrays, sample_tokens
+                                VictimCandidate, select_victim,
+                                select_victims)
+from .sampling import (SamplingParams, params_to_arrays, sample_tokens,
+                       sample_tokens_multi, spec_accept_counts)
+from .spec import DraftProposer, SpecConfig, replay_chain
 
 
 def make_serve_step(model, tenants: int = 0, backend: str = "fused",
@@ -162,7 +165,7 @@ def make_fused_step(model, decode_ticks: Optional[int], tenants: int = 0,
                     backend: str = "fused", interpret: bool = True,
                     attn_backend: str = "pallas",
                     sample_backend: str = "pallas",
-                    page_size: int = 0):
+                    page_size: int = 0, spec_k: int = 0):
     """The device-resident macro-step: ``decode_ticks`` (D) unified
     micro-steps + on-device sampling fused into ONE jitted call.
     ``decode_ticks=None`` leaves D to the plan's leading dimension — the
@@ -216,6 +219,27 @@ def make_fused_step(model, decode_ticks: Optional[int], tenants: int = 0,
     the micro-step is row-independent.  Carries ``._traces`` like
     :func:`make_unified_step`; one trace per engine lifetime regardless
     of the admitted mix.
+
+    ``spec_k > 0`` turns on in-scan speculative verification
+    (docs/serving.md §Speculative decoding).  The plan gains
+    ``draft_chain`` (slots, chain_len) int32 — each decoding slot's
+    host-proposed continuation guess, ``-1``-padded — and the scan carry
+    gains a ``(cursor, alive)`` chain automaton.  Per micro-step a
+    feeding slot's row carries its fed token at column 0 PLUS the next K
+    live chain entries at columns ``1..K`` / positions ``ln+1..ln+K``
+    (the chunk machinery scores them like any prefill span);
+    ``Model.logits_cols`` projects all K+1 columns,
+    ``sample_tokens_multi`` draws them under the position-keyed PRNG, and
+    ``spec_accept_counts`` keeps the longest draft prefix the samples
+    reproduced plus one corrective token — up to K+1 tokens per
+    micro-step, bitwise the spec-off stream because an accepted column's
+    logits saw exactly the context sequential decode would have built.
+    Rejected draft page writes are left masked-in-place (queries never
+    advertise positions past the accepted watermark; the next feed
+    overwrites the slot) — rollback is bookkeeping, not data movement.
+    Output buffers widen to (D, slots, K+1) with ``valid`` marking the
+    accepted prefix; K is shape-static like D, so spec-on remains one
+    trace per engine lifetime.
     """
     traces: List[int] = []
 
@@ -276,12 +300,109 @@ def make_fused_step(model, decode_ticks: Optional[int], tenants: int = 0,
                 jnp.sum((emit & jnp.logical_not(fin)).astype(jnp.int32))])
             return (cache, feed2, tok2, ln2, made2), (tok2, emit, fin, stats)
 
-        init = (cache, plan["feed0"], plan["tok0"], plan["len0"],
-                jnp.zeros((S,), jnp.int32))
+        K = spec_k
+
+        def micro_spec(carry, xs):
+            # speculative verify: K draft columns ride the feeding row
+            cache, feed, tok, ln, made, cur, alive = carry
+            toks_t, pos_t, last_t, srow_t, final_t, poison_t = xs
+            fcol = feed[:, None] & col0
+            toks = jnp.where(fcol, tok[:, None], toks_t)
+            pos = jnp.where(fcol, ln[:, None], pos_t)
+            last = jnp.where(feed, 0, last_t)
+            # overlay the slot's next K live chain entries at columns 1..K
+            # (positions ln+1..ln+K); dead/absent drafts keep the plan's
+            # pads (INVALID_POS → the page write drops, the row attends
+            # nothing) so a drafts-exhausted step is plain decode
+            chain = plan["draft_chain"]                    # (S, CL) int32
+            CL = chain.shape[1]
+            kidx = jnp.arange(1, K + 1, dtype=jnp.int32)   # (K,)
+            cidx = cur[:, None] + kidx[None, :] - 1        # (S, K)
+            drafts = jnp.take_along_axis(chain, jnp.clip(cidx, 0, CL - 1),
+                                         axis=1)
+            d_ok = (alive[:, None] & feed[:, None] & (cidx < CL)
+                    & (drafts >= 0))                       # (S, K)
+            colq = jnp.arange(Q, dtype=jnp.int32)[None, :]
+            pad = jnp.zeros((S, Q - K - 1), jnp.int32)
+            dq = jnp.concatenate([jnp.zeros((S, 1), jnp.int32), drafts,
+                                  pad], axis=1)            # (S, Q)
+            dm = jnp.concatenate([jnp.zeros((S, 1), bool), d_ok,
+                                  pad.astype(bool)], axis=1)
+            toks = jnp.where(dm, dq, toks)
+            pos = jnp.where(dm, ln[:, None] + colq, pos)
+            cache, h = model.unified_forward(
+                params, ad_stack, toks, pos, cache, hooks_factory=fac,
+                attn_backend=attn_backend, attn_interpret=interpret)
+            # score K+1 columns per row: a feeding slot verifies columns
+            # 0..K; everyone else replicates its sampling column K+1
+            # times so column 0 is exactly the spec-off projection
+            hsel = jnp.take(h, srow_t, axis=0)             # (S, Q, d)
+            last_s = jnp.take(last, srow_t)
+            kcols = jnp.arange(K + 1, dtype=jnp.int32)[None, :]
+            cols = jnp.where(feed[:, None], kcols,
+                             last_s[:, None])              # (S, K+1)
+            lcols = model.logits_cols(params, hsel, cols)  # (S, K+1, V)
+            lcols = jnp.where(poison_t[:, None, None], jnp.nan, lcols)
+            fin = jnp.all(jnp.isfinite(lcols), axis=-1)    # (S, K+1)
+            emit = feed | final_t
+            counter0 = jnp.where(final_t, plan["plen"], ln + 1)
+            counters = jnp.where(feed[:, None], (ln + 1)[:, None] + kcols,
+                                 counter0[:, None])        # (S, K+1)
+            y = sample_tokens_multi(lcols, plan["temperature"],
+                                    plan["top_k"], plan["top_p"],
+                                    plan["seed"], counters,
+                                    backend=sample_backend,
+                                    interpret=interpret)   # (S, K+1)
+            a = spec_accept_counts(y, drafts, d_ok, plan["eos"],
+                                   plan["cap"] - made)
+            a = jnp.where(feed, a, jnp.where(final_t, 1, 0))
+            emit_k = kcols < a[:, None]                    # (S, K+1)
+            last_tok = jnp.take_along_axis(
+                y, jnp.clip(a - 1, 0, K)[:, None], axis=1)[:, 0]
+            tok2 = jnp.where(a > 0, last_tok, tok)
+            ln2 = jnp.where(a > 0, jnp.where(feed, ln + a, counter0), ln)
+            made2 = made + a
+            hit_eos = (a > 0) & (plan["eos"] >= 0) & (tok2 == plan["eos"])
+            feed2 = emit & (made2 < plan["cap"]) & jnp.logical_not(hit_eos)
+            # chain automaton: survives only a FULL acceptance whose
+            # corrective token equals the next chain entry (a partial
+            # acceptance proved the chain wrong; a truncated one loses
+            # its alignment) — then the cursor jumps the consumed K+1
+            nidx = cur + K
+            nd = jnp.take_along_axis(chain, jnp.clip(nidx, 0, CL - 1)
+                                     [:, None], axis=1)[:, 0]
+            cont = (alive & (a == K + 1) & (nidx < CL) & (nd >= 0)
+                    & (last_tok == nd))
+            alive2 = jnp.where(feed, cont, alive)
+            cur2 = jnp.where(feed & cont, cur + K + 1, cur)
+            written = pos < jnp.int32(INVALID_POS)
+            if page_size > 0:
+                new_page = written & (pos % jnp.int32(page_size) == 0)
+            else:
+                new_page = jnp.zeros_like(written)
+            active = feed | final_t | jnp.any(written, axis=1)
+            stats = jnp.stack([
+                jnp.sum(a),
+                jnp.sum(active.astype(jnp.int32)),
+                jnp.sum(new_page.astype(jnp.int32)),
+                jnp.sum((emit_k & jnp.logical_not(fin)).astype(jnp.int32))])
+            return ((cache, feed2, tok2, ln2, made2, cur2, alive2),
+                    (y, emit_k, fin, stats))
+
+        if K > 0:
+            assert K + 1 <= Q, f"spec_k+1={K + 1} exceeds chunk {Q}"
+            init = (cache, plan["feed0"], plan["tok0"], plan["len0"],
+                    jnp.zeros((S,), jnp.int32), jnp.zeros((S,), jnp.int32),
+                    jnp.ones((S,), bool))
+            step = micro_spec
+        else:
+            init = (cache, plan["feed0"], plan["tok0"], plan["len0"],
+                    jnp.zeros((S,), jnp.int32))
+            step = micro
         xs = (plan["tokens"], plan["positions"], plan["last_col"],
               plan["samp_row"], plan["final"], plan["poison"])
         (cache, *_), (toks_out, valid_out, finite_out,
-                      stats_out) = jax.lax.scan(micro, init, xs)
+                      stats_out) = jax.lax.scan(step, init, xs)
         return cache, toks_out, valid_out, finite_out, stats_out
 
     fused_step._traces = traces
@@ -424,7 +545,8 @@ class ServingEngine:
                  prefix_cache: Optional[bool] = None,
                  auto_ticks: bool = False,
                  resilience: Optional[ResilienceConfig] = None,
-                 observability: Optional[ObservabilityConfig] = None):
+                 observability: Optional[ObservabilityConfig] = None,
+                 spec_decode=None):
         self.model, self.params = model, params
         self.tenants = len(tenant_states)
         self.backend = backend
@@ -462,6 +584,29 @@ class ServingEngine:
         self.tick_width_counts: Dict[int, int] = {}  # D → macro ticks at D
         self.macro_ticks = 0
         self.sample_backend = sample_backend
+        # --- speculative decoding (serving.spec) ----------------------
+        # spec_decode: None/False → off; True → default SpecConfig; or an
+        # explicit SpecConfig.  K is shape-static like D — spec-on still
+        # traces one executable per lifetime — and the verified span
+        # needs K+1 columns of the chunk buffer.
+        if spec_decode is True:
+            spec_decode = SpecConfig()
+        self.spec: Optional[SpecConfig] = spec_decode or None
+        self.spec_k = self.spec.k if self.spec else 0
+        if self.spec:
+            if not self.unified:
+                raise ValueError(
+                    "spec_decode requires the unified scheduler "
+                    "(in-scan verification rides the fused step)")
+            if self.spec_k + 1 > self.chunk:
+                raise ValueError(
+                    f"spec_decode k={self.spec_k} needs k+1 <= chunk "
+                    f"({self.chunk}) columns for the verified span")
+        self._proposer: Optional[DraftProposer] = None
+        self._spec_info: Dict[int, Tuple[int, List[int]]] = {}
+        # host-visible drafted/accepted totals (per tenant name), exact
+        # via the chain-automaton replay over the drained buffers
+        self.spec_counters: Dict[str, Dict[str, int]] = {}
         # telemetry: device→host syncs (one per _select_tokens call / per
         # macro-tick drain) and tokens drained — benchmarks report the
         # syncs-per-token ratio the device loop amortizes
@@ -485,7 +630,7 @@ class ServingEngine:
                                   interpret=interpret,
                                   attn_backend=attn_backend,
                                   sample_backend=sample_backend,
-                                  page_size=page_size)
+                                  page_size=page_size, spec_k=self.spec_k)
             self.unified_traces = ffn._traces
             self.fstep = jax.jit(ffn, donate_argnums=(3,))
         self._queue: List[Request] = []
@@ -533,6 +678,11 @@ class ServingEngine:
                     return leaf
                 return jax.tree_util.tree_map_with_path(one, cache)
             self._cow_copy = jax.jit(_cow, donate_argnums=(0,))
+        if self.spec:
+            # tree source reads the prefix cache's radix tree (read-only,
+            # no LRU touches); with the cache off only prompt-lookup runs
+            self._proposer = DraftProposer(
+                self.spec, self.prefix.tree if self.prefix else None)
         self.adapter_ids = np.zeros((slots,), np.int32)
         self._pending: Dict[int, int] = {}   # slot → first generated token
         self._cursor: Dict[int, int] = {}    # slot → prompt tokens written
@@ -885,6 +1035,21 @@ class ServingEngine:
         if self.prefix is not None:
             R.gauge("serving_prefix_cache", "Prefix-cache pool gauges",
                     labelnames=("stat",), fn=self._prefix_gauges)
+        if self.spec is not None:
+            self._m_drafted = R.counter(
+                "serving_spec_drafted_total",
+                "Draft tokens placed in verified spans",
+                labelnames=("tenant",))
+            self._m_accepted = R.counter(
+                "serving_spec_accepted_total",
+                "Draft tokens accepted by in-scan verification",
+                labelnames=("tenant",))
+            R.gauge("serving_spec_acceptance_rate",
+                    "accepted/drafted per tenant (lifetime)",
+                    labelnames=("tenant",),
+                    fn=lambda: {(t,): (c["accepted"] / c["drafted"]
+                                       if c["drafted"] else 0.0)
+                                for t, c in self.spec_counters.items()})
         if self.model.plan.method in ("mos", "pure"):
             # per-pool MoS telemetry from the frozen routing indices —
             # a pure-sharing collapse (all tenants on few public shards)
@@ -965,11 +1130,31 @@ class ServingEngine:
             "prefix": self.prefix_metrics(),
             "resilience": self.rstats.as_dict(),
             "per_tenant": per_tenant,
+            "spec": self.spec_metrics(),
             "mos": (self._mos_pool_stats()
                     if self.model.plan.method in ("mos", "pure") else None),
             "registry": self.registry.collect(),
         }
         return out
+
+    def spec_metrics(self) -> Optional[Dict[str, Any]]:
+        """Speculative-decoding counters (None with spec off): lifetime
+        drafted/accepted totals and acceptance rate, overall and per
+        tenant — exact, from the chain-automaton replay."""
+        if self.spec is None:
+            return None
+        drafted = sum(c["drafted"] for c in self.spec_counters.values())
+        accepted = sum(c["accepted"] for c in self.spec_counters.values())
+        return {
+            "k": self.spec_k,
+            "drafted": drafted,
+            "accepted": accepted,
+            "acceptance_rate": (accepted / drafted) if drafted else 0.0,
+            "per_tenant": {
+                t: {**c, "acceptance_rate":
+                    (c["accepted"] / c["drafted"]) if c["drafted"] else 0.0}
+                for t, c in sorted(self.spec_counters.items())},
+        }
 
     def metrics_prometheus(self) -> str:
         """The registry in Prometheus text exposition format."""
@@ -1173,27 +1358,49 @@ class ServingEngine:
                            ) -> List[VictimCandidate]:
         return [VictimCandidate(slot=s, priority=req.priority,
                                 reclaimable_pages=self._reclaimable_pages(s),
-                                admit_tick=req.admit_tick)
+                                admit_tick=req.admit_tick,
+                                resident_pages=(
+                                    self.pages.resident_pages(s)
+                                    if self.paged else 0))
                 for s, req in enumerate(self._active)
                 if req is not None and s != exclude]
+
+    def _head_need_pages(self, head: Request) -> int:
+        """Pages the FIFO head still lacks for its effective trajectory —
+        how much a preemption batch must free.  Conservative on the cheap
+        side: an eventual prefix hit at admission only shrinks the need,
+        and ``select_victims`` always takes at least one victim."""
+        if not self.paged:
+            return 1
+        need = self.pages.pages_for(
+            self._effective_tokens(self._traj_tokens(head)))
+        return max(1, need - max(0, self.pages.available))
 
     def _pressure_preempt(self):
         """The pressure rung of the degradation ladder: after
         ``pressure_ticks`` of (a) the FIFO head waiting or (b) an
-        admitted oversubscribed decode stalled at allowance 0, evict ONE
-        strictly-lower-priority victim through the prefix cache.  With
-        uniform priorities this never fires — backpressure alone."""
+        admitted oversubscribed decode stalled at allowance 0, evict
+        strictly-lower-priority victims through the prefix cache.  A
+        large high-priority head may need more pages than one victim
+        frees — ``select_victims`` batches exactly the victims the
+        sequential policy would have picked over the following ticks, so
+        the head admits this tick instead of bleeding ``pressure_ticks``
+        per victim.  With uniform priorities this never fires —
+        backpressure alone."""
         if not (self.unified and self.rcfg.preempt):
             return
         pt = self.rcfg.pressure_ticks
         if self._queue and self._head_wait >= pt:
             head = self._queue[0]
-            v = select_victim(self._victim_candidates(None), head.priority)
-            if v is not None:
-                # victim resumes right behind the head it unblocked
+            victims = select_victims(self._victim_candidates(None),
+                                     head.priority,
+                                     need_pages=self._head_need_pages(head))
+            for v in victims:
+                # victims resume right behind the head they unblocked
                 self._preempt_slot(v, requeue_at=1)
+            if victims:
                 self._head_wait = 0
-                return               # at most one preemption per tick
+                return
         s = self._oversub_slot
         if s is not None and self._stall_ticks.get(s, 0) >= pt \
                 and self._active[s] is not None:
@@ -1474,13 +1681,19 @@ class ServingEngine:
 
     def _retire_pages(self, s: int, req: Request):
         """Release a finished request's pages.  With the prefix cache on,
-        the full-page prompt prefix transfers into the radix tree instead
-        of freeing (shared columns just drop their reference; freshly
-        computed pages are adopted, deduplicated against identical
-        prefixes already cached) — the request's own generated tokens and
-        any partial prompt tail free as usual."""
+        every full page of WRITTEN tokens — the prompt *and* the generated
+        stream — transfers into the radix tree instead of freeing (shared
+        columns just drop their reference; freshly computed pages are
+        adopted, deduplicated against identical chains already cached).
+        Caching the generated suffix is what makes multi-turn chat
+        re-admissions hit (the next turn's prompt extends this turn's
+        prompt + completion) and gives the speculative-decoding proposer
+        completed generations to draft from (``PrefixTree.extend``).
+        Only the partial last page frees as usual.  The last emitted
+        token was never fed, so written tokens = prompt + out - 1."""
         if self.prefix is not None:
-            n_full = len(req.prompt) // self.page_size
+            written = len(req.prompt) + len(req.out or []) - 1
+            n_full = written // self.page_size
             # a RESUMED request may share pages past its original prompt
             # (generated tokens its preemption cached): release at least
             # the shared span — re-inserting it walks existing tree
@@ -1518,6 +1731,31 @@ class ServingEngine:
                 changed = True
         if changed and not self.unified:
             self.cache["block_tables"] = jnp.asarray(self.pages.block_tables)
+
+    def _rollback_spec_pages(self):
+        """Return unused speculative page pre-extension under pressure.
+
+        The packer backs each decoding slot for the tick's worst case
+        (``D*(K+1)`` tokens); low acceptance leaves coverage stranded past
+        the written watermark while queued requests wait for pages.  When
+        the queue is non-empty, roll every decode slot's owned tail back
+        to the pages its next feed actually needs — a block-table cursor
+        move + unref through :meth:`PagePool.rollback_tail` (nothing
+        written is freed; rejected-draft writes beyond the watermark only
+        ever landed on the trash page or on masked in-place columns).
+        With an empty queue the coverage is left warm: the slot will
+        consume it over the following ticks anyway."""
+        if not self.spec_k or not self._queue:
+            return
+        for s, req in enumerate(self._active):
+            if req is None or s not in self._len:
+                continue
+            if self._cursor.get(s, 0) < len(self._eff.get(s, ())):
+                continue                 # prefilling: cursor-driven coverage
+            # written tokens occupy positions [0, _len); the next feed
+            # writes position _len — keep exactly the pages covering it
+            keep = self.pages.pages_for(self._len[s] + 1)
+            self.pages.rollback_tail(s, keep)
 
     def _ensure_growth(self, s: int, start: int, want: int) -> int:
         """Pre-extend slot ``s``'s page coverage for up to ``want`` decode
@@ -1594,6 +1832,21 @@ class ServingEngine:
                                for r in self._active])
         ids = self.adapter_ids.copy()
         self._stalled_now = set()
+        # speculative drafting: one host proposal per decoding slot per
+        # macro tick — a chain of up to D*(K+1) tokens (the most the tick
+        # can consume) from the radix tree / prompt lookup; the device
+        # consumes it across micro-steps with the (cursor, alive) carry.
+        # Slots whose prompt completes mid-tick draft too — from the
+        # effective prompt, minus the proposal's first token (that one is
+        # sampled in-graph at the prefill-final step); the chain engages
+        # at the first feed step after prefill, entirely in-carry.
+        # KP1 also widens the decode lanes' page pre-extension:
+        # a fully-accepting slot writes K+1 positions per micro-step.
+        KP1 = self.spec_k + 1
+        chain = None
+        if self.spec_k:
+            chain = np.full((S, D * KP1), -1, np.int32)
+            self._spec_info = {}
 
         # dynamic per-tick chunk-budget split: idle decode lanes donate
         # their token-budget columns to the earliest admitting request.
@@ -1659,11 +1912,25 @@ class ServingEngine:
                 # decode tail after mid-tick completion: the first token
                 # falls out of the chunk's logits (no extra write); each
                 # further token writes its predecessor at plen..
-                want = min(max(D - 1 - t_done, 0), max(rem - 1, 0))
+                want = min(max(D - 1 - t_done, 0) * KP1, max(rem - 1, 0))
                 cap[s] = min(rem, 1 + self._ensure_growth(s, L, want))
+                if chain is not None and t_done < D - 1:
+                    # the prefill-final step samples the first token
+                    # in-graph, so the host can't draft it — but it CAN
+                    # draft what follows: propose from the effective
+                    # prompt and drop the proposal's first token (the
+                    # in-graph sample supersedes it; if the guess was
+                    # wrong the tail just gets rejected).  The chain
+                    # engages at the first feed step, t_done + 1.
+                    props = self._proposer.propose(
+                        int(req.adapter_id), list(eff),
+                        chain.shape[1] + 1)[1:]
+                    if props:
+                        chain[s, :len(props)] = props
+                    self._spec_info[s] = (t_done + 1, props)
             else:
                 n = self._len[s]
-                avail = self._ensure_growth(s, n, min(D, rem))
+                avail = self._ensure_growth(s, n, min(D * KP1, rem))
                 if avail <= 0:
                     self._stalled_now.add(s)
                     continue             # oversubscribed decode stall
@@ -1671,6 +1938,13 @@ class ServingEngine:
                 tok0[s] = req.out[-1] if req.out else int(eff[-1])
                 len0[s] = n
                 cap[s] = min(rem, avail)
+                if chain is not None:
+                    context = list(req.prompt) + list(req.out)
+                    props = self._proposer.propose(
+                        int(req.adapter_id), context, chain.shape[1])
+                    if props:
+                        chain[s, :len(props)] = props
+                    self._spec_info[s] = (0, props)
         # snapshot block tables AFTER packing — ensure() backed this tick's
         # pages above; donor lanes alias the donee's (now-complete) row
         bt = self.pages.block_tables.copy()
@@ -1680,6 +1954,8 @@ class ServingEngine:
                 "samp_row": srow, "final": final, "adapter_ids": ids,
                 "feed0": feed0, "tok0": tok0, "len0": len0, "cap": cap,
                 "plen": plen, "eos": eos, "poison": poison, **sp}
+        if chain is not None:
+            plan["draft_chain"] = chain
         return plan, bt
 
     def _unified_tick(self) -> List[Request]:
@@ -1727,26 +2003,56 @@ class ServingEngine:
             dc["pages_written"] += int(tot[2])
             dc["nan_trips"] += int(tot[3])
         self._last_valid = valid_np
+        # drain order is micro-step-major, accepted-column-minor: with
+        # spec on each micro-step may have emitted up to K+1 tokens
+        # (the accepted prefix of its verified span)
+        K1 = self.spec_k + 1
+        toks3 = toks_np.reshape(D, self.slots, K1)
+        valid3 = valid_np.reshape(D, self.slots, K1)
+        finite3 = finite_np.reshape(D, self.slots, K1)
         for s in range(self.slots):
             req = self._active[s]
             if req is None:
                 continue
             poisoned_at: Optional[int] = None
+            emitted_t = [0] * D          # per-micro-step emission counts
+            last_t = [0] * D             # … and last emitted token (spec)
             for t in range(D):
-                if not valid_np[t, s]:
-                    continue
-                if not finite_np[t, s]:
-                    poisoned_at = t      # this and later tokens discarded
+                for k in range(K1):
+                    if not valid3[t, s, k]:
+                        continue
+                    if not finite3[t, s, k]:
+                        poisoned_at = t  # this and later tokens discarded
+                        break
+                    tok = int(toks3[t, s, k])
+                    req.out.append(tok)
+                    self.tokens_out += 1
+                    emitted_t[t] += 1
+                    last_t[t] = tok
+                    if self.obs.metrics:
+                        self._m_tokens.inc(tenant=self._tenant_of(req))
+                    self._progress = True
+                    if (len(req.out) >= req.max_new
+                            or self._hit_eos(req, tok)):
+                        req.done = True
+                        break
+                if poisoned_at is not None or req.done:
                     break
-                tok = int(toks_np[t, s])
-                req.out.append(tok)
-                self.tokens_out += 1
-                if self.obs.metrics:
-                    self._m_tokens.inc(tenant=self._tenant_of(req))
-                self._progress = True
-                if len(req.out) >= req.max_new or self._hit_eos(req, tok):
-                    req.done = True
-                    break
+            if self.spec_k and s in self._spec_info:
+                # exact drafted/accepted accounting: replay the in-graph
+                # chain automaton over what the device actually emitted
+                fs_t, props = self._spec_info[s]
+                dr, ac = replay_chain(props, self.spec_k, emitted_t,
+                                      last_t, fs_t)
+                if dr or ac:
+                    tn = self._tenant_of(req)
+                    c = self.spec_counters.setdefault(
+                        tn, {"drafted": 0, "accepted": 0})
+                    c["drafted"] += dr
+                    c["accepted"] += ac
+                    if self.obs.metrics:
+                        self._m_drafted.inc(dr, tenant=tn)
+                        self._m_accepted.inc(ac, tenant=tn)
             if poisoned_at is not None:
                 # per-slot quarantine: typed failure, pages freed (NEVER
                 # cached — the KV may be poisoned), co-tenants untouched
@@ -1786,6 +2092,7 @@ class ServingEngine:
             tr.complete("tick", TICK_LANE, t_tick0, tr.now_us() - t_tick0,
                         tick=int(self.tick_count), D=int(D))
         self._free_swa_pages()
+        self._rollback_spec_pages()
         # pressure/watchdog accounting for the NEXT tick's decisions
         self._head_wait = self._head_wait + 1 if self._queue else 0
         for s in list(self._stall_ticks):

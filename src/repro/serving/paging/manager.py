@@ -299,6 +299,42 @@ class PagePool:
                                        future)
         return freed
 
+    def rollback_tail(self, slot: int, keep_cols: int) -> List[int]:
+        """Speculative-growth rollback: return ``slot``'s owned pages in
+        block-table columns ``[keep_cols, ...)`` to the free list.
+
+        The macro-tick packer pre-extends a decoding slot's coverage for
+        the tick's WORST-CASE speculative growth (``D * (K+1)`` tokens);
+        when acceptance falls short, the slot holds backed-but-unwritten
+        pages past its watermark that queued requests may need.  Rollback
+        is the ledger half of the spec contract: a block-table cursor
+        move + unref, never a data copy — callers keep every column at or
+        below the written watermark, so only never-written (or
+        trash-masked rejected-draft) pages move.  Freed pages re-credit
+        the reservation (capped at the remaining trajectory, mirroring
+        :meth:`free_prefix`), so the slot re-backs them later through the
+        normal ``ensure`` gate.  Shared (prefix-cache) columns are never
+        touched — they precede owned columns by construction.  Returns
+        the pages freed (possibly empty)."""
+        owned = self._owned.get(slot)
+        if not owned:
+            return []
+        first_owned = self._base.get(slot, 0) + len(self._shared.get(slot,
+                                                                     ()))
+        keep = max(0, keep_cols - first_owned)
+        if keep >= len(owned):
+            return []
+        freed = owned[keep:]
+        del owned[keep:]
+        self.block_tables[slot, first_owned + keep:
+                          first_owned + keep + len(freed)] = TRASH_PAGE
+        for page in reversed(freed):
+            self._push_free(page)
+        future = max(0, self._traj[slot] - self.covered_cols(slot))
+        self._reserved[slot] = min(self._reserved[slot] + len(freed),
+                                   future)
+        return freed
+
     def release(self, slot: int) -> List[int]:
         """Return ``slot``'s owned pages to the free list, drop its shared
         mappings (refcount decrements; the pages stay with the cache) and

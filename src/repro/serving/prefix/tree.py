@@ -108,6 +108,51 @@ class PrefixTree:
                 self._touch(cow)
         return nodes, cow, cow_tokens
 
+    def extend(self, adapter_id: int, tokens, max_tokens: int) -> List[int]:
+        """Draft continuation of ``tokens`` from cached streams — the
+        speculative-decoding proposer's tree source.
+
+        Walks the full pages of ``tokens`` (a slot's prompt + emitted
+        history) from the root; if every full page is cached and some
+        child's key starts with the remaining partial-page tail, the rest
+        of that child plus its (most-recently-used) descendant chain is a
+        previously *completed* generation of this exact context — returned
+        as up to ``max_tokens`` draft tokens.  Ambiguity (several cached
+        continuations sharing the tail) resolves to the hottest child, tie
+        broken by key for determinism.
+
+        Read-only: unlike :meth:`match` this does NOT touch LRU stamps, so
+        turning speculation on cannot perturb eviction order (part of the
+        spec-on/spec-off parity contract).  Returns ``[]`` when the
+        context isn't fully cached — drafting is best-effort.
+        """
+        ps = self.page_size
+        L = len(tokens)
+        node = self._roots.get(int(adapter_id))
+        matched = 0
+        while node is not None and matched + ps <= L:
+            node = node.children.get(self._block(tokens, matched // ps))
+            matched += ps
+        if node is None:
+            return []
+        out: List[int] = []
+        rem = [int(t) for t in tokens[matched:]]
+        if rem:
+            hottest = None
+            for key, child in sorted(node.children.items()):
+                if list(key[:len(rem)]) == rem and (
+                        hottest is None or child.last_used > hottest.last_used):
+                    hottest = child
+            if hottest is None:
+                return []
+            out.extend(int(t) for t in hottest.key[len(rem):])
+            node = hottest
+        while len(out) < max_tokens and node.children:
+            node = max(sorted(node.children.items()),
+                       key=lambda kv: kv[1].last_used)[1]
+            out.extend(int(t) for t in node.key)
+        return out[:max_tokens]
+
     def insert(self, adapter_id: int, tokens: np.ndarray,
                pages: List[int]) -> Tuple[List[Node], List[int]]:
         """Insert the page chain ``pages`` (page ``i`` holding tokens

@@ -68,6 +68,11 @@ class VictimCandidate:
     priority: int
     reclaimable_pages: int   # full written pages a preemption would cache
     admit_tick: int
+    resident_pages: int = 0  # pages a preemption makes available again
+
+
+def _victim_order(c: VictimCandidate):
+    return (c.priority, -c.reclaimable_pages, -c.admit_tick, c.slot)
 
 
 def select_victim(candidates: Sequence[VictimCandidate],
@@ -77,9 +82,37 @@ def select_victim(candidates: Sequence[VictimCandidate],
     eligible = [c for c in candidates if c.priority < starver_priority]
     if not eligible:
         return None
-    best = min(eligible, key=lambda c: (c.priority, -c.reclaimable_pages,
-                                        -c.admit_tick, c.slot))
-    return best.slot
+    return min(eligible, key=_victim_order).slot
+
+
+def select_victims(candidates: Sequence[VictimCandidate],
+                   starver_priority: int,
+                   need_pages: int = 1) -> List[int]:
+    """Batched victim selection: victims in :func:`select_victim` order
+    until their combined ``resident_pages`` cover ``need_pages``.
+
+    A large high-priority arrival can need more pages than any single
+    victim frees; preempting one victim per tick would then leak a tick
+    of latency per victim (and ``pressure_ticks`` of head-of-line
+    blocking before each).  Taking the whole batch at once keeps the
+    per-victim order identical to the single-victim policy — the k-th
+    victim of a batch is exactly the victim the sequential policy would
+    have picked k ticks later — so determinism and every single-victim
+    test are preserved; ``need_pages <= 0`` degrades to that policy
+    (first victim only).  Both the cache-reclaimable and plain-freed
+    pages of a victim become available to the starver, which is what
+    ``resident_pages`` counts."""
+    eligible = sorted((c for c in candidates
+                       if c.priority < starver_priority),
+                      key=_victim_order)
+    out: List[int] = []
+    freed = 0
+    for c in eligible:
+        if out and freed >= need_pages:
+            break
+        out.append(c.slot)
+        freed += max(0, c.resident_pages)
+    return out
 
 
 @dataclasses.dataclass
@@ -119,4 +152,4 @@ class ResilienceStats:
 
 
 __all__ = ["ResilienceConfig", "ResilienceStats", "VictimCandidate",
-           "select_victim"]
+           "select_victim", "select_victims"]

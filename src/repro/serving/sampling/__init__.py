@@ -1,2 +1,3 @@
 """On-device sampling subsystem for the serving engine (docs/serving.md)."""
-from .sampler import GREEDY, SamplingParams, params_to_arrays, sample_tokens
+from .sampler import (GREEDY, SamplingParams, params_to_arrays,
+                      sample_tokens, sample_tokens_multi, spec_accept_counts)

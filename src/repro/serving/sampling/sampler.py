@@ -105,6 +105,67 @@ def sample_tokens(logits, temperature, top_k, top_p, seed, counter, *,
                      sampled)
 
 
+def sample_tokens_multi(logits, temperature, top_k, top_p, seed, counters, *,
+                        backend: str = "pallas", interpret: bool = True):
+    """logits (S, C, V) + per-slot (S,) params + counters (S, C) → (S, C).
+
+    The speculative-verification sampler: column ``c`` of row ``s`` draws
+    with the SAME per-slot params as ``sample_tokens`` but its own
+    reproducibility counter (the context position that column's token will
+    occupy).  Implemented by flattening to (S*C, V) and calling the scalar
+    path's math row-for-row, so each (s, c) draw is bitwise the token
+    ``sample_tokens`` would produce for that (logits row, counter) pair —
+    the property that makes in-scan draft verification exact.
+    """
+    S, C, V = logits.shape
+    rep = lambda v, dt: jnp.repeat(jnp.asarray(v, dt), C,
+                                   total_repeat_length=S * C)
+    flat = sample_tokens(logits.reshape(S * C, V),
+                         rep(temperature, jnp.float32),
+                         rep(top_k, jnp.int32), rep(top_p, jnp.float32),
+                         rep(seed, jnp.int32),
+                         jnp.asarray(counters, jnp.int32).reshape(S * C),
+                         backend=backend, interpret=interpret)
+    return flat.reshape(S, C)
+
+
+def spec_accept_counts(samples, drafts, draft_ok, eos, budget):
+    """Vectorized accept mask for speculative verification.
+
+    ``samples`` (S, K+1) are the verified tokens sampled at positions
+    ``ln+1 .. ln+K+1`` (column j conditioned on draft j-1 .. draft 0 and the
+    fed token), ``drafts`` (S, K) the proposed tokens at positions
+    ``ln+1 .. ln+K``, ``draft_ok`` (S, K) their validity, ``eos`` (S,) the
+    per-slot stop token (< 0 disables), ``budget`` (S,) the remaining
+    token allowance (``cap - made``).
+
+    Returns ``a`` (S,) int32 — how many leading sampled tokens to emit:
+    the longest prefix where sample j-1 reproduced draft j, plus one
+    corrective token, truncated so nothing past a sampled EOS or past the
+    budget leaks out.  A feeding slot always gets ``a >= 1`` (budget >= 1
+    by the feed invariant); the caller zeroes non-emitting slots.
+
+    Exactness: token j is emitted iff every earlier draft matched — i.e.
+    iff its logits saw exactly the context spec-off decode would have
+    built — and EOS/budget truncation mirrors the one-token-per-step
+    loop's stop conditions, so the emitted stream is bitwise the spec-off
+    stream.
+    """
+    samples = jnp.asarray(samples, jnp.int32)
+    K = samples.shape[1] - 1
+    match = (samples[:, :K] == drafts) & draft_ok            # (S, K)
+    run = jnp.cumprod(match.astype(jnp.int32), axis=1)       # leading 1s
+    a_match = jnp.sum(run, axis=1) + 1                       # accepted + fix
+    is_eos = (samples == eos[:, None]) & (eos >= 0)[:, None]
+    # token i survives the EOS cut iff no sampled EOS strictly before it:
+    # 1 (token 0 always) + number of prefixes of samples[:, :K] free of EOS
+    not_eos = 1 - is_eos[:, :K].astype(jnp.int32)
+    a_eos = 1 + jnp.sum(jnp.cumprod(not_eos, axis=1), axis=1)
+    a = jnp.minimum(jnp.minimum(a_match, a_eos),
+                    jnp.maximum(jnp.asarray(budget, jnp.int32), 1))
+    return a.astype(jnp.int32)
+
+
 def params_to_arrays(params: Sequence[Optional[SamplingParams]]):
     """[SamplingParams | None per slot] → dict of (slots,) numpy arrays
     (None → greedy defaults) matching ``sample_tokens``'s signature."""
@@ -123,4 +184,5 @@ def params_to_arrays(params: Sequence[Optional[SamplingParams]]):
     return out
 
 
-__all__ = ["SamplingParams", "GREEDY", "sample_tokens", "params_to_arrays"]
+__all__ = ["SamplingParams", "GREEDY", "sample_tokens",
+           "sample_tokens_multi", "spec_accept_counts", "params_to_arrays"]

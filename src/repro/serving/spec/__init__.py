@@ -1,0 +1,5 @@
+"""Speculative multi-token decoding: host draft proposers + device
+verification glue (docs/serving.md §Speculative decoding)."""
+from .propose import DraftProposer, SpecConfig, ngram_propose, replay_chain
+
+__all__ = ["SpecConfig", "DraftProposer", "ngram_propose", "replay_chain"]

@@ -1,0 +1,164 @@
+"""Host-side draft proposers for speculative multi-token decoding.
+
+The draft-and-verify split (docs/serving.md §Speculative decoding):
+
+* **Propose (host, this module)** — once per macro tick, per decoding
+  slot, build a draft *chain*: up to ``D * (K+1)`` tokens guessing the
+  slot's continuation.  Two free sources, no draft model:
+
+  - **prompt lookup** (`ngram_propose`): find the most recent earlier
+    occurrence of the context's trailing n-gram inside the context itself
+    and propose what followed it — repetitive generations (code, JSON,
+    chat boilerplate) re-emit their own history;
+  - **radix tree** (:meth:`~..prefix.tree.PrefixTree.extend`): if the
+    slot's full context (prompt + emitted tokens) is cached page-for-page,
+    the cached descendant chain is a previously *completed* generation of
+    this exact context — re-submitted / multi-turn traffic drafts its
+    entire prior completion.
+
+* **Verify (device, `serving.engine.make_fused_step`)** — each micro-step
+  scores the fed token plus the next K chain entries in one packed span
+  (the chunked-prefill machinery already prices multiple positions per
+  row), samples all K+1 positions under the position-keyed PRNG, and
+  accepts the longest matching prefix plus one corrective token.  The
+  chain survives across micro-steps of the same tick in-graph (a cursor +
+  liveness carry), so a fully-accepted step costs one micro-step for K+1
+  tokens.
+
+Proposers run on plain Python/numpy over host-known history — they cannot
+see device samples, which is exactly why verification (not proposal)
+owns correctness: a bad draft costs performance, never accuracy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding configuration (shape-static, like ``D``).
+
+    ``k`` drafts are verified per micro-step — the verified span is
+    ``k + 1`` columns wide, so ``k + 1 <= chunk`` is required.  ``ngram``
+    / ``min_ngram`` bound the prompt-lookup suffix lengths tried (longest
+    first); ``chain_len`` caps the per-tick chain (default ``D * (k+1)``,
+    the most a tick can consume).  ``use_tree`` / ``use_history`` toggle
+    the two proposer sources.
+    """
+    k: int = 4
+    ngram: int = 3
+    min_ngram: int = 1
+    chain_len: Optional[int] = None
+    use_tree: bool = True
+    use_history: bool = True
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"spec k must be >= 1, got {self.k}")
+        if not 1 <= self.min_ngram <= self.ngram:
+            raise ValueError(
+                f"need 1 <= min_ngram <= ngram, got "
+                f"{self.min_ngram}..{self.ngram}")
+
+
+def ngram_propose(context: Sequence[int], max_tokens: int, max_n: int = 3,
+                  min_n: int = 1) -> List[int]:
+    """Prompt-lookup drafting: propose what followed the most recent
+    earlier occurrence of the context's trailing n-gram.
+
+    Tries suffix lengths ``max_n .. min_n`` (longest first — a longer
+    matched suffix is stronger evidence); within a length, the MOST RECENT
+    earlier occurrence wins (locality: loops re-emit their latest
+    iteration).  Returns up to ``max_tokens`` tokens, possibly empty.
+    """
+    ctx = np.asarray(context, dtype=np.int64)
+    L = len(ctx)
+    for n in range(max_n, min_n - 1, -1):
+        if L < n + 1:
+            continue
+        tail = ctx[L - n:]
+        # all windows except the suffix itself, most recent first
+        windows = np.lib.stride_tricks.sliding_window_view(ctx[:-1], n)
+        hits = np.flatnonzero((windows == tail).all(axis=1))
+        if len(hits) == 0:
+            continue
+        start = int(hits[-1]) + n
+        cont = ctx[start:start + max_tokens]
+        if len(cont):
+            return [int(t) for t in cont]
+    return []
+
+
+class DraftProposer:
+    """Per-engine proposer combining the tree and history sources.
+
+    ``propose(adapter_id, context, max_tokens)`` returns the draft chain
+    for one slot.  The tree wins outright whenever it has ANYTHING: its
+    continuation replays a previously *verified* complete generation of
+    this exact context, so under greedy re-submission it is certain and
+    under sampling near-certain — whereas prompt lookup is a statistical
+    guess.  A long wrong guess is strictly worse than a short right one
+    (the first rejected draft kills the whole chain for the tick), so
+    length never overrides provenance; history only fills in when the
+    context runs past the cached pages (the generation's partial-page
+    tail, never inserted at retirement).
+    """
+
+    def __init__(self, cfg: SpecConfig, tree=None):
+        self.cfg = cfg
+        self.tree = tree            # PrefixTree | None (prefix cache off)
+
+    def propose(self, adapter_id: int, context: Sequence[int],
+                max_tokens: int) -> List[int]:
+        if len(context) == 0 or max_tokens <= 0:
+            return []
+        if self.cfg.use_tree and self.tree is not None:
+            best = self.tree.extend(adapter_id, context, max_tokens)
+            if best:
+                return best
+        if self.cfg.use_history:
+            return ngram_propose(context, max_tokens, max_n=self.cfg.ngram,
+                                 min_n=self.cfg.min_ngram)
+        return []
+
+
+def replay_chain(chain: Sequence[int], k: int, emitted_per_step,
+                 last_tokens, feed_start: int = 0):
+    """Host-side mirror of the in-graph chain automaton — exact
+    drafted/accepted accounting without widening the device stats lane.
+
+    The device consumes the chain with a ``(cursor, alive)`` carry whose
+    transitions are a deterministic function of the emitted counts (which
+    the host drains anyway): a feed step places ``min(k, len(chain) -
+    cursor)`` drafts while alive, emits ``e`` tokens of which ``e - 1``
+    are accepted drafts, and the chain stays alive only on full
+    acceptance (``e == k + 1``) whose corrective token matches the next
+    chain entry.  Replaying that automaton over the drained buffers gives
+    per-slot — hence per-tenant — ``(drafted, accepted)`` exactly.
+
+    ``emitted_per_step[t]`` / ``last_tokens[t]`` are the slot's emission
+    count and last emitted token at micro-step ``t``; steps before
+    ``feed_start`` (the prefill-final step, which samples but does not
+    speculate) are skipped.
+    """
+    drafted = accepted = 0
+    cur, ok = 0, True
+    for t, e in enumerate(emitted_per_step):
+        e = int(e)
+        if e == 0 or t < feed_start:
+            continue
+        if ok:
+            drafted += min(k, max(0, len(chain) - cur))
+        accepted += e - 1
+        alive = (ok and e == k + 1 and cur + k < len(chain)
+                 and int(last_tokens[t]) == int(chain[cur + k]))
+        if alive:
+            cur += k + 1
+        ok = alive
+    return drafted, accepted
+
+
+__all__ = ["SpecConfig", "DraftProposer", "ngram_propose", "replay_chain"]

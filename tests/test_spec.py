@@ -1,0 +1,486 @@
+"""Speculative multi-token decoding: proposer units (prompt-lookup n-gram,
+radix-tree extend, chain replay accounting), the vectorized accept rule vs a
+Python oracle, masked multi-position page writes, speculative page
+reserve/rollback ledger math, batched victim selection, generated-page
+retirement caching, and the end-to-end contract — spec-on streams bitwise
+identical to spec-off (greedy and sampled, prefix cache on and off,
+preemption mid-flight) on ONE traced executable."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke
+from repro.core.types import AdapterConfig
+from repro.kernels.paged_attention.ops import (gather_pages,
+                                               write_prefill_pages)
+from repro.models import Model
+from repro.serving import (PagePool, Request, SamplingParams, ServingEngine,
+                           ResilienceConfig, SpecConfig)
+from repro.serving.prefix import PrefixTree
+from repro.serving.resilience.policy import (VictimCandidate, select_victim,
+                                             select_victims)
+from repro.serving.sampling.sampler import spec_accept_counts
+from repro.serving.spec import DraftProposer, ngram_propose, replay_chain
+
+ACFG = AdapterConfig(method="mos", equiv_rank=2, rank=4, shards_per_vector=2,
+                     private_rank=1, dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke(get_config("granite-3-2b"))
+    m = Model(cfg, ACFG)
+    params, _ = m.init_params(jax.random.key(0))
+    states = []
+    for t in range(2):
+        st = m.init_adapter(jax.random.key(100))
+        st["trainable"] = jax.tree.map(
+            lambda v, tt=t: v + 0.02 * (tt + 1) * jax.random.normal(
+                jax.random.key(7 + tt), v.shape, v.dtype), st["trainable"])
+        states.append(st)
+    return m, params, states
+
+
+def _mk(model, **kw):
+    m, params, states = model
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 96)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("num_pages", 24)
+    kw.setdefault("decode_ticks", 4)
+    return ServingEngine(m, params, states, **kw)
+
+
+def _drain(eng, max_ticks=200):
+    fin = []
+    for _ in range(max_ticks):
+        fin += eng.step()
+        if not eng._queue and all(r is None for r in eng._active):
+            return fin
+    raise AssertionError("engine did not drain")
+
+
+# a prompt whose greedy continuation is self-repetitive: prompt lookup
+# finds its trailing n-grams, so drafts actually fire
+_REP = np.array([5, 6, 7, 5, 6, 7, 5, 6, 7, 5, 6], dtype=np.int32)
+
+
+def _req(rid, prompt=None, max_new=10, adapter_id=0, seed=None, **kw):
+    sp = (SamplingParams(temperature=0.8, top_k=20, seed=seed)
+          if seed is not None else None)
+    return Request(rid=rid, adapter_id=adapter_id, max_new=max_new,
+                   prompt=(_REP if prompt is None else prompt).copy(),
+                   sampling=sp, **kw)
+
+
+# ---------------------------------------------------------------------------
+# proposers (pure host units)
+# ---------------------------------------------------------------------------
+
+def test_ngram_propose_longest_suffix_most_recent_hit():
+    # tail [1, 2] occurs twice earlier; the MOST RECENT one (index 4)
+    # wins, proposing what followed it there
+    ctx = [1, 2, 9, 8, 1, 2, 7, 6, 1, 2]
+    assert ngram_propose(ctx, 3, max_n=2) == [7, 6, 1]
+    # a longer matched suffix beats a shorter one: tail [8, 1, 2] has an
+    # exact earlier occurrence only under n=3
+    ctx = [8, 1, 2, 4, 4, 1, 2, 5, 8, 1, 2]
+    assert ngram_propose(ctx, 2, max_n=3) == [4, 4]
+    assert ngram_propose(ctx, 2, max_n=2) == [5, 8]   # n=2 sees a later hit
+    # truncation + no-match + degenerate contexts
+    assert ngram_propose([1, 2, 3, 1, 2], 10, max_n=2) == [3, 1, 2]
+    assert ngram_propose([1, 2, 3, 4], 4) == []
+    assert ngram_propose([7], 4) == []
+    assert ngram_propose([], 4) == []
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError):
+        SpecConfig(k=0)
+    with pytest.raises(ValueError):
+        SpecConfig(min_ngram=3, ngram=2)
+
+
+def test_tree_extend_drafts_cached_continuation():
+    tree = PrefixTree(page_size=4)
+    toks = np.arange(1, 13, dtype=np.int32)          # 3 full pages
+    tree.insert(0, toks, [1, 2, 3])
+    # fully-cached context + partial tail → rest of that page, then the
+    # MRU descendant chain
+    assert tree.extend(0, toks[:6], 10) == [7, 8, 9, 10, 11, 12]
+    assert tree.extend(0, toks[:6], 3) == [7, 8, 9]
+    # page-aligned context: descendant chain only
+    assert tree.extend(0, toks[:8], 10) == [9, 10, 11, 12]
+    # divergent tail, uncached full page, foreign adapter → no draft
+    assert tree.extend(0, [1, 2, 3, 4, 5, 99], 10) == []
+    assert tree.extend(0, [9, 9, 9, 9, 1], 10) == []
+    assert tree.extend(1, toks[:6], 10) == []
+    # ambiguity resolves to the hottest (most recently used) branch
+    alt = np.array([1, 2, 3, 4, 5, 6, 7, 8, 50, 51, 52, 53], dtype=np.int32)
+    tree.insert(0, alt, [1, 2, 4])
+    assert tree.extend(0, toks[:8], 4) == [50, 51, 52, 53]
+    tree.match(0, np.append(toks, [77]))             # re-heat original chain
+    assert tree.extend(0, toks[:8], 4) == [9, 10, 11, 12]
+
+
+def test_tree_extend_is_lru_read_only():
+    tree = PrefixTree(page_size=4)
+    tree.insert(0, np.arange(8, dtype=np.int32), [1, 2])
+    stamps = {n.page: n.last_used for n in tree.nodes()}
+    tree.extend(0, np.arange(6, dtype=np.int32), 8)
+    assert {n.page: n.last_used for n in tree.nodes()} == stamps
+
+
+def test_draft_proposer_tree_wins_over_history():
+    tree = PrefixTree(page_size=4)
+    tree.insert(0, np.arange(1, 9, dtype=np.int32), [1, 2])
+    prop = DraftProposer(SpecConfig(k=2, ngram=2), tree)
+    # the tree replays a verified completed generation — it wins outright
+    assert prop.propose(0, [1, 2, 3, 4, 5], 8) == [6, 7, 8]
+    # ... even when prompt lookup would guess a LONGER chain: context
+    # [1..7, 1, 2] has tail [1, 2] recurring, but the cached page says
+    # the next token after [1..7] is 8 (a short right draft beats a long
+    # wrong one — the first rejection kills the whole chain)
+    assert prop.propose(0, [1, 2, 3, 4, 5, 6, 7], 8) == [8]
+    # tree misses → falls back to prompt lookup
+    assert prop.propose(0, [9, 4, 5, 9, 4], 2) == [5, 9]
+    # sources disabled / degenerate inputs
+    off = DraftProposer(SpecConfig(k=2, use_tree=False, use_history=False),
+                        tree)
+    assert off.propose(0, [1, 2, 3, 4, 5], 8) == []
+    assert prop.propose(0, [], 8) == []
+    assert prop.propose(0, [1, 2], 0) == []
+
+
+def test_replay_chain_accounting():
+    # full acceptance keeps the chain alive and advances the cursor
+    assert replay_chain([5, 6, 7, 8, 9, 10], 2, [3, 3, 1],
+                        [7, 10, 4]) == (4, 4)
+    # partial acceptance kills the chain: later steps draft nothing
+    assert replay_chain([5, 6, 7, 8], 2, [2, 1, 1], [9, 1, 2]) == (2, 1)
+    # full acceptance whose corrective token MISSES the next entry also
+    # kills it
+    assert replay_chain([5, 6, 7, 8], 2, [3, 1], [99, 1]) == (2, 2)
+    # chain exhausted mid-tick: drafted counts only what was offered
+    assert replay_chain([5], 4, [2, 1], [6, 1]) == (1, 1)
+    # steps before feed_start (prefill-final sample) are not speculative
+    assert replay_chain([5, 6], 2, [1, 3], [4, 6], feed_start=1) == (2, 2)
+    assert replay_chain([], 4, [1, 1], [3, 3]) == (0, 0)
+
+
+# ---------------------------------------------------------------------------
+# vectorized accept rule vs Python oracle
+# ---------------------------------------------------------------------------
+
+def _accept_oracle(samples, drafts, ok, eos, budget):
+    K = len(samples) - 1
+    a = 1
+    for j in range(K):
+        if not (ok[j] and samples[j] == drafts[j]):
+            break
+        a += 1
+    if eos >= 0:
+        for j in range(K + 1):
+            if samples[j] == eos:
+                a = min(a, j + 1)
+                break
+    return min(a, max(budget, 1))
+
+
+def test_spec_accept_counts_matches_oracle():
+    rng = np.random.default_rng(0)
+    S, K = 64, 4
+    samples = rng.integers(0, 6, (S, K + 1)).astype(np.int32)
+    drafts = rng.integers(0, 6, (S, K)).astype(np.int32)
+    ok = rng.random((S, K)) < 0.8
+    eos = rng.integers(-1, 6, S).astype(np.int32)
+    budget = rng.integers(-1, K + 3, S).astype(np.int32)
+    got = np.asarray(spec_accept_counts(jnp.asarray(samples),
+                                        jnp.asarray(drafts), jnp.asarray(ok),
+                                        jnp.asarray(eos),
+                                        jnp.asarray(budget)))
+    want = [_accept_oracle(samples[i], drafts[i], ok[i], int(eos[i]),
+                           int(budget[i])) for i in range(S)]
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# masked multi-position page write
+# ---------------------------------------------------------------------------
+
+def test_prefill_write_mask_vetoes_positions():
+    B, mp, ps, KVp, hd = 2, 2, 4, 2, 8
+    P = B * mp + 1
+    bt = jnp.asarray(1 + np.arange(B * mp).reshape(B, mp).astype(np.int32))
+    pool = jnp.full((P, ps, KVp, hd), -7.0)
+    S = 5
+    new = jax.random.normal(jax.random.key(0), (B, S, KVp, hd))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    mask = jnp.asarray([[True, True, False, True, False],
+                        [False, True, True, True, True]])
+    got = gather_pages(write_prefill_pages(pool, new, bt, pos, mask=mask), bt)
+    for b in range(B):
+        for s in range(S):
+            cell = np.asarray(got[b, s])
+            if bool(mask[b, s]):
+                np.testing.assert_array_equal(cell, np.asarray(new[b, s]))
+            else:
+                assert (cell == -7.0).all()        # vetoed → untouched
+
+
+# ---------------------------------------------------------------------------
+# speculative page ledger: rollback_tail
+# ---------------------------------------------------------------------------
+
+def test_pool_rollback_tail_returns_unused_growth():
+    pool = PagePool(num_pages=9, page_size=4, slots=2, max_pages_per_slot=6)
+    pool.reserve(0, 24)                       # traj 6 pages
+    pool.ensure(0, 20)                        # back 5 of them
+    assert pool.resident_pages(0) == 5 and pool.free_pages == 3
+    # acceptance fell short: only 9 tokens written → keep 3 columns
+    freed = pool.rollback_tail(0, 3)
+    assert len(freed) == 2 and pool.resident_pages(0) == 3
+    assert pool.free_pages == 5
+    assert (pool.block_tables[0, 3:] == 0).all()
+    # freed pages re-credit the reservation capped at the remaining
+    # trajectory (3 of 6 columns still uncovered) — the slot re-backs
+    # them later through the normal ensure gate
+    assert pool.reserved_unbacked(0) == 3
+    pool.check_invariants()
+    assert pool.rollback_tail(0, 3) == []     # idempotent
+    assert pool.rollback_tail(1, 0) == []     # non-owner no-op
+    pool.ensure(0, 24)
+    assert pool.resident_pages(0) == 6
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# batched victim selection
+# ---------------------------------------------------------------------------
+
+def _cand(slot, prio=0, reclaim=0, tick=0, resident=1):
+    return VictimCandidate(slot=slot, priority=prio,
+                           reclaimable_pages=reclaim, admit_tick=tick,
+                           resident_pages=resident)
+
+
+def test_select_victims_order_matches_single_policy():
+    cands = [_cand(0, prio=1, reclaim=0, tick=5, resident=2),
+             _cand(1, prio=0, reclaim=3, tick=9, resident=3),
+             _cand(2, prio=0, reclaim=3, tick=2, resident=2),
+             _cand(3, prio=2, reclaim=9, tick=0, resident=9)]
+    # k-th batch victim == the k-th sequential single pick
+    assert select_victims(cands, 2, need_pages=99) == [1, 2, 0]
+    assert select_victim(cands, 2) == 1
+    # batch stops once enough pages are covered
+    assert select_victims(cands, 2, need_pages=3) == [1]
+    assert select_victims(cands, 2, need_pages=4) == [1, 2]
+    # need<=0 degrades to the single-victim policy
+    assert select_victims(cands, 2, need_pages=0) == [1]
+    # priority floor still applies — no eligible victims, empty batch
+    assert select_victims(cands, 0, need_pages=99) == []
+
+
+def test_engine_batched_preemption_single_tick(model):
+    """A high-priority arrival needing more pages than ANY single victim
+    frees preempts the whole victim batch in one pressure event — and the
+    victims still resume bitwise-identically."""
+    kw = dict(num_pages=9, max_len=40, prefix_cache=False,
+              resilience=ResilienceConfig(pressure_ticks=2,
+                                          watchdog_ticks=30))
+    lows = lambda: [_req(i, prompt=np.arange(4 + i, 16 + i,
+                                             dtype=np.int32) % 90 + 4,
+                         max_new=16, seed=3 + i) for i in (0, 1)]
+    base_eng = _mk(model, **kw)
+    for r in lows():
+        base_eng.submit(r)
+    base = {r.rid: tuple(r.out) for r in _drain(base_eng)}
+
+    eng = _mk(model, **kw)
+    rs = lows()                  # 4 pages each → pool (8 usable) is full
+    for r in rs:
+        eng.submit(r)
+    eng.step()
+    # head needs 5 pages (40-token traj) — one victim frees only 4
+    head = _req(2, prompt=np.arange(100, 136, dtype=np.int32) % 90 + 4,
+                max_new=4, seed=9, priority=5)
+    eng.submit(head)
+    seen = 0
+    jumps = []
+    fin = []
+    for _ in range(40):
+        fin += eng.step()
+        now = eng.resilience_metrics()["preemptions"]
+        if now > seen:
+            jumps.append(now - seen)
+            seen = now
+        if not eng._queue and all(r is None for r in eng._active):
+            break
+    fin += _drain(eng)
+    assert sorted(r.rid for r in fin) == [0, 1, 2]
+    assert max(jumps) >= 2                   # batched, not one-per-event
+    assert head.error is None and len(head.out) == 4
+    for i in (0, 1):
+        assert rs[i].error is None and tuple(rs[i].out) == base[i]
+    eng.pages.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# generated-page retirement caching
+# ---------------------------------------------------------------------------
+
+def test_retirement_caches_generated_pages(model):
+    """Retirement inserts full pages of prompt+GENERATED tokens: an
+    identical re-submission prefix-hits past the prompt into its prior
+    completion (multi-turn traffic), and the tree drafts it."""
+    eng = _mk(model, prefix_cache=True, spec_decode=SpecConfig(k=4))
+    r0 = _req(0, max_new=12)
+    eng.submit(r0)
+    _drain(eng)
+    written = len(_REP) + 12 - 1
+    assert eng.prefix.cached_pages == written // eng.page_size
+    h0 = eng.prefix.stats.hit_tokens
+    # second turn: full first exchange as prompt → hit covers generated
+    # pages, and the tree can draft the continuation of a cached stream
+    turn2 = np.concatenate([_REP, np.asarray(r0.out[:-3], np.int32)])
+    assert len(turn2) > len(_REP) + eng.page_size - 1
+    ext = eng.prefix.tree.extend(0, turn2[:12], 4)
+    assert ext == [int(t) for t in turn2[12:16]]
+    r1 = _req(1, prompt=turn2, max_new=4)
+    eng.submit(r1)
+    _drain(eng)
+    hit = eng.prefix.stats.hit_tokens - h0
+    assert hit >= ((len(_REP) + 7) // 8) * 8   # beyond the prompt pages
+    eng.pages.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: spec-on == spec-off, bitwise
+# ---------------------------------------------------------------------------
+
+def test_spec_requires_unified_and_span_fit(model):
+    m, params, states = model
+    with pytest.raises(ValueError):
+        ServingEngine(m, params, states, unified=False,
+                      spec_decode=SpecConfig(k=2))
+    with pytest.raises(ValueError):
+        _mk(model, chunk=4, spec_decode=SpecConfig(k=4))
+
+
+@pytest.mark.parametrize("k", [2, 4])
+@pytest.mark.parametrize("seeded", [False, True])
+def test_spec_stream_parity_bitwise(model, k, seeded):
+    """The acceptance contract: spec-on token streams are bitwise
+    identical to spec-off (greedy AND sampled), with drafts genuinely
+    accepted and still exactly one traced executable."""
+    seeds = (11, 23) if seeded else (None, None)
+    reqs = lambda: [_req(0, max_new=14, adapter_id=0, seed=seeds[0]),
+                    _req(1, max_new=14, adapter_id=1, seed=seeds[1])]
+    base_eng = _mk(model, prefix_cache=True)
+    for r in reqs():
+        base_eng.submit(r)
+    base = {r.rid: tuple(r.out) for r in _drain(base_eng)}
+
+    eng = _mk(model, prefix_cache=True, spec_decode=SpecConfig(k=k))
+    rs = reqs()
+    for r in rs:
+        eng.submit(r)
+    _drain(eng)
+    for r in rs:
+        assert tuple(r.out) == base[r.rid]
+    # resubmit: the cache now holds the full first-round generations, so
+    # the tree drafts deeply — acceptance must not perturb the streams
+    rs2 = reqs()
+    for r in rs2:
+        eng.submit(r)
+    _drain(eng)
+    for r in rs2:
+        assert tuple(r.out) == base[r.rid]
+    sm = eng.spec_metrics()
+    assert sm["k"] == k and sm["accepted"] > 0
+    assert 0.0 <= sm["acceptance_rate"] <= 1.0
+    assert set(sm["per_tenant"]) == {"0", "1"}
+    assert len(eng.unified_traces) == 1
+    eng.pages.check_invariants()
+
+
+def test_spec_eos_mid_acceptance_stops_exactly(model):
+    """EOS appearing inside an accepted draft run truncates acceptance at
+    the EOS position: the spec-on stream ends exactly where spec-off
+    does, without post-EOS leaks."""
+    probe = _mk(model)
+    ref = _req(0, max_new=12)
+    probe.submit(ref)
+    _drain(probe)
+    full = list(ref.out)
+    j = next(i for i in range(1, 9) if full.index(full[i]) == i)
+    eos = int(full[j])
+
+    outs = {}
+    for key, spec in [("off", None), ("on", SpecConfig(k=4))]:
+        eng = _mk(model, prefix_cache=True, spec_decode=spec)
+        r0 = _req(0, max_new=12)            # warm the tree with the full
+        eng.submit(r0)                      # stream so drafts cross eos
+        _drain(eng)
+        r = _req(1, max_new=12, eos_id=eos)
+        eng.submit(r)
+        _drain(eng)
+        outs[key] = tuple(r.out)
+        eng.pages.check_invariants()
+    assert outs["on"] == outs["off"] == tuple(full[:j + 1])
+    assert outs["on"][-1] == eos
+
+
+def test_spec_random_schedule_property(model):
+    """Fuzzed acceptance sweep: K ∈ {0, 2, 4} × greedy/sampled × prefix
+    cache on/off × a random mid-flight preemption — every combination
+    must reproduce the spec-off stream bitwise."""
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _minihyp import given, settings, strategies as st
+
+    engines, base = {}, {}
+
+    def get_engine(k, pc):
+        key = (k, pc)
+        if key not in engines:
+            engines[key] = _mk(model, prefix_cache=pc,
+                               spec_decode=(SpecConfig(k=k) if k else None))
+        return engines[key]
+
+    def reqs(seeded):
+        seeds = (11, 23) if seeded else (None, None)
+        return [_req(0, max_new=10, adapter_id=0, seed=seeds[0]),
+                _req(1, max_new=10, adapter_id=1, seed=seeds[1])]
+
+    @settings(max_examples=6, deadline=None)
+    @given(k=st.sampled_from([0, 2, 4]), seeded=st.integers(0, 1),
+           pc=st.sampled_from([False, True]), ptick=st.integers(1, 6),
+           which=st.integers(0, 1))
+    def prop(k, seeded, pc, ptick, which):
+        if seeded not in base:
+            ref = get_engine(0, False)
+            for r in reqs(seeded):
+                ref.submit(r)
+            base[seeded] = {r.rid: tuple(r.out) for r in _drain(ref)}
+        eng = get_engine(k, pc)
+        rs = reqs(seeded)
+        for r in rs:
+            eng.submit(r)
+        for t in range(1, 30):
+            eng.step()
+            if t == ptick:
+                eng.preempt(rs[which].rid)
+            if not eng._queue and all(a is None for a in eng._active):
+                break
+        fin = {r.rid: r for r in _drain(eng)}
+        for rid, r in fin.items():
+            assert r.error is None and tuple(r.out) == base[seeded][rid], \
+                (k, seeded, pc, ptick, which)
+        eng.pages.check_invariants()
+
+    prop()
+    for eng in engines.values():
+        assert len(eng.unified_traces) == 1
