@@ -54,6 +54,16 @@ completed requests, interactive-class TTFT/ITL in engine ticks, and the
 preemption count per cell (the degradation-ladder price of evicting a
 background resident through the prefix cache vs plain backpressure).
 
+And the **overload-brownout sweep** (``overload_brownout``): offered
+load (arrivals per tick at ~0.75×/1.5×/3× serving capacity) × the
+brownout ladder on/off on a bounded-queue engine for a fixed tick
+budget.  Ladder off is plain unbounded queueing; ladder on caps the
+queue (typed ``RetryLater`` rejections with a load hint) and degrades
+in flight (shrink/disable speculation, shed lowest-priority queued
+work).  Recorded per cell: accepted/rejected/shed/completed counts,
+p50/p99 TTFT in engine ticks, goodput (completed tokens per tick), and
+the starvation count — asserted ZERO with the ladder on at every load.
+
 And the **telemetry-overhead sweep** (``telemetry_overhead``): the same
 decode workload through an engine with telemetry fully off
 (``metrics=False``) vs fully on (metrics + lifecycle tracing).  Streams
@@ -107,10 +117,10 @@ from repro.core import AdapterConfig
 from repro.models import Model
 from repro.models.transformer import arch_stacks, cache_seq_len
 from repro.serving import (ObservabilityConfig, PagePool, Request,
-                           ResilienceConfig, ServingEngine, SpecConfig,
-                           make_serve_step, profile_serving_kernels,
-                           stack_tenants, validate_chrome_trace,
-                           validate_prometheus)
+                           ResilienceConfig, RetryLater, ServingEngine,
+                           SpecConfig, make_serve_step,
+                           profile_serving_kernels, stack_tenants,
+                           validate_chrome_trace, validate_prometheus)
 
 MAX_LEN = 32
 PAGE_SIZE = 8
@@ -576,6 +586,105 @@ def bench_preempt_pressure(model, params, states, fast: bool = False):
     return rows
 
 
+def bench_overload_brownout(model, params, states, fast: bool = False):
+    """Offered load × brownout ladder on/off (see module docstring).
+
+    Deterministic off-TPU: arrivals, scheduling, and the ladder are all
+    tick-driven, so every count and tick latency in a cell replays
+    exactly.  ``ladder off`` is unbounded queueing — nothing is ever
+    rejected, TTFT grows with the backlog; ``ladder on`` bounds the
+    queue at 2×slots with typed RetryLater rejections and engages the
+    staged in-flight degradation.  The acceptance bar asserted here:
+    with the ladder on, ZERO starvation aborts at every offered load,
+    every admitted request terminal by drain, and rejections typed."""
+    budget = 40 if fast else 80
+    # arrivals per 2 ticks on a 2-slot engine where a request costs ~3
+    # ticks end-to-end: 1 ≈ 0.75× capacity, 2 ≈ 1.5×, 4 ≈ 3×
+    loads = [1, 4] if fast else [1, 2, 4]
+    rows = []
+    for arrivals in loads:
+        for brownout in (False, True):
+            rcfg = (ResilienceConfig(pressure_ticks=2,
+                                     watchdog_ticks=budget + 8)
+                    if not brownout else
+                    ResilienceConfig(pressure_ticks=2,
+                                     watchdog_ticks=budget + 8,
+                                     max_queue=4, brownout=True,
+                                     brownout_queue_depth=3,
+                                     brownout_engage_ticks=2,
+                                     brownout_release_ticks=4))
+            eng = ServingEngine(model, params, states[:2], slots=2,
+                                max_len=MAX_LEN, page_size=PAGE_SIZE,
+                                num_pages=13, prefix_cache=True,
+                                resilience=rcfg)
+            rid = 0
+            accepted, rejected = [], 0
+            sub_tick, first_tick = {}, {}
+            done = []
+            rung_max = 0
+            for tick in range(budget):
+                if tick % 2 == 0:
+                    for _ in range(arrivals):
+                        rid += 1
+                        r = Request(
+                            rid=rid,
+                            prompt=(np.arange(8, dtype=np.int32)
+                                    * (rid + 2)) % 90 + 4,
+                            adapter_id=rid % 2, max_new=2)
+                        try:
+                            eng.submit(r)
+                            accepted.append(r)
+                            sub_tick[rid] = tick
+                        except RetryLater:
+                            rejected += 1
+                done += eng.step()          # ladder on: must never raise
+                rung_max = max(rung_max, eng._brownout_rung)
+                for r in accepted:
+                    if r.out and r.rid not in first_tick:
+                        first_tick[r.rid] = tick + 1
+            # drain the tail so "admitted ⇒ terminal" is checkable
+            for tick in range(budget, budget + 64):
+                if not eng._queue and all(a is None for a in eng._active):
+                    break
+                done += eng.step()
+                for r in accepted:
+                    if r.out and r.rid not in first_tick:
+                        first_tick[r.rid] = tick + 1
+            eng.pages.check_invariants()
+            m = eng.resilience_metrics()
+            ok = [r for r in done if r.error is None]
+            shed = [r for r in done if isinstance(r.error, RetryLater)]
+            if brownout:
+                assert m["starvation_aborts"] == 0, m
+                assert len(done) == len(accepted), \
+                    (len(done), len(accepted))
+            ttft = sorted(first_tick[r.rid] - sub_tick[r.rid]
+                          for r in ok if r.rid in first_tick)
+            pct = (lambda q: ttft[min(len(ttft) - 1,
+                                      int(q * len(ttft)))] if ttft
+                   else None)
+            row = {"arrivals_per_2ticks": arrivals, "brownout": brownout,
+                   "tick_budget": budget,
+                   "offered": len(accepted) + rejected,
+                   "accepted": len(accepted),
+                   "rejected_retry_later": rejected,
+                   "shed": len(shed), "completed": len(ok),
+                   "ttft_ticks_p50": pct(0.50), "ttft_ticks_p99": pct(0.99),
+                   "goodput_tokens_per_tick":
+                       sum(len(r.out) for r in ok)
+                       / max(1, eng.tick_count),
+                   "starvation_aborts": m["starvation_aborts"],
+                   "max_brownout_rung": rung_max if brownout else None}
+            rows.append(row)
+            print(f"overload_brownout load={arrivals}/2t "
+                  f"ladder={'on ' if brownout else 'off'} "
+                  f"offered={row['offered']:3d} done={row['completed']:3d} "
+                  f"rej={rejected:3d} shed={len(shed):3d} "
+                  f"ttft_p99={row['ttft_ticks_p99'] or -1:3d} "
+                  f"goodput={row['goodput_tokens_per_tick']:.2f} tok/tick")
+    return rows
+
+
 def bench_spec_decode(model, params, states, fast: bool = False):
     """Speculative decoding on repetitive shared-prefix traffic.
 
@@ -744,6 +853,8 @@ def main(fast: bool = False):
     spec_decode = bench_spec_decode(model, params, stag_states, fast=fast)
     preempt_pressure = bench_preempt_pressure(model, params, stag_states,
                                               fast=fast)
+    overload_brownout = bench_overload_brownout(model, params, stag_states,
+                                                fast=fast)
     telemetry, eng_obs = bench_telemetry_overhead(model, params, stag_states,
                                                   fast=fast)
     kernel_roofline = profile_serving_kernels(
@@ -783,6 +894,7 @@ def main(fast: bool = False):
         "prefix_reuse": prefix_reuse,
         "spec_decode": spec_decode,
         "preempt_pressure": preempt_pressure,
+        "overload_brownout": overload_brownout,
         "telemetry_overhead": telemetry,
         "kernel_roofline": kernel_roofline,
     }

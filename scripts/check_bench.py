@@ -63,7 +63,8 @@ REPO = Path(__file__).resolve().parent.parent
 # on every one of these that both rows carry
 IDENTITY = ("T", "B", "backend", "cache", "mode", "decode_ticks",
             "unified", "tenants", "shared_frac", "prefix_cache",
-            "num_pages", "preempt", "telemetry", "k", "shared_tokens")
+            "num_pages", "preempt", "telemetry", "k", "shared_tokens",
+            "arrivals_per_2ticks", "brownout")
 
 HIGHER_IS_BETTER = lambda key: "tokens_per_sec" in key      # noqa: E731
 LOWER_IS_BETTER = ("ttft_ms_mean", "ttft_ms_max", "ttft_ticks_mean")

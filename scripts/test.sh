@@ -4,8 +4,11 @@
 #                            sweeps (developer inner loop)
 #   scripts/test.sh tier1  — the canonical tier-1 command (ROADMAP.md)
 #   scripts/test.sh chaos  — resilience chaos lane: the fixed-seed chaos
-#                            schedule plus ONE randomized seed (printed up
-#                            front; rerun with REPRO_CHAOS_SEED=<seed>)
+#                            schedule (plain + spec-decode engines, both
+#                            including an elastic geometry-changing
+#                            restore) plus ONE randomized seed whose
+#                            reshape geometry is drawn from it and printed
+#                            (rerun with REPRO_CHAOS_SEED=<seed>)
 #   scripts/test.sh obs    — observability lane: telemetry invariance +
 #                            exporter schema tests, then the fast bench
 #                            (which writes the BENCH_serving.json report
@@ -26,7 +29,8 @@ case "${1:-fast}" in
     python -m pytest -q tests/test_resilience.py -k chaos
     seed="${REPRO_CHAOS_SEED:-$((RANDOM * 32768 + RANDOM))}"
     echo "chaos lane randomized seed: $seed (REPRO_CHAOS_SEED=$seed to repro)"
-    REPRO_CHAOS_SEED="$seed" exec python -m pytest -q \
+    # -s so the randomized elastic-restore geometry draw is printed
+    REPRO_CHAOS_SEED="$seed" exec python -m pytest -q -s \
         tests/test_resilience.py -k test_chaos_randomized_seed
     ;;
   obs)

@@ -10,6 +10,12 @@ global step, not by per-host iterator state.
 ``place`` puts a restored global tree onto a live mesh with the given
 rules/axes (device_put with NamedShardings) — used both after restore and
 after reshard.
+
+The serving-side counterpart is ``serving.resilience.reshape``: the same
+host-side rewrite-a-saved-layout idea applied to engine snapshots — it
+re-places an engine snapshot onto a new page-pool geometry (``slots``/
+``num_pages``/``page_size``) instead of a parameter checkpoint onto a new
+device mesh.
 """
 from __future__ import annotations
 

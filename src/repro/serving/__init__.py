@@ -11,7 +11,7 @@ from .paging import PagePool, paginate_cache
 from .prefix import PrefixCache, PrefixHit, PrefixStats, PrefixTree
 from .resilience import (DeadlineExceeded, Fault, FaultHarness, FaultPlan,
                          NeverFitsError, RequestCancelled, RequestError,
-                         ResilienceConfig, ResilienceStats, SlotQuarantined,
-                         StarvationError, TTLExpired)
+                         ResilienceConfig, ResilienceStats, RetryLater,
+                         SlotQuarantined, StarvationError, TTLExpired)
 from .sampling import SamplingParams, sample_tokens
 from .spec import DraftProposer, SpecConfig, ngram_propose

@@ -64,7 +64,7 @@ from .observability import (QUEUE_LANE, TICK_LANE, MetricsRegistry,
 from .paging import PagePool
 from .prefix import PrefixCache
 from .resilience.errors import (DeadlineExceeded, NeverFitsError,
-                                RequestCancelled, RequestError,
+                                RequestCancelled, RequestError, RetryLater,
                                 SlotQuarantined, StarvationError,
                                 TTLExpired)
 from .resilience.policy import (ResilienceConfig, ResilienceStats,
@@ -430,6 +430,7 @@ class Request:
     admit_tick: int = dataclasses.field(default=-1, repr=False)
     enq_tick: int = dataclasses.field(default=-1, repr=False)
     preemptions: int = dataclasses.field(default=0, repr=False)
+    salvage_strikes: int = dataclasses.field(default=0, repr=False)
 
     @property
     def failed(self) -> bool:
@@ -708,6 +709,14 @@ class ServingEngine:
         self._progress = False               # set by any scheduler progress
         self._stalled_now: set = set()       # slots page-stalled this tick
         self._tick_failed: List[Request] = []   # failed mid-admission
+        # --- overload brownout ladder (serving.resilience) ------------
+        # rung 0 = healthy, 1 = spec K halved, 2 = spec off, 3 = shed
+        # lowest-priority queued work.  Sustained-pressure counters give
+        # the engage/release hysteresis; transitions feed the registry.
+        self._brownout_rung = 0
+        self._bo_hot = 0                     # consecutive pressured ticks
+        self._bo_calm = 0                    # consecutive calm ticks
+        self._bo_transitions: Dict[str, int] = {"up": 0, "down": 0}
         # --- unified telemetry (serving.observability) ----------------
         self.obs = observability if observability is not None \
             else ObservabilityConfig()
@@ -850,6 +859,28 @@ class ServingEngine:
             if need_p > cap_p:
                 self.rstats.never_fit_rejections += 1
                 raise NeverFitsError(req.rid, need_p, cap_p)
+        # --- overload brownout: bounded-queue / SLO-aware admission ----
+        # Checked LAST so permanent rejections (never-fits, validation)
+        # win over the transient one; RetryLater carries a load hint so
+        # the caller can back off and resubmit.  Never fires below
+        # max_queue (or the request's per-priority depth limit).
+        depth = len(self._queue)
+        limit = self.rcfg.max_queue
+        plim = self.rcfg.depth_limit_for(req.priority)
+        if plim is not None:
+            pdepth = sum(r.priority == req.priority for r in self._queue)
+            if pdepth >= plim and (limit is None or plim <= limit):
+                depth, limit = pdepth, plim
+        if limit is not None and depth >= limit:
+            self.rstats.retry_later_rejections += 1
+            if self.tracer is not None:
+                self.tracer.instant("retry_later", QUEUE_LANE,
+                                    rid=int(req.rid),
+                                    depth=int(depth), limit=int(limit))
+            raise RetryLater(
+                req.rid, self.tick_count, depth, limit,
+                free_pages=self.pages.free_pages if self.paged else -1,
+                rung=self._brownout_rung)
         req.submit_tick = req.enq_tick = self.tick_count
         self._rids.add(req.rid)
         self._queue.append(req)
@@ -1024,6 +1055,13 @@ class ServingEngine:
         R.counter("serving_resilience_events_total",
                   "ResilienceStats counters", labelnames=("event",),
                   fn=self._resilience_counters)
+        R.gauge("serving_brownout_rung",
+                "Overload brownout ladder rung (0 healthy … 3 shedding)",
+                fn=lambda: self._brownout_rung)
+        R.counter("serving_brownout_transitions_total",
+                  "Brownout rung transitions", labelnames=("direction",),
+                  fn=lambda: {(d,): v
+                              for d, v in self._bo_transitions.items()})
         R.histogram("serving_time_in_queue_ticks",
                     "Submit/requeue → admission wait",
                     fn=lambda: {(): Pow2Histogram.from_values(
@@ -1303,6 +1341,135 @@ class ServingEngine:
         req.enq_tick = self.tick_count
         self._queue.insert(min(requeue_at, len(self._queue)), req)
         self._progress = True
+
+    def _salvage_slot(self, s: int):
+        """Quarantine salvage: requeue a NaN-poisoned slot's request with
+        its stream truncated at the last finite token instead of
+        discarding it.  The drain loop stopped appending at the first
+        non-finite token, so ``req.out`` already holds exactly the finite
+        prefix; re-admission folds it into the effective prompt and
+        recomputes from scratch — ``cache_prefix=False`` because the
+        slot's KV may be poisoned and must never park in the prefix tree.
+        The PRNG position-counter contract makes the resumed stream
+        bitwise identical past the truncation point."""
+        req = self._active[s]
+        self._release_slot(s, cache_prefix=False)
+        self.rstats.salvaged += 1
+        self._note_slot_close(s, req, "salvage")
+        if self.tracer is not None:
+            self.tracer.instant("salvage", slot_lane(s), rid=int(req.rid),
+                                strikes=int(req.salvage_strikes))
+            self._submit_us[req.rid] = self.tracer.now_us()
+            self.tracer.instant("requeue", QUEUE_LANE, rid=int(req.rid))
+        req.enq_tick = self.tick_count
+        self._queue.insert(0, req)
+        self._progress = True
+
+    # ------------------------------------------------------------------
+    # overload brownout ladder (serving.resilience)
+    # ------------------------------------------------------------------
+
+    def _brownout_queue_threshold(self) -> int:
+        if self.rcfg.brownout_queue_depth is not None:
+            return self.rcfg.brownout_queue_depth
+        if self.rcfg.max_queue is not None:
+            return self.rcfg.max_queue
+        return 2 * self.slots
+
+    def _brownout_pressured(self) -> bool:
+        """One tick's pressure verdict from the three sustained-load
+        signals: queue depth, head starvation age, free-page ratio."""
+        if len(self._queue) >= self._brownout_queue_threshold():
+            return True
+        hw = self.rcfg.brownout_head_wait
+        if hw is None:
+            hw = self.rcfg.pressure_ticks
+        if self._queue and self._head_wait >= hw:
+            return True
+        if self.paged and self.rcfg.brownout_free_frac > 0.0:
+            alloc = max(1, self.num_pages - 1)
+            if self.pages.free_pages / alloc <= self.rcfg.brownout_free_frac:
+                return True
+        return False
+
+    def spec_k_effective(self) -> int:
+        """Speculative depth after brownout: rung 1 halves K, rung ≥ 2
+        disables drafting entirely (the executable is untouched — shorter
+        or empty draft chains are trace-safe by the -1 padding)."""
+        if self.spec_k <= 0:
+            return 0
+        if self._brownout_rung <= 0:
+            return self.spec_k
+        if self._brownout_rung == 1:
+            return self.spec_k // 2
+        return 0
+
+    def _brownout_transition(self, direction: str):
+        self._bo_hot = self._bo_calm = 0
+        self._bo_transitions[direction] += 1
+        if self.tracer is not None:
+            self.tracer.instant(f"brownout_{direction}", TICK_LANE,
+                                rung=int(self._brownout_rung))
+
+    def _brownout_shed(self) -> List[Request]:
+        """Rung 3: shed lowest-priority queued work until the queue is
+        back under the pressure threshold.  Sheds strictly from the
+        minimum-priority class present, youngest (latest ``enq_tick``,
+        then highest queue position) first, and never touches the FIFO
+        head — the oldest waiter keeps its admission claim.  Shed
+        requests fail typed with ``RetryLater`` so callers can tell
+        load-shedding from permanent rejection."""
+        # shed strictly BELOW the pressure threshold: stopping at it
+        # would leave the queue-depth signal pressured forever, wedging
+        # the ladder at rung 3 with nothing left to shed
+        target = self._brownout_queue_threshold() - 1
+        shed: List[Request] = []
+        while len(self._queue) > max(1, target):
+            lowest = min(r.priority for r in self._queue[1:])
+            idx = max((i for i, r in enumerate(self._queue)
+                       if i > 0 and r.priority == lowest),
+                      key=lambda i: (self._queue[i].enq_tick, i))
+            req = self._queue.pop(idx)
+            err = RetryLater(
+                req.rid, self.tick_count, len(self._queue), target,
+                free_pages=self.pages.free_pages if self.paged else -1,
+                rung=self._brownout_rung,
+                detail=f"shed at brownout rung {self._brownout_rung}")
+            req.error = err
+            req.done = True
+            self._rids.discard(req.rid)
+            self._cancel_req.discard(req.rid)
+            self.rstats.shed_requests += 1
+            self._note_queue_fail(req, err)
+            shed.append(req)
+        return shed
+
+    def _brownout_tick(self) -> List[Request]:
+        """Advance the ladder one tick: climb a rung after
+        ``brownout_engage_ticks`` consecutive pressured ticks, descend
+        after ``brownout_release_ticks`` calm ones (engage ≠ release →
+        hysteresis; every rung is reversible).  At rung 3 each pressured
+        tick sheds queued work.  Returns the requests shed this tick."""
+        if not self.rcfg.brownout:
+            return []
+        pressured = self._brownout_pressured()
+        if pressured:
+            self._bo_hot += 1
+            self._bo_calm = 0
+            if self._bo_hot >= self.rcfg.brownout_engage_ticks \
+                    and self._brownout_rung < 3:
+                self._brownout_rung += 1
+                self._brownout_transition("up")
+            if self._brownout_rung >= 3:
+                return self._brownout_shed()
+        else:
+            self._bo_calm += 1
+            self._bo_hot = 0
+            if self._bo_calm >= self.rcfg.brownout_release_ticks \
+                    and self._brownout_rung > 0:
+                self._brownout_rung -= 1
+                self._brownout_transition("down")
+        return []
 
     def _lifecycle_sweep(self) -> List[Request]:
         """Tick-boundary cancel/TTL/deadline processing over the queue
@@ -1842,7 +2009,16 @@ class ServingEngine:
         # at the first feed step after prefill, entirely in-carry.
         # KP1 also widens the decode lanes' page pre-extension:
         # a fully-accepting slot writes K+1 positions per micro-step.
+        # Brownout shrinks the EFFECTIVE K host-side (rung 1 halves it,
+        # rung ≥ 2 stops drafting): the chain buffer and the executable
+        # keep their static shape — a shorter (or empty) chain just
+        # exhausts sooner and the device degrades to plain decode — while
+        # the worst-case page pre-extension shrinks with it, which is the
+        # point under page pressure.  Streams stay bitwise identical (the
+        # spec on/off parity contract).
         KP1 = self.spec_k + 1
+        k_eff = self.spec_k_effective()
+        KP1_eff = k_eff + 1
         chain = None
         if self.spec_k:
             chain = np.full((S, D * KP1), -1, np.int32)
@@ -1912,9 +2088,10 @@ class ServingEngine:
                 # decode tail after mid-tick completion: the first token
                 # falls out of the chunk's logits (no extra write); each
                 # further token writes its predecessor at plen..
-                want = min(max(D - 1 - t_done, 0) * KP1, max(rem - 1, 0))
+                want = min(max(D - 1 - t_done, 0) * KP1_eff,
+                           max(rem - 1, 0))
                 cap[s] = min(rem, 1 + self._ensure_growth(s, L, want))
-                if chain is not None and t_done < D - 1:
+                if chain is not None and k_eff > 0 and t_done < D - 1:
                     # the prefill-final step samples the first token
                     # in-graph, so the host can't draft it — but it CAN
                     # draft what follows: propose from the effective
@@ -1922,15 +2099,16 @@ class ServingEngine:
                     # in-graph sample supersedes it; if the guess was
                     # wrong the tail just gets rejected).  The chain
                     # engages at the first feed step, t_done + 1.
+                    p_len = (chain.shape[1] if k_eff == self.spec_k
+                             else max(D - 1 - t_done, 0) * KP1_eff)
                     props = self._proposer.propose(
-                        int(req.adapter_id), list(eff),
-                        chain.shape[1] + 1)[1:]
+                        int(req.adapter_id), list(eff), p_len + 1)[1:]
                     if props:
                         chain[s, :len(props)] = props
                     self._spec_info[s] = (t_done + 1, props)
             else:
                 n = self._len[s]
-                avail = self._ensure_growth(s, n, min(D * KP1, rem))
+                avail = self._ensure_growth(s, n, min(D * KP1_eff, rem))
                 if avail <= 0:
                     self._stalled_now.add(s)
                     continue             # oversubscribed decode stall
@@ -1938,10 +2116,12 @@ class ServingEngine:
                 tok0[s] = req.out[-1] if req.out else int(eff[-1])
                 len0[s] = n
                 cap[s] = min(rem, avail)
-                if chain is not None:
+                if chain is not None and k_eff > 0:
                     context = list(req.prompt) + list(req.out)
                     props = self._proposer.propose(
-                        int(req.adapter_id), context, chain.shape[1])
+                        int(req.adapter_id), context,
+                        chain.shape[1] if k_eff == self.spec_k
+                        else D * KP1_eff)
                     if props:
                         chain[s, :len(props)] = props
                     self._spec_info[s] = (0, props)
@@ -1965,6 +2145,7 @@ class ServingEngine:
         if finished:
             self._progress = True
         self._pressure_preempt()
+        finished += self._brownout_tick()
         self._admit_unified()
         finished += self._tick_failed
         D = self._tick_D()
@@ -2054,17 +2235,29 @@ class ServingEngine:
                         self._m_drafted.inc(dr, tenant=tn)
                         self._m_accepted.inc(ac, tenant=tn)
             if poisoned_at is not None:
-                # per-slot quarantine: typed failure, pages freed (NEVER
-                # cached — the KV may be poisoned), co-tenants untouched
+                # per-slot quarantine: the stream truncates at the last
+                # finite token and co-tenants are untouched.  With a
+                # salvage budget left, the request requeues as an
+                # effective-prompt replay (pages freed, NEVER cached —
+                # the KV may be poisoned) and resumes bitwise identical
+                # past the truncation; budget exhausted → typed discard.
                 self.rstats.quarantined_slots += 1
                 if tr is not None:
                     tr.instant("quarantine", slot_lane(s),
                                rid=int(req.rid), micro_step=int(poisoned_at))
+                if req.salvage_strikes < self.rcfg.salvage_retries:
+                    req.salvage_strikes += 1
+                    self._salvage_slot(s)
+                    continue
+                if self.rcfg.salvage_retries > 0:
+                    self.rstats.salvage_retries_exhausted += 1
                 finished.append(self._fail_active(
                     s, SlotQuarantined(
                         req.rid, self.tick_count,
                         f"non-finite logits in slot {s} at micro-step "
-                        f"{poisoned_at}"),
+                        f"{poisoned_at}"
+                        + (f" after {req.salvage_strikes} salvage "
+                           f"retries" if req.salvage_strikes else "")),
                     cache_prefix=False))
                 continue
             if req.out:

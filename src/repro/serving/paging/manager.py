@@ -424,6 +424,23 @@ class PagePool:
         self.block_tables[slot, :] = TRASH_PAGE
         return prefix
 
+    def adopt_cached(self, n: int = 1) -> List[int]:
+        """Move up to ``n`` free pages directly into *cached* status and
+        return them — the elastic-restore import path
+        (``serving.resilience.reshape``) uses this to materialize
+        re-blocked prefix-cache pages in a fresh pool without routing
+        them through a slot.  The caller owns inserting the pages into
+        the prefix tree (``check_invariants``/``PrefixCache.check``
+        require tree and ``_cached`` to agree exactly).  Returns fewer
+        than ``n`` pages (possibly none) when the free list runs dry;
+        promised-but-unbacked reservations are never dipped into."""
+        out: List[int] = []
+        while len(out) < n and len(self._free) > self.unbacked_total():
+            page = self._pop_free()
+            self._cached.add(page)
+            out.append(page)
+        return out
+
     def free_cached(self, page: int):
         """Prefix-cache eviction endpoint: move an idle cached page (no
         slot references) back to the free list."""

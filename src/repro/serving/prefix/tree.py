@@ -181,6 +181,31 @@ class PrefixTree:
             node = child
         return created, dups
 
+    def graft(self, adapter_id: int, tokens, page: int,
+              last_used: int) -> Node:
+        """Attach ONE node holding the final ``page_size`` tokens of
+        ``tokens`` (a full root path whose length is a multiple of
+        ``page_size``), with an explicit LRU stamp and WITHOUT touching
+        the clock — the elastic-restore re-blocking path builds a target
+        tree node by node, parents first, carrying the source snapshot's
+        eviction order over.  All ancestor nodes must already exist; the
+        target node must not."""
+        ps = self.page_size
+        assert len(tokens) >= ps and len(tokens) % ps == 0, len(tokens)
+        root = self._roots.get(int(adapter_id))
+        if root is None:
+            root = self._roots[int(adapter_id)] = Node(None, None, None)
+        node = root
+        for i in range(0, len(tokens) - ps, ps):
+            node = node.children[tuple(int(t) for t in tokens[i:i + ps])]
+        key = tuple(int(t) for t in tokens[-ps:])
+        assert key not in node.children, "grafting over an existing node"
+        child = Node(key, int(page), node)
+        child.last_used = int(last_used)
+        node.children[key] = child
+        self.size += 1
+        return child
+
     def remove(self, node: Node):
         """Unlink a childless node (eviction)."""
         assert not node.children, "evicting an interior node"

@@ -1,25 +1,33 @@
 """Request-lifecycle robustness layer for the serving engine.
 
-Four pieces (docs/serving.md §Failure semantics):
+Five pieces (docs/serving.md §Failure semantics):
 
-  * ``errors``   — typed per-request failures + engine ``StarvationError``
-  * ``policy``   — ``ResilienceConfig``, deterministic preemption victim
-                   selection, ``ResilienceStats`` telemetry
+  * ``errors``   — typed per-request failures (incl. the transient
+                   ``RetryLater`` overload rejection) + engine
+                   ``StarvationError``
+  * ``policy``   — ``ResilienceConfig`` (preemption, salvage budget,
+                   bounded queue, brownout ladder), deterministic
+                   preemption victim selection, ``ResilienceStats``
   * ``snapshot`` — engine kill/restore through ``checkpoint.io``
+  * ``reshape``  — elastic (geometry-changing) restore: host-side
+                   repacking of pages/ledger/prefix-tree/queue into a
+                   target engine with different ``slots``/``num_pages``/
+                   ``page_size``
   * ``faults``   — seedable deterministic ``FaultPlan`` injection harness
 """
 from .errors import (DeadlineExceeded, NeverFitsError, RequestCancelled,
-                     RequestError, SlotQuarantined, StarvationError,
-                     TTLExpired)
+                     RequestError, RetryLater, SlotQuarantined,
+                     StarvationError, TTLExpired)
 from .faults import FAULT_KINDS, Fault, FaultHarness, FaultPlan
 from .policy import (ResilienceConfig, ResilienceStats, VictimCandidate,
                      select_victim)
+from .reshape import reshape_restore
 from .snapshot import restore_engine, snapshot_engine
 
 __all__ = [
     "RequestError", "RequestCancelled", "DeadlineExceeded", "TTLExpired",
-    "SlotQuarantined", "NeverFitsError", "StarvationError",
+    "SlotQuarantined", "RetryLater", "NeverFitsError", "StarvationError",
     "ResilienceConfig", "ResilienceStats", "VictimCandidate",
     "select_victim", "Fault", "FaultPlan", "FaultHarness", "FAULT_KINDS",
-    "snapshot_engine", "restore_engine",
+    "snapshot_engine", "restore_engine", "reshape_restore",
 ]

@@ -58,6 +58,36 @@ class SlotQuarantined(RequestError):
     kind = "quarantined"
 
 
+class RetryLater(RequestError, ValueError):
+    """Overload brownout rejection: the engine is saturated and chose to
+    refuse work it could not serve within SLO rather than queue it into
+    starvation.  Raised by ``submit()`` when the bounded queue is at
+    ``ResilienceConfig.max_queue`` (or the request's priority class is at
+    its depth limit), and *attached* to queued requests shed by the
+    brownout ladder's last in-flight rung.  Subclasses ``ValueError``
+    for the same reason :class:`NeverFitsError` does — the pre-existing
+    ``submit()`` rejection contract pinned ``ValueError`` — but unlike
+    never-fits this is TRANSIENT: the error carries a load hint
+    (``queue_depth``, ``free_pages``, ``rung``, and a suggested
+    ``retry_after_ticks``) so a client can back off and resubmit."""
+
+    kind = "retry_later"
+
+    def __init__(self, rid: int, tick: int, queue_depth: int, limit: int,
+                 free_pages: int = -1, rung: int = 0, detail: str = ""):
+        self.queue_depth = queue_depth
+        self.limit = limit
+        self.free_pages = free_pages
+        self.rung = rung
+        # crude but monotone load hint: one tick per queued request ahead
+        self.retry_after_ticks = max(1, queue_depth)
+        super().__init__(
+            rid, tick,
+            detail or (f"queue depth {queue_depth} at limit {limit} "
+                       f"(brownout rung {rung}, free_pages {free_pages}); "
+                       f"retry after ~{self.retry_after_ticks} ticks"))
+
+
 class NeverFitsError(ValueError):
     """The request's trajectory can never be resident — no amount of
     waiting frees enough pages — so admitting it would hold the FIFO
@@ -97,5 +127,5 @@ class StarvationError(RuntimeError):
 
 __all__ = [
     "RequestError", "RequestCancelled", "DeadlineExceeded", "TTLExpired",
-    "SlotQuarantined", "NeverFitsError", "StarvationError",
+    "SlotQuarantined", "RetryLater", "NeverFitsError", "StarvationError",
 ]

@@ -24,6 +24,16 @@ Fault kinds:
   * ``kill_restore`` — snapshot the engine, construct a fresh one via the
                        harness's ``engine_factory``, restore, and swap it
                        in: the kill/restore roundtrip mid-flight.
+  * ``overload``     — burst of low-priority ballast submissions beyond
+                       the bounded queue (``pages`` extra past the
+                       limit): exercises ``RetryLater`` admission and the
+                       brownout ladder's shed rung.
+  * ``reshape_restore`` — kill_restore into a randomly shrunk/grown
+                       geometry (slots / num_pages / decode_ticks, drawn
+                       from the plan seed): the elastic-restore roundtrip
+                       mid-flight.  Needs the harness's
+                       ``reshape_factory``; degrades to a plain
+                       kill_restore without one.
 """
 from __future__ import annotations
 
@@ -34,22 +44,30 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .errors import StarvationError
+from .errors import RetryLater, StarvationError
 
-FAULT_KINDS = ("poison", "cancel", "pressure", "kill_restore")
+FAULT_KINDS = ("poison", "cancel", "pressure", "kill_restore",
+               "overload", "reshape_restore")
+
+# restore roundtrips are heavyweight; the coverage floor schedules each
+# exactly once and the random fill never adds more
+_ONCE_KINDS = ("kill_restore", "reshape_restore")
 
 
 @dataclasses.dataclass(frozen=True)
 class Fault:
     """One scheduled event: ``kind`` at tick ``tick`` (see module doc).
     ``slot`` targets poison, ``rid`` targets cancel, ``pages`` sizes the
-    pressure ballast's prompt."""
+    pressure ballast's prompt (and the overload burst's overshoot);
+    ``geometry`` carries reshape_restore's target-geometry draw as
+    ``(key, value)`` pairs (hashable — Fault stays frozen)."""
 
     tick: int
     kind: str
     slot: int = -1
     rid: int = -1
     pages: int = 1
+    geometry: Tuple[Tuple[str, int], ...] = ()
 
     def __post_init__(self):
         assert self.kind in FAULT_KINDS, self.kind
@@ -67,23 +85,32 @@ class FaultPlan:
                rids: Sequence[int], kinds: Sequence[str] = FAULT_KINDS,
                events: int = 8, ballast_pages: int = 1) -> "FaultPlan":
         """Seeded random schedule guaranteed to contain >= 1 event of
-        every requested kind (``kill_restore`` appears exactly once —
-        restoring is heavyweight and one roundtrip proves the cut)."""
+        every requested kind (the restore kinds appear exactly once each
+        — restoring is heavyweight and one roundtrip proves the cut)."""
         rng = np.random.default_rng(seed)
         kinds = tuple(kinds)
         picks: List[str] = [k for k in kinds]          # coverage floor
-        extra = [k for k in kinds if k != "kill_restore"]
+        extra = [k for k in kinds if k not in _ONCE_KINDS]
         while len(picks) < events and extra:
             picks.append(extra[int(rng.integers(len(extra)))])
         faults = []
         for kind in picks:
+            geometry: Tuple[Tuple[str, int], ...] = ()
+            if kind == "reshape_restore":
+                geometry = (
+                    ("slots", max(1, slots + int(rng.integers(-1, 2)))),
+                    ("num_pages_delta", int(rng.integers(-2, 5))),
+                    ("decode_ticks", int(rng.choice([1, 2, 4]))),
+                )
             f = Fault(
                 tick=int(rng.integers(1, max(2, ticks))),
                 kind=kind,
                 slot=int(rng.integers(slots)) if kind == "poison" else -1,
                 rid=(int(rids[int(rng.integers(len(rids)))])
                      if kind == "cancel" and len(rids) else -1),
-                pages=ballast_pages if kind == "pressure" else 1)
+                pages=(ballast_pages
+                       if kind in ("pressure", "overload") else 1),
+                geometry=geometry)
             faults.append(f)
         faults.sort(key=lambda f: (f.tick, FAULT_KINDS.index(f.kind),
                                    f.slot, f.rid))
@@ -111,10 +138,16 @@ class FaultHarness:
 
     def __init__(self, engine_factory: Callable[[], Any], plan: FaultPlan,
                  workload: Dict[int, List[Any]],
-                 snapshot_dir: Optional[str] = None):
+                 snapshot_dir: Optional[str] = None,
+                 reshape_factory: Optional[
+                     Callable[[Dict[str, int]], Any]] = None):
         self.factory = engine_factory
         self.plan = plan
         self.workload = workload
+        # builds a fresh engine with geometry overrides {slots,
+        # num_pages, decode_ticks} for reshape_restore faults; without
+        # one those faults degrade to plain kill_restore
+        self.reshape_factory = reshape_factory
         self.engine = engine_factory()
         self._tmp = None
         if snapshot_dir is None:
@@ -158,6 +191,51 @@ class FaultHarness:
             self.engine = fresh
             self._log(f"kill_restore queue={len(fresh._queue)} "
                       f"active={sum(r is not None for r in fresh._active)}")
+        elif fault.kind == "overload":
+            limit = eng.rcfg.max_queue or (2 * eng.slots)
+            from ..engine import Request
+            submitted = rejected = 0
+            for _ in range(limit + fault.pages):
+                self._ballast_n += 1
+                rid = -1000 - self._ballast_n
+                n_tok = min(eng.page_size, eng.max_len - 2)
+                ballast = Request(rid=rid,
+                                  prompt=np.ones((n_tok,), np.int32),
+                                  adapter_id=0, max_new=1,
+                                  priority=-1)
+                try:
+                    eng.submit(ballast)
+                    submitted += 1
+                except RetryLater:
+                    rejected += 1
+                except ValueError as e:
+                    self._log(f"overload rid={rid} rejected: {e}")
+            self._log(f"overload submitted={submitted} rejected={rejected}")
+        elif fault.kind == "reshape_restore":
+            eng.snapshot(self.snapshot_path)
+            geom = dict(fault.geometry)
+            if self.reshape_factory is None:
+                fresh = self.factory()
+                self._log("reshape_restore no reshape_factory: "
+                          "same geometry")
+            else:
+                # never let the geometry draw make max_len unservable
+                maxp = -(-eng.max_len // eng.page_size)
+                overrides = {
+                    "slots": max(1, geom.get("slots", eng.slots)),
+                    "decode_ticks": geom.get("decode_ticks",
+                                             eng.decode_ticks),
+                    "num_pages": max(maxp + 1, eng.num_pages
+                                     + geom.get("num_pages_delta", 0)),
+                }
+                fresh = self.reshape_factory(overrides)
+                self._log("reshape_restore geometry="
+                          + ",".join(f"{k}={v}"
+                                     for k, v in sorted(overrides.items())))
+            fresh.restore(self.snapshot_path)
+            self.engine = fresh
+            self._log(f"reshape_restore queue={len(fresh._queue)} "
+                      f"active={sum(r is not None for r in fresh._active)}")
 
     # ------------------------------------------------------------------
 
@@ -170,9 +248,18 @@ class FaultHarness:
         for req in self.workload.get(now, ()):
             clone = dataclasses.replace(
                 req, out=None, done=False, error=None,
-                submit_tick=-1, admit_tick=-1, enq_tick=-1, preemptions=0)
-            self.engine.submit(clone)
-            self._log(f"submit rid={req.rid}")
+                submit_tick=-1, admit_tick=-1, enq_tick=-1, preemptions=0,
+                salvage_strikes=0)
+            try:
+                self.engine.submit(clone)
+                self._log(f"submit rid={req.rid}")
+            except RetryLater as e:
+                # bounded queue full: resubmit after the engine's hint —
+                # the workload dict is keyed by tick, so push forward
+                retry = self.engine.tick_count + e.retry_after_ticks
+                self.workload.setdefault(retry, []).append(req)
+                self._log(f"submit rid={req.rid} retry_later "
+                          f"depth={e.queue_depth} retry_t={retry}")
         for fault in self.plan.due(now):
             self._apply(fault)
         try:
@@ -191,8 +278,10 @@ class FaultHarness:
     def run(self, max_ticks: int = 256) -> Dict[int, Any]:
         """Tick until the workload is fully submitted and drained (or
         ``max_ticks``).  Returns ``finished`` (rid → request)."""
-        last_submit = max(self.workload, default=0)
         for _ in range(max_ticks):
+            # recomputed each tick: RetryLater re-queues push submissions
+            # forward into the workload dict
+            last_submit = max(self.workload, default=0)
             eng = self.engine
             pending = (eng.tick_count <= last_submit or eng._queue
                        or any(r is not None for r in eng._active))

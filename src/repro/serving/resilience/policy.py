@@ -45,11 +45,62 @@ class ResilienceConfig:
                          before ``step()`` raises ``StarvationError``
                          (strictly greater than ``pressure_ticks`` so
                          preemption gets its chance first).
+
+    Quarantine salvage:
+
+    ``salvage_retries`` — how many times a NaN-quarantined request is
+                          truncated at its last finite token and requeued
+                          as an effective-prompt replay before falling
+                          back to the typed ``SlotQuarantined`` discard.
+                          0 (default) preserves the pre-existing
+                          discard-on-first-strike behavior.
+
+    Overload brownout (admission):
+
+    ``max_queue``       — bounded queue: ``submit()`` raises
+                          :class:`~.errors.RetryLater` (with a load hint)
+                          when the queue already holds this many requests.
+                          ``None`` (default) = unbounded, never rejects.
+    ``priority_depth_limits`` — per-priority SLO admission: tuple of
+                          ``(priority, depth)`` pairs; a request is
+                          rejected when its priority class already has
+                          ``depth`` queued requests, even below
+                          ``max_queue``.  A dict is accepted and
+                          normalized.
+
+    Overload brownout (in-flight degradation ladder):
+
+    ``brownout``        — enable the staged ladder: rung 1 halves
+                          speculative K, rung 2 disables speculation,
+                          rung 3 sheds lowest-priority queued work.
+    ``brownout_engage_ticks``  — consecutive pressured ticks before
+                          climbing one rung.
+    ``brownout_release_ticks`` — consecutive calm ticks before stepping
+                          back down one rung (set higher than engage for
+                          hysteresis — the default 2:4 releases half as
+                          fast as it engages).
+    ``brownout_queue_depth`` — queue depth at/above which a tick counts
+                          as pressured (``None`` = ``max_queue``, or
+                          ``2 * slots`` when that is also unset).
+    ``brownout_head_wait``   — head starvation age (ticks the FIFO head
+                          has waited) at/above which a tick counts as
+                          pressured (``None`` = ``pressure_ticks``).
+    ``brownout_free_frac``   — free-page ratio at/below which a tick
+                          counts as pressured (0.0 = page signal off).
     """
 
     preempt: bool = True
     pressure_ticks: int = 4
     watchdog_ticks: int = 24
+    salvage_retries: int = 0
+    max_queue: Optional[int] = None
+    priority_depth_limits: Tuple[Tuple[int, int], ...] = ()
+    brownout: bool = False
+    brownout_engage_ticks: int = 2
+    brownout_release_ticks: int = 4
+    brownout_queue_depth: Optional[int] = None
+    brownout_head_wait: Optional[int] = None
+    brownout_free_frac: float = 0.0
 
     def __post_init__(self):
         if self.pressure_ticks < 1:
@@ -58,6 +109,38 @@ class ResilienceConfig:
             raise ValueError(
                 f"watchdog_ticks {self.watchdog_ticks} must exceed "
                 f"pressure_ticks {self.pressure_ticks}")
+        if self.salvage_retries < 0:
+            raise ValueError(f"salvage_retries {self.salvage_retries} < 0")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(f"max_queue {self.max_queue} < 1")
+        limits = self.priority_depth_limits
+        if isinstance(limits, dict):
+            limits = tuple(sorted(limits.items()))
+            object.__setattr__(self, "priority_depth_limits", limits)
+        else:
+            limits = tuple(tuple(pair) for pair in limits)
+            object.__setattr__(self, "priority_depth_limits", limits)
+        for prio, depth in limits:
+            if depth < 0:
+                raise ValueError(
+                    f"priority_depth_limits[{prio}] = {depth} < 0")
+        if self.brownout_engage_ticks < 1:
+            raise ValueError(
+                f"brownout_engage_ticks {self.brownout_engage_ticks} < 1")
+        if self.brownout_release_ticks < 1:
+            raise ValueError(
+                f"brownout_release_ticks {self.brownout_release_ticks} < 1")
+        if not (0.0 <= self.brownout_free_frac <= 1.0):
+            raise ValueError(
+                f"brownout_free_frac {self.brownout_free_frac} "
+                f"outside [0, 1]")
+
+    def depth_limit_for(self, priority: int) -> Optional[int]:
+        """Queue-depth cap for ``priority``'s class, or ``None``."""
+        for prio, depth in self.priority_depth_limits:
+            if prio == priority:
+                return depth
+        return None
 
 
 @dataclasses.dataclass
@@ -128,6 +211,11 @@ class ResilienceStats:
     restore_count: int = 0
     starvation_aborts: int = 0
     never_fit_rejections: int = 0
+    salvaged: int = 0
+    salvage_retries_exhausted: int = 0
+    retry_later_rejections: int = 0
+    shed_requests: int = 0
+    elastic_requeues: int = 0
     time_in_queue: List[int] = dataclasses.field(default_factory=list)
     time_to_first_preemption: List[int] = dataclasses.field(
         default_factory=list)

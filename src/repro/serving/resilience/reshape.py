@@ -1,0 +1,221 @@
+"""Elastic (geometry-changing) snapshot restore: host-side repacking.
+
+:func:`restore_engine` routes here when the target engine differs from
+the snapshot on a pool-geometry key — ``num_pages``, ``slots``,
+``page_size``, or ``has_prefix``.  The snapshot's state was laid out for
+a pool that no longer exists, so this module REWRITES it for the target:
+
+  * **Requests** — every in-flight (active-slot) request demotes to a
+    queue entry with its emitted tokens preserved: re-admission folds
+    them into the *effective prompt* (the exact ``_eff`` machinery
+    preemption uses) and the PRNG position-counter contract replays the
+    remaining stream bitwise identically, on any slot of any engine.
+    Active requests requeue ahead of the previously queued ones, in slot
+    order — the closest-to-finishing work keeps its place.  Requests
+    whose trajectory can never fit the new geometry fail typed
+    (``NeverFitsError``) at their first admission hold, exactly like any
+    other queue injection that bypassed ``submit()``.
+  * **Prefix cache** — the radix tree's records carry each node's full
+    root path in TOKENS, so cached KV re-cuts at any page size: every
+    target-granularity block of every cached chain becomes a candidate
+    node, its payload gathered row-by-row from the source snapshot's
+    page slabs (token ``t`` of a chain lives at row ``t % src_ps`` of
+    the source page covering ``t``) and written into freshly adopted
+    target pages.  Import runs parents-first, hotter-first (source LRU
+    stamps carry over), and degrades gracefully: whatever does not fit
+    the target pool — smaller ``num_pages``, partial source pages that
+    no longer fill a target page — is dropped and counted as evicted.
+    KV bytes are positions-and-tokens deterministic, so a re-blocked hit
+    serves exactly what the target engine would have recomputed.
+  * **PagePool ledger** — rebuilt from scratch for the target geometry:
+    the free list is the fresh pool's minus the adopted cache pages,
+    ``_cached`` holds exactly those pages, the refcount/shared maps are
+    empty (no slot is resident after the demotion), and every block
+    table row is trash.  ``check_invariants``/``PrefixCache.check`` run
+    at the end, same as the exact-restore path.
+
+The restored engine re-traces its fused executable once (its own
+geometry → its own shapes); one-executable-per-lifetime still holds.
+
+This is the serving-side counterpart of ``checkpoint.elastic`` — that
+module re-places *parameter* checkpoints onto a new device mesh; this
+one re-places the *engine* snapshot onto a new page-pool geometry.  Both
+are pure host-side rewrites of a saved layout into a live target.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+from ...checkpoint import io as ckpt_io
+from ..prefix.cache import PrefixStats
+
+
+def _flat_key(path) -> str:
+    """jax tree path → the ``checkpoint.io`` flatten key of that leaf."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "cache/" + "/".join(parts)
+
+
+def _leaf_name(path) -> str:
+    return path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+
+
+def reshape_restore(eng, tree: Dict[str, Any],
+                    meta: Dict[str, Any]) -> Dict[str, Any]:
+    """Repack the loaded snapshot (``tree`` = host numpy arrays in the
+    SOURCE geometry, ``meta`` = its metadata) into ``eng``, a fresh idle
+    engine of a different pool geometry.  Hard-key equality was already
+    verified by ``restore_engine``.  Returns ``meta``."""
+    from ..engine import Request   # noqa: F401 (via _req_restore)
+    from .snapshot import _req_restore
+
+    tick = int(meta["tick"])
+
+    # -- requests: demote active slots to effective-prompt replays ------
+    replays = [_req_restore(st) for _, st in
+               sorted(meta["active"].items(), key=lambda kv: int(kv[0]))]
+    for r in replays:
+        r.enq_tick = tick
+    eng._queue = replays + [_req_restore(st) for st in meta["queue"]]
+    eng._active = [None] * eng.slots
+    eng._rids = {r.rid for r in eng._queue}
+    eng._cancel_req = {int(r) for r in meta["cancel_req"]} & eng._rids
+    eng._eff = {}
+    eng._cursor = {}
+    eng._len = {}
+    eng._stall_ticks = {}
+    eng._oversub_slot = None
+    eng._head_wait = 0
+    eng.adapter_ids = np.zeros((eng.slots,), np.int32)
+
+    # -- prefix cache: re-cut cached chains at the target page size -----
+    imported = 0
+    if eng.prefix is not None and meta.get("prefix"):
+        imported = _reblock_prefix(eng, tree["cache"], meta)
+
+    # -- counters and telemetry ----------------------------------------
+    ctr = meta["counters"]
+    eng.host_syncs = int(ctr["host_syncs"])
+    eng.tokens_out = int(ctr["tokens_out"])
+    eng.macro_ticks = int(ctr["macro_ticks"])
+    eng.tick_width_counts = {int(k): int(v)
+                             for k, v in ctr["tick_width_counts"].items()}
+    eng.tick_count = tick
+    eng.rstats.load_state_dict(meta["rstats"])
+    eng.rstats.restore_count += 1
+    eng.rstats.elastic_requeues += len(replays)
+    eng._no_progress = 0
+
+    import jax.numpy as jnp
+    eng.cache["block_tables"] = jnp.asarray(eng.pages.block_tables)
+    eng.pages.check_invariants()
+    if eng.prefix is not None:
+        eng.prefix.check()
+    return meta
+
+
+def _reblock_prefix(eng, src_cache: Dict[str, Any],
+                    meta: Dict[str, Any]) -> int:
+    """Import the snapshot's prefix-tree records into ``eng``'s (empty)
+    cache at the target page size, copying the page payloads over.
+    Returns the number of nodes imported; whatever was dropped (pool too
+    small, blocks that no longer fill a page) counts as evicted."""
+    pmeta = meta["prefix"]
+    records = pmeta["records"]
+    sps = int(meta["config"]["page_size"])
+    tps = eng.page_size
+    stats = PrefixStats(**pmeta["stats"])
+
+    # (adapter, source path tuple) → source page id — every node of the
+    # source tree, ancestors included (to_records emits all of them)
+    src_page = {(int(r["adapter"]), tuple(int(t) for t in r["tokens"])):
+                int(r["page"]) for r in records}
+
+    # candidate target nodes: every target-granularity block of every
+    # cached chain, stamped with the hottest source node covering it
+    cand: Dict[Tuple[int, Tuple[int, ...]], int] = {}
+    for r in records:
+        toks = [int(t) for t in r["tokens"]]
+        aid = int(r["adapter"])
+        stamp = int(r["last_used"])
+        for j in range(1, len(toks) // tps + 1):
+            key = (aid, tuple(toks[:j * tps]))
+            if cand.get(key, -1) < stamp:
+                cand[key] = stamp
+
+    # parents-first (a child without its parent is unreachable in the
+    # trie), then hotter-first so a shrunken pool keeps the working set,
+    # then path for determinism
+    order = sorted(cand.items(),
+                   key=lambda kv: (len(kv[0][1]), -kv[1], kv[0]))
+    placed: Dict[Tuple[int, Tuple[int, ...]], int] = {}
+    tgt_ids: List[int] = []
+    pidx: List[List[int]] = []
+    ridx: List[List[int]] = []
+    for (aid, chain), stamp in order:
+        depth = len(chain) // tps
+        if depth > 1 and (aid, chain[:-tps]) not in placed:
+            continue                       # parent didn't fit — drop
+        got = eng.pages.adopt_cached(1)
+        if not got:
+            continue                       # target pool exhausted
+        page = got[0]
+        placed[(aid, chain)] = page
+        eng.prefix.tree.graft(aid, list(chain), page, stamp)
+        # token t of the chain sits at row t % sps of the source page
+        # whose path covers it — gather the target page's rows from there
+        rows_p, rows_r = [], []
+        for rr in range(tps):
+            t = (depth - 1) * tps + rr
+            rows_p.append(src_page[(aid,
+                                    chain[:(t // sps + 1) * sps])])
+            rows_r.append(t % sps)
+        tgt_ids.append(page)
+        pidx.append(rows_p)
+        ridx.append(rows_r)
+
+    if tgt_ids:
+        _copy_page_payloads(eng, src_cache,
+                            np.asarray(tgt_ids, np.int32),
+                            np.asarray(pidx, np.int32),
+                            np.asarray(ridx, np.int32))
+
+    eng.prefix.tree._clock = int(pmeta["clock"])
+    # dropped source nodes are effectively evictions of the reshape
+    stats.evicted_pages += len(records) - len(tgt_ids)
+    eng.prefix.stats = stats
+    return len(tgt_ids)
+
+
+def _copy_page_payloads(eng, src_cache: Dict[str, Any],
+                        tgt_ids: np.ndarray, pidx: np.ndarray,
+                        ridx: np.ndarray):
+    """Write re-blocked KV rows into the target device cache: for every
+    kp/vp slab (layer-stacked ``(C, pages, page_size, heads, dim)``),
+    target page ``tgt_ids[i]`` row ``r`` ← source page ``pidx[i, r]``
+    row ``ridx[i, r]``.  One numpy gather + one ``.at[].set`` per leaf —
+    a host-side one-off, not part of the serving executable."""
+    import jax
+    import jax.numpy as jnp
+    src_flat = ckpt_io._flatten({"cache": src_cache})
+
+    def one(path, leaf):
+        if _leaf_name(path) not in ("kp", "vp"):
+            return leaf
+        src = np.asarray(src_flat[_flat_key(path)])
+        gathered = src[:, pidx, ridx]      # (C, n, tps, heads, dim)
+        return leaf.at[:, tgt_ids].set(jnp.asarray(gathered, leaf.dtype))
+
+    eng.cache = jax.tree_util.tree_map_with_path(one, eng.cache)
+
+
+__all__ = ["reshape_restore"]

@@ -21,6 +21,16 @@ process; restore re-traces at most once).
 Unified mode only: the legacy two-phase path keeps per-slot state inside
 opaque model caches mid-prefill and is not snapshot-cut at tick
 boundaries the same way.
+
+**Elastic restore** (format 2): the target engine no longer has to match
+the snapshot's geometry.  ``max_len``/``tenants``/``window``/``unified``
+stay hard-rejected (they change what a request *is*), but a target
+differing only in ``num_pages``, ``slots``, ``decode_ticks``, ``chunk``,
+``auto_ticks``, ``page_size``, or ``has_prefix`` restores through the
+host-side repacking layer in :mod:`.reshape` — see there for the
+contract.  Format-1 (PR 6) snapshots read forward-compatibly: the fields
+format 2 added (``salvage_strikes`` per request, the brownout ladder
+state) default to their pre-existing values.
 """
 from __future__ import annotations
 
@@ -31,11 +41,19 @@ import numpy as np
 
 from ...checkpoint import io as ckpt_io
 
-SNAPSHOT_FORMAT = 1
+SNAPSHOT_FORMAT = 2
+_READABLE_FORMATS = (1, 2)
 
 _CONFIG_KEYS = ("slots", "max_len", "page_size", "num_pages", "chunk",
                 "decode_ticks", "auto_ticks", "tenants", "window",
                 "unified", "has_prefix")
+
+# config keys that MUST match — everything else is elastic (reshape.py)
+_HARD_KEYS = ("max_len", "tenants", "window", "unified")
+# keys whose mismatch forces the repacking path; a mismatch only in the
+# remaining elastic keys (chunk/decode_ticks/auto_ticks — pure host-side
+# scheduling knobs) restores exactly, active slots included
+_POOL_KEYS = ("slots", "page_size", "num_pages", "has_prefix")
 
 
 def _engine_config(eng) -> Dict[str, Any]:
@@ -68,6 +86,7 @@ def _req_state(req) -> Dict[str, Any]:
         "admit_tick": int(req.admit_tick),
         "enq_tick": int(req.enq_tick),
         "preemptions": int(req.preemptions),
+        "salvage_strikes": int(req.salvage_strikes),
     }
 
 
@@ -90,6 +109,8 @@ def _req_restore(state: Dict[str, Any]):
     req.admit_tick = int(state["admit_tick"])
     req.enq_tick = int(state["enq_tick"])
     req.preemptions = int(state["preemptions"])
+    # format 1 predates quarantine salvage
+    req.salvage_strikes = int(state.get("salvage_strikes", 0))
     return req
 
 
@@ -125,6 +146,13 @@ def snapshot_engine(eng, path) -> Dict[str, Any]:
                                   for k, v in eng.tick_width_counts.items()},
         },
         "rstats": eng.rstats.state_dict(),
+        "brownout": {
+            "rung": int(eng._brownout_rung),
+            "hot": int(eng._bo_hot),
+            "calm": int(eng._bo_calm),
+            "transitions": {k: int(v)
+                            for k, v in eng._bo_transitions.items()},
+        },
     }
     ckpt_io.save(Path(path), {"cache": eng.cache}, metadata=meta)
     return meta
@@ -132,26 +160,43 @@ def snapshot_engine(eng, path) -> Dict[str, Any]:
 
 def restore_engine(eng, path) -> Dict[str, Any]:
     """Load a snapshot written by :func:`snapshot_engine` into ``eng`` —
-    a freshly constructed engine of the SAME configuration (model/params/
-    tenants are the caller's responsibility; everything checkable is
-    checked).  Returns the snapshot metadata."""
+    a freshly constructed, idle engine (model/params/tenants are the
+    caller's responsibility; everything checkable is checked).  The
+    target may differ from the snapshot on the elastic geometry keys
+    (``num_pages``/``slots``/``decode_ticks``/``chunk``/``auto_ticks``/
+    ``page_size``/``has_prefix``) — such restores repack through
+    :mod:`.reshape`; a mismatch on the hard keys (``max_len``/
+    ``tenants``/``window``/``unified``) still raises.  Returns the
+    snapshot metadata."""
     if not eng.unified:
         raise ValueError("snapshot/restore requires the unified scheduler")
     if eng._queue or any(r is not None for r in eng._active):
         raise ValueError("restore target engine must be idle")
-    tree, meta = ckpt_io.load(Path(path), like={"cache": eng.cache})
-    if meta.get("snapshot_format") != SNAPSHOT_FORMAT:
+    tree, meta = ckpt_io.load(Path(path))
+    if meta.get("snapshot_format") not in _READABLE_FORMATS:
         raise ValueError(f"unknown snapshot format "
                          f"{meta.get('snapshot_format')!r}")
     cfg = meta["config"]
     mine = _engine_config(eng)
-    bad = [k for k in _CONFIG_KEYS if cfg.get(k) != mine[k]]
+    bad = [k for k in _HARD_KEYS if cfg.get(k) != mine[k]]
     if bad:
         raise ValueError(
             "engine/snapshot config mismatch on "
             + ", ".join(f"{k}: {mine[k]} != {cfg.get(k)}" for k in bad))
+    _restore_brownout(eng, meta)
+    if any(cfg.get(k) != mine[k] for k in _POOL_KEYS):
+        from .reshape import reshape_restore
+        return reshape_restore(eng, tree, meta)
 
-    eng.cache = tree["cache"]
+    # exact-pool path: device pages, ledger, and active slots carry over
+    # verbatim (chunk/decode_ticks/auto_ticks may differ — they are tick
+    # packing knobs, not snapshot state)
+    import jax.numpy as jnp
+    src_flat = ckpt_io._flatten(tree)
+    like_flat = ckpt_io._flatten({"cache": eng.cache})
+    eng.cache = ckpt_io._unflatten(
+        {k: jnp.asarray(src_flat[k], like_flat[k].dtype)
+         for k in like_flat})["cache"]
     eng.pages.load_state_dict(meta["pool"])
     if eng.prefix is not None:
         eng.prefix.load_state_dict(meta["prefix"])
@@ -192,6 +237,19 @@ def restore_engine(eng, path) -> Dict[str, Any]:
 def _as_jnp_block_tables(eng):
     import jax.numpy as jnp
     return jnp.asarray(eng.pages.block_tables)
+
+
+def _restore_brownout(eng, meta: Dict[str, Any]):
+    """Brownout ladder state (format 2; format 1 → healthy defaults).
+    The rung carries across a restore so a degraded engine does not snap
+    back to full speculation under the very load that degraded it."""
+    bo = meta.get("brownout") or {}
+    eng._brownout_rung = int(bo.get("rung", 0))
+    eng._bo_hot = int(bo.get("hot", 0))
+    eng._bo_calm = int(bo.get("calm", 0))
+    trans = bo.get("transitions") or {}
+    eng._bo_transitions = {"up": int(trans.get("up", 0)),
+                           "down": int(trans.get("down", 0))}
 
 
 __all__ = ["snapshot_engine", "restore_engine", "SNAPSHOT_FORMAT"]
