@@ -64,6 +64,14 @@ work).  Recorded per cell: accepted/rejected/shed/completed counts,
 p50/p99 TTFT in engine ticks, goodput (completed tokens per tick), and
 the starvation count — asserted ZERO with the ladder on at every load.
 
+And the **SLO-brownout sweep** (``slo_brownout``): burn-rate-driven vs
+queue-depth-driven brownout engagement under the same ~3×-capacity
+overload — the SLO cell's error-budget signal climbs the ladder
+strictly earlier than queue saturation (asserted, with ``slo_burn`` the
+attributed flight-recorder signal) — plus the decision layer's own
+price: flight recorder + SLO engine on/off, bitwise-identical streams,
+tokens/sec delta asserted under the ≤5 % bar.
+
 And the **telemetry-overhead sweep** (``telemetry_overhead``): the same
 decode workload through an engine with telemetry fully off
 (``metrics=False``) vs fully on (metrics + lifecycle tracing).  Streams
@@ -104,6 +112,7 @@ Usage: PYTHONPATH=src python benchmarks/bench_serving.py [--fast]
 from __future__ import annotations
 
 import argparse
+import os
 import time
 from pathlib import Path
 
@@ -118,9 +127,10 @@ from repro.models import Model
 from repro.models.transformer import arch_stacks, cache_seq_len
 from repro.serving import (ObservabilityConfig, PagePool, Request,
                            ResilienceConfig, RetryLater, ServingEngine,
-                           SpecConfig, make_serve_step,
-                           profile_serving_kernels, stack_tenants,
-                           validate_chrome_trace, validate_prometheus)
+                           SLOConfig, SLObjective, SpecConfig,
+                           make_serve_step, profile_serving_kernels,
+                           stack_tenants, validate_chrome_trace,
+                           validate_prometheus)
 
 MAX_LEN = 32
 PAGE_SIZE = 8
@@ -465,9 +475,10 @@ def bench_telemetry_overhead(model, params, states, fast: bool = False):
         assert all(r.done for r in reqs)
         return [tuple(r.out) for r in reqs]
 
-    modes = [("off", ObservabilityConfig(metrics=False)),
+    modes = [("off", ObservabilityConfig(metrics=False, flightrec=False)),
              ("on", ObservabilityConfig(metrics=True, trace=True,
-                                        trace_capacity=1 << 16))]
+                                        trace_capacity=1 << 16,
+                                        flightrec=True))]
     engines = {mode: ServingEngine(model, params, states, slots=len(lens),
                                    max_len=64, page_size=PAGE_SIZE,
                                    observability=obs)
@@ -685,6 +696,179 @@ def bench_overload_brownout(model, params, states, fast: bool = False):
     return rows
 
 
+def bench_slo_brownout(model, params, states, fast: bool = False):
+    """SLO burn-rate-driven vs queue-depth-driven brownout engagement.
+
+    Two cells run the SAME ~3×-capacity overload schedule on engines
+    whose queue-depth brownout threshold is deliberately LATE (depth 8
+    on a 2-slot engine; the head-wait and free-page signals are parked
+    out of range in both cells).  The ``queue`` cell has only that
+    saturation signal; the ``slo`` cell adds the burn-rate input: a
+    1-tick queue-wait objective at a 90 % target with both burn windows
+    thresholded at 1.0, gated into ``_brownout_pressured`` via
+    ``SLOConfig(brownout=True)``.  Queue waits blow the error budget
+    within a couple of admissions of the overload starting, so the SLO
+    cell climbs the ladder while the backlog is still shallow — asserted
+    strictly earlier than the ``queue`` cell, with ``slo_burn`` as the
+    attributed engagement signal in its flight-recorder event.
+
+    Part two prices the decision layer itself: the identical calm decode
+    workload with the flight recorder + SLO engine on vs off,
+    interleaved best-of timing (the ``telemetry_overhead`` protocol).
+    Streams must match bitwise; the tokens/sec delta is asserted under
+    the ≤5 % bar (env ``REPRO_FLIGHTREC_OVERHEAD_BAR`` loosens it for
+    noisy shared runners)."""
+    budget = 40 if fast else 80
+    arrivals = 4            # per 2 ticks ≈ 3× the 2-slot capacity
+    slo_cfg = SLOConfig(
+        objective=SLObjective(queue_wait_ticks=1),
+        target=0.9, fast_window=4, slow_window=8,
+        fast_burn=1.0, slow_burn=1.0, brownout=True)
+    rows = []
+    for mode in ("queue", "slo"):
+        rcfg = ResilienceConfig(
+            pressure_ticks=2, watchdog_ticks=budget + 8,
+            max_queue=16, brownout=True,
+            brownout_queue_depth=8,           # late: saturation-driven
+            brownout_head_wait=budget + 16,   # parked out of range
+            brownout_engage_ticks=2, brownout_release_ticks=4)
+        obs = ObservabilityConfig(slo=slo_cfg if mode == "slo" else None)
+        eng = ServingEngine(model, params, states[:2], slots=2,
+                            max_len=MAX_LEN, page_size=PAGE_SIZE,
+                            num_pages=13, prefix_cache=True,
+                            resilience=rcfg, observability=obs)
+        rid = 0
+        accepted, rejected, done = [], 0, []
+        sub_tick, first_tick = {}, {}
+        first_engage = None
+        for tick in range(budget):
+            if tick % 2 == 0:
+                for _ in range(arrivals):
+                    rid += 1
+                    r = Request(
+                        rid=rid,
+                        prompt=(np.arange(8, dtype=np.int32)
+                                * (rid + 2)) % 90 + 4,
+                        adapter_id=rid % 2, max_new=2)
+                    try:
+                        eng.submit(r)
+                        accepted.append(r)
+                        sub_tick[rid] = tick
+                    except RetryLater:
+                        rejected += 1
+            done += eng.step()
+            if first_engage is None and eng._brownout_rung > 0:
+                first_engage = tick + 1
+            for r in accepted:
+                if r.out and r.rid not in first_tick:
+                    first_tick[r.rid] = tick + 1
+        for tick in range(budget, budget + 64):     # drain the tail
+            if not eng._queue and all(a is None for a in eng._active):
+                break
+            done += eng.step()
+            for r in accepted:
+                if r.out and r.rid not in first_tick:
+                    first_tick[r.rid] = tick + 1
+        eng.pages.check_invariants()
+        ok = [r for r in done if r.error is None]
+        shed = [r for r in done if isinstance(r.error, RetryLater)]
+        ttft = sorted(first_tick[r.rid] - sub_tick[r.rid]
+                      for r in ok if r.rid in first_tick)
+        pct = (lambda q: ttft[min(len(ttft) - 1, int(q * len(ttft)))]
+               if ttft else None)
+        engage_events = eng.flight_events(kind="brownout")
+        first_signal = (engage_events[0].get("signal")
+                        if engage_events else None)
+        row = {"slo": mode, "arrivals_per_2ticks": arrivals,
+               "tick_budget": budget,
+               "offered": len(accepted) + rejected,
+               "accepted": len(accepted),
+               "rejected_retry_later": rejected,
+               "shed": len(shed), "completed": len(ok),
+               "first_engage_tick": first_engage,
+               "first_engage_signal": first_signal,
+               "max_brownout_rung": max(
+                   (e["rung"] for e in engage_events), default=0),
+               "ttft_ticks_p50": pct(0.50), "ttft_ticks_p99": pct(0.99),
+               "starvation_aborts":
+                   eng.resilience_metrics()["starvation_aborts"]}
+        rows.append(row)
+        print(f"slo_brownout driver={mode:5s} "
+              f"engage_t={row['first_engage_tick'] or -1:3d} "
+              f"signal={row['first_engage_signal'] or '-':10s} "
+              f"done={row['completed']:3d}/{row['offered']:3d} "
+              f"shed={len(shed):3d} "
+              f"ttft_p99={row['ttft_ticks_p99'] or -1:3d}")
+    by = {r["slo"]: r for r in rows}
+    # the whole point: the burn-rate signal fires while the queue-depth
+    # signal is still below threshold
+    assert by["slo"]["first_engage_tick"] is not None, by["slo"]
+    assert by["queue"]["first_engage_tick"] is None or \
+        by["slo"]["first_engage_tick"] < by["queue"]["first_engage_tick"], by
+    assert by["slo"]["first_engage_signal"] == "slo_burn", by["slo"]
+    for r in rows:
+        assert r["starvation_aborts"] == 0, r
+
+    # ---- part two: flight-recorder + SLO-engine overhead ------------
+    lens = [4, 6, 9]
+    max_new = 8 if fast else 16
+    # the true delta is host-side dict appends — near zero — but single
+    # interpret-mode waves jitter ±10 %, so the asserted best-of needs
+    # more samples than the recorded-only telemetry_overhead sweep
+    waves = 6 if fast else 10
+
+    def wave(eng, base_rid):
+        reqs = [Request(rid=base_rid + i,
+                        prompt=(np.arange(L, dtype=np.int32) % 90) + 4,
+                        adapter_id=i % len(states), max_new=max_new)
+                for i, L in enumerate(lens)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run(max_ticks=400)
+        assert all(r.done for r in reqs)
+        return [tuple(r.out) for r in reqs]
+
+    modes = [("off", ObservabilityConfig(metrics=True, flightrec=False)),
+             ("on", ObservabilityConfig(metrics=True, flightrec=True,
+                                        slo=slo_cfg))]
+    engines = {m: ServingEngine(model, params, states, slots=len(lens),
+                                max_len=64, page_size=PAGE_SIZE,
+                                observability=o)
+               for m, o in modes}
+    rid2, streams = 0, {}
+    per_tok = {m: [] for m in engines}
+    for m, eng in engines.items():           # warm caches, untimed
+        wave(eng, rid2)
+        rid2 += len(lens)
+    for _ in range(waves):                   # interleaved best-of
+        for m, eng in engines.items():
+            toks0 = eng.tokens_out
+            t0 = time.perf_counter()
+            streams[m] = wave(eng, rid2)
+            rid2 += len(lens)
+            per_tok[m].append((time.perf_counter() - t0)
+                              / (eng.tokens_out - toks0))
+    assert streams["on"] == streams["off"], \
+        "flight recorder / SLO engine changed the streams"
+    assert all(len(e.unified_traces) == 1 for e in engines.values())
+    bar = float(os.environ.get("REPRO_FLIGHTREC_OVERHEAD_BAR", 0.05))
+    overhead = 1.0 - min(per_tok["off"]) / min(per_tok["on"])
+    overhead_rows = []
+    for m, eng in engines.items():
+        overhead_rows.append(
+            {"slo": m, "telemetry": f"flightrec_{m}",
+             "tokens_per_sec": 1.0 / min(per_tok[m]),
+             "flightrec_events":
+                 eng.flightrec.seq if eng.flightrec else 0})
+    overhead_rows[1]["overhead_frac_vs_off"] = overhead
+    overhead_rows[1]["overhead_bar"] = bar
+    print(f"slo_brownout flightrec overhead={overhead:+.1%} "
+          f"(bar {bar:.0%}, events={overhead_rows[1]['flightrec_events']})")
+    assert overhead <= bar, \
+        f"flight-recorder overhead {overhead:.1%} exceeds {bar:.0%} bar"
+    return rows + overhead_rows
+
+
 def bench_spec_decode(model, params, states, fast: bool = False):
     """Speculative decoding on repetitive shared-prefix traffic.
 
@@ -855,6 +1039,7 @@ def main(fast: bool = False):
                                               fast=fast)
     overload_brownout = bench_overload_brownout(model, params, stag_states,
                                                 fast=fast)
+    slo_brownout = bench_slo_brownout(model, params, stag_states, fast=fast)
     telemetry, eng_obs = bench_telemetry_overhead(model, params, stag_states,
                                                   fast=fast)
     kernel_roofline = profile_serving_kernels(
@@ -895,6 +1080,7 @@ def main(fast: bool = False):
         "spec_decode": spec_decode,
         "preempt_pressure": preempt_pressure,
         "overload_brownout": overload_brownout,
+        "slo_brownout": slo_brownout,
         "telemetry_overhead": telemetry,
         "kernel_roofline": kernel_roofline,
     }

@@ -50,6 +50,7 @@ fresh run's output, so the gate needs the pre-run version.
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
 import os
 import statistics
@@ -64,7 +65,7 @@ REPO = Path(__file__).resolve().parent.parent
 IDENTITY = ("T", "B", "backend", "cache", "mode", "decode_ticks",
             "unified", "tenants", "shared_frac", "prefix_cache",
             "num_pages", "preempt", "telemetry", "k", "shared_tokens",
-            "arrivals_per_2ticks", "brownout")
+            "arrivals_per_2ticks", "brownout", "slo")
 
 HIGHER_IS_BETTER = lambda key: "tokens_per_sec" in key      # noqa: E731
 LOWER_IS_BETTER = ("ttft_ms_mean", "ttft_ms_max", "ttft_ticks_mean")
@@ -161,6 +162,47 @@ def _git_baseline() -> dict:
     return json.loads(out.stdout)
 
 
+def _append_history(metrics, failures, notes, tol: float,
+                    path: Path) -> None:
+    """Append this gated run as one JSON line to the perf-trajectory log.
+
+    ``BENCH_serving.json`` is a snapshot — each CI run overwrites it, so
+    the *history* of the suite's relative ratios only existed in git
+    archaeology.  This keeps an append-only ledger (uploaded with the
+    bench artifacts): one line per gated run with the commit, date, and
+    per-cell fresh/baseline deltas, so a slow drift that never trips the
+    per-run gate is still visible by eyeballing (or plotting) the file.
+    Best-effort — a read-only checkout must never fail the gate."""
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=REPO,
+            capture_output=True, text=True, check=True).stdout.strip()
+    except Exception:
+        commit = "unknown"
+    row = {
+        "commit": commit,
+        "date": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "tol": tol,
+        "gated_metrics": len(metrics),
+        "failures": len(failures),
+        "notes": notes,
+        "deltas": [
+            {"sweep": name, "cell": cell, "metric": key,
+             "ratio": round(fval / bval, 4),
+             "fresh": round(fval, 4), "baseline": round(bval, 4)}
+            for (name, cell, key, fval, bval, _) in metrics],
+    }
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        with path.open("a") as fh:
+            fh.write(json.dumps(row) + "\n")
+        print(f"check_bench: appended run row to {path}")
+    except OSError as e:
+        print(f"check_bench: history append skipped ({e})",
+              file=sys.stderr)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--fresh", default=str(REPO / "BENCH_serving.json"),
@@ -171,6 +213,11 @@ def main(argv=None) -> int:
                     default=float(os.environ.get("REPRO_BENCH_TOL", 0.10)),
                     help="fractional deviation from the suite-median "
                          "ratio (env REPRO_BENCH_TOL)")
+    ap.add_argument("--history",
+                    default=str(REPO / "benchmarks" / "out"
+                                / "bench_history.jsonl"),
+                    help="append-only JSONL perf-trajectory ledger "
+                         "(one row per gated run)")
     args = ap.parse_args(argv)
 
     fresh = json.loads(Path(args.fresh).read_text())
@@ -188,6 +235,8 @@ def main(argv=None) -> int:
               file=sys.stderr)
 
     failures, metrics, skipped, notes = check(fresh, base, args.tol)
+    _append_history(metrics, failures, notes, args.tol,
+                    Path(args.history))
     print(f"check_bench: {len(metrics)} metrics gated at tol="
           f"{args.tol:.0%}, {len(skipped)} unmatched rows skipped")
     for n in notes:

@@ -24,6 +24,9 @@ case "${1:-fast}" in
     exec python -m pytest -x -q
     ;;
   chaos)
+    # every harness run exports a seed-named postmortem bundle here; CI
+    # uploads the directory as a workflow artifact when the lane fails
+    export REPRO_BUNDLE_DIR="${REPRO_BUNDLE_DIR:-benchmarks/out/postmortem}"
     # fixed seed first (the deterministic acceptance schedule), then a
     # fresh random seed each run — REPRO_CHAOS_SEED pins it for repro
     python -m pytest -q tests/test_resilience.py -k chaos

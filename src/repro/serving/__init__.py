@@ -3,9 +3,11 @@ from .engine import (ServingEngine, Request, make_serve_step,
                      make_prefill_step, make_unified_step, make_fused_step)
 from .multi_tenant import (stack_tenants, MTHooks, make_mt_factory,
                            shard_pool_stats)
-from .observability import (MetricsRegistry, ObservabilityConfig,
-                            Pow2Histogram, Tracer, profile_kernels,
-                            profile_serving_kernels, validate_chrome_trace,
+from .observability import (FlightRecorder, MetricsRegistry,
+                            ObservabilityConfig, Pow2Histogram, SLOConfig,
+                            SLOEngine, SLObjective, Tracer, export_bundle,
+                            profile_kernels, profile_serving_kernels,
+                            validate_bundle, validate_chrome_trace,
                             validate_prometheus)
 from .paging import PagePool, paginate_cache
 from .prefix import PrefixCache, PrefixHit, PrefixStats, PrefixTree

@@ -58,9 +58,10 @@ import numpy as np
 
 from ..models.attention import INVALID_POS
 from .multi_tenant import make_mt_factory, stack_tenants
-from .observability import (QUEUE_LANE, TICK_LANE, MetricsRegistry,
-                            ObservabilityConfig, Pow2Histogram, Tracer,
-                            slot_lane)
+from .observability import (QUEUE_LANE, TICK_LANE, FlightRecorder,
+                            MetricsRegistry, ObservabilityConfig,
+                            Pow2Histogram, SLOEngine, Tracer, slot_lane)
+from .observability.bundle import export_bundle
 from .paging import PagePool
 from .prefix import PrefixCache
 from .resilience.errors import (DeadlineExceeded, NeverFitsError,
@@ -69,10 +70,11 @@ from .resilience.errors import (DeadlineExceeded, NeverFitsError,
                                 TTLExpired)
 from .resilience.policy import (ResilienceConfig, ResilienceStats,
                                 VictimCandidate, select_victim,
-                                select_victims)
+                                select_victims, victim_rationale)
 from .sampling import (SamplingParams, params_to_arrays, sample_tokens,
                        sample_tokens_multi, spec_accept_counts)
 from .spec import DraftProposer, SpecConfig, replay_chain
+from .spec.propose import chain_events
 
 
 def make_serve_step(model, tenants: int = 0, backend: str = "fused",
@@ -723,6 +725,27 @@ class ServingEngine:
         self.registry = MetricsRegistry()
         self.tracer: Optional[Tracer] = (
             Tracer(self.obs.trace_capacity) if self.obs.trace else None)
+        # --- decision/diagnosis layer ---------------------------------
+        # flight recorder (structured scheduler decisions → explain()),
+        # SLO engine (burn rates; actuation gated by SLOConfig.brownout),
+        # and postmortem bundle state.  All host-side: recorder/SLO
+        # on/off never touches the device program, so streams stay
+        # bitwise identical (tests/test_flightrec_slo.py pins this).
+        self.flightrec: Optional[FlightRecorder] = (
+            FlightRecorder(self.obs.flightrec_capacity)
+            if self.obs.flightrec else None)
+        self.slo: Optional[SLOEngine] = (
+            SLOEngine(self.obs.slo) if self.obs.slo is not None else None)
+        self._first_tok_tick: Dict[int, int] = {}   # rid → first-token tick
+        self._bo_last_signals: List[str] = []       # pressure signals, last tick
+        self._bo_streak_signal = ""          # what started the hot streak
+        self._bundled_rung3 = False          # one bundle per rung-3 episode
+        self.last_bundle: Optional[Dict[str, Any]] = None
+        self.bundle_paths: List[str] = []
+        if self.prefix is not None and self.flightrec is not None:
+            self.prefix.on_evict = (
+                lambda freed, need: self._fr("prefix_evict", freed=freed,
+                                             need=need))
         # device tick counters, drained from the fused step's stats lane
         # (the same once-per-tick sync as the token buffer)
         self.device_counters: Dict[str, int] = {
@@ -858,6 +881,8 @@ class ServingEngine:
             need_p, cap_p = self._never_fit_pages(req)
             if need_p > cap_p:
                 self.rstats.never_fit_rejections += 1
+                self._fr("reject", rid=req.rid, reason="never_fits",
+                         need_pages=int(need_p), cap_pages=int(cap_p))
                 raise NeverFitsError(req.rid, need_p, cap_p)
         # --- overload brownout: bounded-queue / SLO-aware admission ----
         # Checked LAST so permanent rejections (never-fits, validation)
@@ -877,6 +902,9 @@ class ServingEngine:
                 self.tracer.instant("retry_later", QUEUE_LANE,
                                     rid=int(req.rid),
                                     depth=int(depth), limit=int(limit))
+            self._fr("reject", rid=req.rid, reason="retry_later",
+                     depth=int(depth), limit=int(limit),
+                     rung=self._brownout_rung)
             raise RetryLater(
                 req.rid, self.tick_count, depth, limit,
                 free_pages=self.pages.free_pages if self.paged else -1,
@@ -884,6 +912,9 @@ class ServingEngine:
         req.submit_tick = req.enq_tick = self.tick_count
         self._rids.add(req.rid)
         self._queue.append(req)
+        self._fr("submit", rid=req.rid, tenant=self._tenant_of(req),
+                 prompt_tokens=len(req.prompt), max_new=req.max_new,
+                 priority=req.priority)
         if self.obs.metrics:
             self._m_submitted.inc(tenant=self._tenant_of(req))
         if self.tracer is not None:
@@ -1113,6 +1144,29 @@ class ServingEngine:
                             for pool, mats in
                             self._mos_pool_stats().items()
                             for mat, v in mats.items()})
+        if self.flightrec is not None:
+            R.counter("serving_flightrec_events_total",
+                      "Scheduler decision events recorded",
+                      fn=lambda: self.flightrec.seq)
+            R.counter("serving_flightrec_dropped_total",
+                      "Flight-recorder ring evictions",
+                      fn=lambda: self.flightrec.dropped)
+        if self.slo is not None:
+            R.gauge("serving_slo_burn_rate",
+                    "Error-budget burn rate per window",
+                    labelnames=("window",),
+                    fn=lambda: {(w,): v for w, v in
+                                self.slo.burn_rates(self.tick_count)
+                                .items()})
+            R.counter("serving_slo_observations_total",
+                      "Budgeted SLO observations by verdict",
+                      labelnames=("verdict",),
+                      fn=lambda: {("good",): self.slo.good,
+                                  ("bad",): self.slo.bad})
+            R.histogram("serving_slo_latency_ticks",
+                        "SLO latency observations (engine ticks)",
+                        labelnames=("tenant", "metric"),
+                        fn=lambda: dict(self.slo.hists))
 
     def metrics(self) -> Dict[str, Any]:
         """ONE unified telemetry snapshot: engine/tick counters, device
@@ -1171,6 +1225,12 @@ class ServingEngine:
             "spec": self.spec_metrics(),
             "mos": (self._mos_pool_stats()
                     if self.model.plan.method in ("mos", "pure") else None),
+            "slo": (self.slo.state(self.tick_count)
+                    if self.slo is not None else None),
+            "flightrec": (None if self.flightrec is None else
+                          {"recorded": self.flightrec.seq,
+                           "dropped": self.flightrec.dropped,
+                           "capacity": self.flightrec.capacity}),
             "registry": self.registry.collect(),
         }
         return out
@@ -1258,6 +1318,130 @@ class ServingEngine:
                              outcome=type(err).__name__)
 
     # ------------------------------------------------------------------
+    # decision/diagnosis layer: flight recorder, SLO, postmortems
+    # ------------------------------------------------------------------
+
+    def _fr(self, kind: str, rid: int = -1, slot: int = -1, **detail):
+        """Record one scheduler decision event (no-op when the flight
+        recorder is off).  Host-side only — never touches the device
+        program."""
+        if self.flightrec is not None:
+            self.flightrec.record(self.tick_count, kind, rid=rid,
+                                  slot=slot, **detail)
+
+    def explain(self, rid: int) -> List[str]:
+        """Ordered human-readable lifecycle narrative for ``rid`` from
+        the flight recorder: every decision the scheduler made about it
+        (submit/admit/holds/preemptions with rationale/prefix hits/
+        salvage/terminal outcome), oldest first.  Empty with the
+        recorder off or the history already evicted from the ring."""
+        return [] if self.flightrec is None else self.flightrec.explain(rid)
+
+    def flight_events(self, rid: Optional[int] = None,
+                      kind: Optional[str] = None) -> List[Dict[str, Any]]:
+        """Raw flight-recorder events (all, per-rid, or per-kind)."""
+        if self.flightrec is None:
+            return []
+        if rid is not None:
+            evs = self.flightrec.events_for(rid)
+            return [e for e in evs if kind is None or e["kind"] == kind]
+        return self.flightrec.events(kind)
+
+    def why_degraded(self) -> Dict[str, Any]:
+        """The brownout ladder's current evidence: active rung,
+        hysteresis counters, the pressure signals live right now, and
+        the recorded rung transitions that got here."""
+        signals: Dict[str, Any] = {
+            "active": list(self._bo_last_signals),
+            "queue_depth": len(self._queue),
+            "queue_threshold": self._brownout_queue_threshold(),
+            "head_wait": self._head_wait,
+            "head_wait_threshold": (self.rcfg.brownout_head_wait
+                                    if self.rcfg.brownout_head_wait
+                                    is not None
+                                    else self.rcfg.pressure_ticks),
+            "free_frac": (self.pages.free_pages / self.num_pages
+                          if self.paged and self.num_pages else None),
+            "free_frac_threshold": self.rcfg.brownout_free_frac,
+        }
+        if self.slo is not None:
+            signals["slo_burn"] = self.slo.burn_rates(self.tick_count)
+            signals["slo_brownout_input"] = self.obs.slo.brownout
+        return {
+            "rung": self._brownout_rung,
+            "spec_k_effective": self.spec_k_effective(),
+            "hot_ticks": self._bo_hot,
+            "calm_ticks": self._bo_calm,
+            "transitions": dict(self._bo_transitions),
+            "signals": signals,
+            "history": ([e for e in self.flightrec.events("brownout")]
+                        if self.flightrec is not None else []),
+        }
+
+    def export_bundle(self, path=None, *, reason: str = "on_demand",
+                      error: Optional[BaseException] = None,
+                      fault_plan=None, snapshot_ref=None) -> Dict[str, Any]:
+        """Export a postmortem debug bundle now (see
+        ``observability.bundle``); returns the bundle dict."""
+        return export_bundle(self, path, reason=reason, error=error,
+                             fault_plan=fault_plan,
+                             snapshot_ref=snapshot_ref)
+
+    def _capture_bundle(self, reason: str,
+                        error: Optional[BaseException] = None):
+        """Auto-capture on a terminal scheduling event: keep the bundle
+        in memory (``last_bundle``) and write it under
+        ``obs.bundle_dir`` when configured.  Never raises — a broken
+        export must not mask the incident it documents."""
+        if not self.obs.bundle_on_failure:
+            return None
+        path = None
+        if self.obs.bundle_dir:
+            import os as _os
+            path = _os.path.join(
+                self.obs.bundle_dir,
+                f"bundle_{reason}_t{self.tick_count}.json")
+        try:
+            bundle = export_bundle(self, path, reason=reason, error=error)
+        except Exception:                      # pragma: no cover
+            return None
+        self.last_bundle = bundle
+        self._fr("bundle", reason=reason,
+                 **({"path": path} if path else {}))
+        if path:
+            self.bundle_paths.append(path)
+        return bundle
+
+    def _slo_note_admit(self, req: Request):
+        """Queue-wait observation at admission (SLO off → no-op)."""
+        if self.slo is not None and req.enq_tick >= 0:
+            self.slo.observe_queue_wait(
+                self._tenant_of(req), self.tick_count - req.enq_tick,
+                self.tick_count)
+
+    def _slo_note_tokens(self, req: Request, had_tokens: bool):
+        """First-token observation: TTFT counts from the original
+        submit, so a preempted request's re-admission cannot reset it
+        (its ``out`` is non-empty → ``had_tokens``)."""
+        if self.slo is None or had_tokens or not req.out:
+            return
+        self.slo.observe_ttft(
+            self._tenant_of(req),
+            self.tick_count - max(req.submit_tick, 0), self.tick_count)
+        self._first_tok_tick[req.rid] = self.tick_count
+
+    def _slo_note_done(self, req: Request):
+        """Retirement/failure observation: mean inter-token ticks over
+        the stream (needs ≥ 2 tokens); also drops first-token state."""
+        ft = self._first_tok_tick.pop(req.rid, None)
+        if (self.slo is None or ft is None or req.error is not None
+                or len(req.out or ()) < 2):
+            return
+        self.slo.observe_itl(
+            self._tenant_of(req),
+            (self.tick_count - ft) / (len(req.out) - 1), self.tick_count)
+
+    # ------------------------------------------------------------------
     # lifecycle internals (serving.resilience)
     # ------------------------------------------------------------------
 
@@ -1313,10 +1497,15 @@ class ServingEngine:
         req.done = True
         self._rids.discard(req.rid)
         self._cancel_req.discard(req.rid)
+        self._fr("fail", rid=req.rid, slot=s,
+                 reason=getattr(err, "kind", type(err).__name__),
+                 tokens=len(req.out or ()))
+        self._slo_note_done(req)
         self._note_slot_close(s, req, type(err).__name__)
         return req
 
-    def _preempt_slot(self, s: int, requeue_at: int = 0):
+    def _preempt_slot(self, s: int, requeue_at: int = 0,
+                      cause: Optional[Dict[str, Any]] = None):
         """Preempt-and-recompute: release ``s``'s pages through the
         prefix cache and re-queue its request with the emitted tokens as
         part of the effective prompt — re-admission's prefix hit maps the
@@ -1333,6 +1522,9 @@ class ServingEngine:
                 max(0, self.tick_count - max(req.submit_tick, 0)))
         if self.obs.metrics:
             self._m_preempt.inc(tenant=self._tenant_of(req))
+        self._fr("preempt", rid=req.rid, slot=s,
+                 preemptions=req.preemptions, requeue_at=requeue_at,
+                 **(cause or {"rationale": "operator"}))
         self._note_slot_close(s, req, "preempt")
         if self.tracer is not None:
             self.tracer.instant("preempt", slot_lane(s), rid=int(req.rid))
@@ -1340,6 +1532,8 @@ class ServingEngine:
             self.tracer.instant("requeue", QUEUE_LANE, rid=int(req.rid))
         req.enq_tick = self.tick_count
         self._queue.insert(min(requeue_at, len(self._queue)), req)
+        self._fr("requeue", rid=req.rid, position=min(requeue_at,
+                                                      len(self._queue) - 1))
         self._progress = True
 
     def _salvage_slot(self, s: int):
@@ -1355,6 +1549,9 @@ class ServingEngine:
         req = self._active[s]
         self._release_slot(s, cache_prefix=False)
         self.rstats.salvaged += 1
+        self._fr("salvage", rid=req.rid, slot=s,
+                 strikes=req.salvage_strikes,
+                 kept_tokens=len(req.out or ()))
         self._note_slot_close(s, req, "salvage")
         if self.tracer is not None:
             self.tracer.instant("salvage", slot_lane(s), rid=int(req.rid),
@@ -1363,6 +1560,7 @@ class ServingEngine:
             self.tracer.instant("requeue", QUEUE_LANE, rid=int(req.rid))
         req.enq_tick = self.tick_count
         self._queue.insert(0, req)
+        self._fr("requeue", rid=req.rid, position=0)
         self._progress = True
 
     # ------------------------------------------------------------------
@@ -1376,21 +1574,35 @@ class ServingEngine:
             return self.rcfg.max_queue
         return 2 * self.slots
 
-    def _brownout_pressured(self) -> bool:
-        """One tick's pressure verdict from the three sustained-load
-        signals: queue depth, head starvation age, free-page ratio."""
+    def _brownout_signals(self) -> List[str]:
+        """Every pressure signal firing this tick, in precedence order:
+        queue depth, head starvation age, free-page ratio, and — only
+        when ``SLOConfig.brownout`` opts in — the SLO burn-rate alert.
+        The first entry is what a rung transition attributes itself to
+        (the flight recorder and :meth:`why_degraded` expose the full
+        list)."""
+        sig: List[str] = []
         if len(self._queue) >= self._brownout_queue_threshold():
-            return True
+            sig.append("queue_depth")
         hw = self.rcfg.brownout_head_wait
         if hw is None:
             hw = self.rcfg.pressure_ticks
         if self._queue and self._head_wait >= hw:
-            return True
+            sig.append("head_wait")
         if self.paged and self.rcfg.brownout_free_frac > 0.0:
             alloc = max(1, self.num_pages - 1)
             if self.pages.free_pages / alloc <= self.rcfg.brownout_free_frac:
-                return True
-        return False
+                sig.append("free_frac")
+        if (self.slo is not None and self.obs.slo.brownout
+                and self.slo.pressured(self.tick_count)):
+            sig.append("slo_burn")
+        return sig
+
+    def _brownout_pressured(self) -> bool:
+        """One tick's pressure verdict from the sustained-load signals:
+        queue depth, head starvation age, free-page ratio, and (config-
+        gated) SLO burn rate."""
+        return bool(self._brownout_signals())
 
     def spec_k_effective(self) -> int:
         """Speculative depth after brownout: rung 1 halves K, rung ≥ 2
@@ -1440,6 +1652,10 @@ class ServingEngine:
             self._rids.discard(req.rid)
             self._cancel_req.discard(req.rid)
             self.rstats.shed_requests += 1
+            self._fr("shed", rid=req.rid, rung=self._brownout_rung,
+                     priority=req.priority,
+                     waited=self.tick_count - max(req.enq_tick, 0))
+            self._first_tok_tick.pop(req.rid, None)
             self._note_queue_fail(req, err)
             shed.append(req)
         return shed
@@ -1452,16 +1668,35 @@ class ServingEngine:
         tick sheds queued work.  Returns the requests shed this tick."""
         if not self.rcfg.brownout:
             return []
-        pressured = self._brownout_pressured()
-        if pressured:
+        signals = self._brownout_signals()
+        self._bo_last_signals = signals
+        if signals:
+            if self._bo_hot == 0:
+                # a transition attributes itself to whatever STARTED the
+                # pressured streak — by the time engage_ticks have
+                # elapsed, saturation signals (queue depth) may have
+                # caught up with the earlier-warning ones (slo_burn)
+                self._bo_streak_signal = signals[0]
             self._bo_hot += 1
             self._bo_calm = 0
             if self._bo_hot >= self.rcfg.brownout_engage_ticks \
                     and self._brownout_rung < 3:
                 self._brownout_rung += 1
                 self._brownout_transition("up")
+                self._fr("brownout", direction="up",
+                         rung=self._brownout_rung,
+                         signal=self._bo_streak_signal,
+                         signals=list(signals))
             if self._brownout_rung >= 3:
-                return self._brownout_shed()
+                shed = self._brownout_shed()
+                if shed and not self._bundled_rung3:
+                    # one bundle per rung-3 episode: sustained overload
+                    # sheds every pressured tick, and re-exporting the
+                    # same evidence each tick would cost more than the
+                    # incident it documents
+                    self._bundled_rung3 = True
+                    self._capture_bundle("rung3_shed")
+                return shed
         else:
             self._bo_calm += 1
             self._bo_hot = 0
@@ -1469,6 +1704,10 @@ class ServingEngine:
                     and self._brownout_rung > 0:
                 self._brownout_rung -= 1
                 self._brownout_transition("down")
+                self._fr("brownout", direction="down",
+                         rung=self._brownout_rung, signal="calm")
+                if self._brownout_rung < 3:
+                    self._bundled_rung3 = False
         return []
 
     def _lifecycle_sweep(self) -> List[Request]:
@@ -1502,6 +1741,9 @@ class ServingEngine:
                     req.done = True
                     self._rids.discard(req.rid)
                     self._cancel_req.discard(req.rid)
+                    self._fr("fail", rid=req.rid, reason=err.kind,
+                             where="queued")
+                    self._first_tok_tick.pop(req.rid, None)
                     self._note_queue_fail(req, err)
                     failed.append(req)
             self._queue = keep
@@ -1559,22 +1801,33 @@ class ServingEngine:
         pt = self.rcfg.pressure_ticks
         if self._queue and self._head_wait >= pt:
             head = self._queue[0]
-            victims = select_victims(self._victim_candidates(None),
-                                     head.priority,
-                                     need_pages=self._head_need_pages(head))
+            cands = self._victim_candidates(None)
+            need = self._head_need_pages(head)
+            victims = select_victims(cands, head.priority, need_pages=need)
+            by_slot = {c.slot: c for c in cands}
             for v in victims:
                 # victims resume right behind the head they unblocked
-                self._preempt_slot(v, requeue_at=1)
+                self._preempt_slot(v, requeue_at=1, cause={
+                    "by_rid": head.rid, "rids": [head.rid],
+                    "need_pages": need,
+                    "rationale": victim_rationale(by_slot[v],
+                                                  head.priority, need)})
             if victims:
                 self._head_wait = 0
                 return
         s = self._oversub_slot
         if s is not None and self._stall_ticks.get(s, 0) >= pt \
                 and self._active[s] is not None:
-            v = select_victim(self._victim_candidates(s),
-                              self._active[s].priority)
+            stalled = self._active[s]
+            cands = self._victim_candidates(s)
+            v = select_victim(cands, stalled.priority)
             if v is not None:
-                self._preempt_slot(v, requeue_at=0)
+                by_slot = {c.slot: c for c in cands}
+                self._preempt_slot(v, requeue_at=0, cause={
+                    "by_rid": stalled.rid, "rids": [stalled.rid],
+                    "need_pages": 1,
+                    "rationale": victim_rationale(by_slot[v],
+                                                  stalled.priority, 1)})
                 self._stall_ticks[s] = 0
 
     def _watchdog(self):
@@ -1595,9 +1848,14 @@ class ServingEngine:
             # resident — whoever the driver would cancel to unblock
             head = (self._queue[0].rid if self._queue else
                     next((r.rid for r in self._active if r is not None), -1))
-            raise StarvationError(
+            err = StarvationError(
                 self.rcfg.watchdog_ticks, head, self.tick_count,
                 self.pages.free_pages if self.paged else -1)
+            self._fr("starvation", rid=head,
+                     waited=self.rcfg.watchdog_ticks,
+                     free_pages=self.pages.free_pages if self.paged else -1)
+            self._capture_bundle("starvation", error=err)
+            raise err
 
     # ------------------------------------------------------------------
     # legacy admission (two-phase path)
@@ -1621,8 +1879,11 @@ class ServingEngine:
                 slot = free.pop(0)
             admitted.append((slot, self._queue.pop(0)))
             req.admit_tick = self.tick_count
-            self.rstats.time_in_queue.append(
-                max(0, self.tick_count - max(req.enq_tick, 0)))
+            wait = max(0, self.tick_count - max(req.enq_tick, 0))
+            self.rstats.time_in_queue.append(wait)
+            self._fr("admit", rid=req.rid, slot=slot, queue_wait=wait,
+                     preemptions=req.preemptions)
+            self._slo_note_admit(req)
             self._note_admit(req, slot)
             self._progress = True
         return admitted
@@ -1761,7 +2022,14 @@ class ServingEngine:
             req = self._active[s]
             if req is not None:
                 traj = self._traj_tokens(req)
-                if self.pages.covered_cols(s) < self.pages.pages_for(traj):
+                covered = self.pages.covered_cols(s)
+                need = self.pages.pages_for(traj)
+                if covered < need:
+                    if self._queue:
+                        self._fr("hold", rid=self._queue[0].rid, slot=s,
+                                 reason="oversubscribed_streaming",
+                                 rids=[req.rid], covered_pages=covered,
+                                 need_pages=need)
                     return               # stream the head before admitting
             self._oversub_slot = None
         free = [i for i in range(self.slots) if self._active[i] is None]
@@ -1778,6 +2046,9 @@ class ServingEngine:
                 self.rstats.never_fit_rejections += 1
                 req.error = NeverFitsError(req.rid, need_p, cap_max)
                 req.done = True
+                self._fr("fail", rid=req.rid, reason="never_fits",
+                         where="first_hold", need_pages=int(need_p),
+                         cap_pages=int(cap_max))
                 self._note_queue_fail(req, req.error)
                 self._tick_failed.append(req)
                 continue
@@ -1791,6 +2062,12 @@ class ServingEngine:
                 self._m_plookup.inc(tenant=self._tenant_of(req))
                 if hit is not None:
                     self._m_phit.inc(tenant=self._tenant_of(req))
+            if hit is not None:
+                self._fr("prefix_hit", rid=req.rid,
+                         reused_tokens=hit.tokens + hit.cow_tokens,
+                         pages=len(hit.pages),
+                         cow=hit.cow_page is not None,
+                         resumed=bool(req.out))
             n_shared = len(hit.pages) if hit is not None else 0
             cap = self._swa_cap_pages()
             eff_pages = self.pages.pages_for(self._effective_tokens(traj))
@@ -1810,8 +2087,12 @@ class ServingEngine:
             self._cursor[slot] = cursor
             self._len[slot] = 0
             req.admit_tick = self.tick_count
-            self.rstats.time_in_queue.append(
-                max(0, self.tick_count - max(req.enq_tick, 0)))
+            wait = max(0, self.tick_count - max(req.enq_tick, 0))
+            self.rstats.time_in_queue.append(wait)
+            self._fr("admit", rid=req.rid, slot=slot, queue_wait=wait,
+                     oversubscribed=self._oversub_slot == slot,
+                     reused_tokens=cursor, preemptions=req.preemptions)
+            self._slo_note_admit(req)
             self._note_admit(req, slot)
             self._progress = True
             if self._oversub_slot is not None:
@@ -2195,6 +2476,7 @@ class ServingEngine:
             req = self._active[s]
             if req is None:
                 continue
+            had_tokens = bool(req.out)   # SLO: first-token detection
             poisoned_at: Optional[int] = None
             emitted_t = [0] * D          # per-micro-step emission counts
             last_t = [0] * D             # … and last emitted token (spec)
@@ -2219,6 +2501,7 @@ class ServingEngine:
                         break
                 if poisoned_at is not None or req.done:
                     break
+            self._slo_note_tokens(req, had_tokens)
             if self.spec_k and s in self._spec_info:
                 # exact drafted/accepted accounting: replay the in-graph
                 # chain automaton over what the device actually emitted
@@ -2234,6 +2517,16 @@ class ServingEngine:
                     if self.obs.metrics:
                         self._m_drafted.inc(dr, tenant=tn)
                         self._m_accepted.inc(ac, tenant=tn)
+                    if self.flightrec is not None:
+                        # per-chain accept/reject: the same automaton
+                        # replay, kept per micro-step — `alive=False`
+                        # marks the rejection point
+                        evs = chain_events(props, self.spec_k, emitted_t,
+                                           last_t, fs_t)
+                        self._fr("spec", rid=req.rid, slot=s,
+                                 chain_len=len(props), drafted=dr,
+                                 accepted=ac, rejected=max(0, dr - ac),
+                                 steps=evs)
             if poisoned_at is not None:
                 # per-slot quarantine: the stream truncates at the last
                 # finite token and co-tenants are untouched.  With a
@@ -2245,20 +2538,29 @@ class ServingEngine:
                 if tr is not None:
                     tr.instant("quarantine", slot_lane(s),
                                rid=int(req.rid), micro_step=int(poisoned_at))
-                if req.salvage_strikes < self.rcfg.salvage_retries:
+                will_salvage = (req.salvage_strikes
+                                < self.rcfg.salvage_retries)
+                self._fr("quarantine", rid=req.rid, slot=s,
+                         micro_step=int(poisoned_at),
+                         strikes=req.salvage_strikes,
+                         verdict="salvage" if will_salvage else "discard")
+                if will_salvage:
                     req.salvage_strikes += 1
                     self._salvage_slot(s)
                     continue
                 if self.rcfg.salvage_retries > 0:
                     self.rstats.salvage_retries_exhausted += 1
-                finished.append(self._fail_active(
-                    s, SlotQuarantined(
-                        req.rid, self.tick_count,
-                        f"non-finite logits in slot {s} at micro-step "
-                        f"{poisoned_at}"
-                        + (f" after {req.salvage_strikes} salvage "
-                           f"retries" if req.salvage_strikes else "")),
-                    cache_prefix=False))
+                err = SlotQuarantined(
+                    req.rid, self.tick_count,
+                    f"non-finite logits in slot {s} at micro-step "
+                    f"{poisoned_at}"
+                    + (f" after {req.salvage_strikes} salvage "
+                       f"retries" if req.salvage_strikes else ""))
+                finished.append(self._fail_active(s, err,
+                                                  cache_prefix=False))
+                self._capture_bundle(
+                    "salvage_exhausted" if req.salvage_strikes
+                    else "quarantine", error=err)
                 continue
             if req.out:
                 self._len[s] = len(req.prompt) + len(req.out) - 1
@@ -2272,6 +2574,10 @@ class ServingEngine:
                 self._poison_next.discard(s)
                 if self._oversub_slot == s:
                     self._oversub_slot = None
+                self._fr("retire", rid=req.rid, slot=s,
+                         tokens=len(req.out or ()),
+                         preemptions=req.preemptions)
+                self._slo_note_done(req)
                 self._note_slot_close(s, req, "completed")
                 finished.append(req)
                 self._progress = True
@@ -2308,6 +2614,9 @@ class ServingEngine:
         self._active[i] = None
         self._len.pop(i, None)
         self._rids.discard(req.rid)
+        self._fr("retire", rid=req.rid, slot=i,
+                 tokens=len(req.out or ()), preemptions=req.preemptions)
+        self._slo_note_done(req)
         self._note_slot_close(i, req, "completed")
         retired.append(i)
         finished.append(req)
@@ -2347,8 +2656,10 @@ class ServingEngine:
             req = self._active[i]
             if req is None:
                 continue
+            had_tokens = bool(req.out)
             req.out.append(tok)
             self.tokens_out += 1
+            self._slo_note_tokens(req, had_tokens)
             if self.obs.metrics:
                 self._m_tokens.inc(tenant=self._tenant_of(req))
             self._progress = True
@@ -2375,8 +2686,10 @@ class ServingEngine:
             if req is None:
                 continue
             tok = int(nxt[i])
+            had_tokens = bool(req.out)
             req.out.append(tok)
             self.tokens_out += 1
+            self._slo_note_tokens(req, had_tokens)
             if self.obs.metrics:
                 self._m_tokens.inc(tenant=self._tenant_of(req))
             self._progress = True

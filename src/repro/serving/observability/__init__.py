@@ -1,32 +1,47 @@
-"""Unified serving telemetry: metrics registry, lifecycle tracing, and
-kernel roofline profiling.
+"""Unified serving telemetry: metrics, tracing, rooflines — and the
+decision/diagnosis layer (SLOs, the flight recorder, postmortems).
 
-Three pillars (see ``docs/observability.md``):
+Six pillars (see ``docs/observability.md``):
 
   * :mod:`.registry` — typed metric series (counters / gauges / pow-2
-    histograms) with JSON and Prometheus-text exporters; one registry per
-    engine, snapshotted via ``engine.metrics()``.
+    histograms, now with streaming ``quantile``/p50-p95-p99 summaries)
+    with JSON and Prometheus-text exporters; one registry per engine,
+    snapshotted via ``engine.metrics()``.
   * :mod:`.trace` — request-lifecycle span events on a bounded ring
     buffer, exported as Chrome-trace / Perfetto JSON with one lane per
     engine slot (``engine.export_trace()``).
   * :mod:`.rooflines` — out-of-graph kernel profiling hooks reporting
     achieved-vs-analytic roofline fractions for the Pallas families.
+  * :mod:`.slo` — per-tenant TTFT/ITL/queue-wait objectives with
+    two-window burn-rate evaluation; optionally (``SLOConfig.brownout``)
+    an extra pressure signal for the brownout ladder.
+  * :mod:`.flightrec` — a bounded ring of structured scheduler decision
+    events backing ``engine.explain(rid)`` / ``engine.why_degraded()``.
+  * :mod:`.bundle` — single-file postmortem debug bundles exported on
+    quarantine / salvage exhaustion / starvation / rung-3 shed.
 
 :class:`ObservabilityConfig` selects what the engine pays for.  The
-default (metrics on, tracing off) adds only host-side dict updates on the
-existing once-per-tick sync; everything that could perturb the device
-program is shape-static and always compiled in, so toggling telemetry
-never changes the numerics (``tests/test_observability.py`` pins the
-token streams bitwise across all three settings).
+default (metrics + flight recorder on, tracing off, SLO off) adds only
+host-side dict/deque updates on the existing once-per-tick sync;
+everything that could perturb the device program is shape-static and
+always compiled in, so toggling telemetry never changes the numerics
+(``tests/test_observability.py`` and ``tests/test_flightrec_slo.py``
+pin the token streams bitwise across settings).
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
-from .registry import (Counter, Gauge, Histogram, MetricsRegistry,
-                       Pow2Histogram, pow2_bucket, validate_prometheus)
+from .bundle import (BUNDLE_KIND, BUNDLE_REASONS, BUNDLE_VERSION,
+                     export_bundle, validate_bundle)
+from .flightrec import EVENT_KINDS, FlightRecorder
+from .registry import (SUMMARY_QUANTILES, Counter, Gauge, Histogram,
+                       MetricsRegistry, Pow2Histogram, pow2_bucket,
+                       validate_prometheus)
 from .rooflines import (HBM_BW, PEAK_FLOPS, KernelProfile, KernelProfiler,
                         profile_kernels, profile_serving_kernels)
+from .slo import SLO_METRICS, SLObjective, SLOConfig, SLOEngine
 from .trace import (QUEUE_LANE, SLOT_LANE0, TICK_LANE, Tracer, slot_lane,
                     validate_chrome_trace)
 
@@ -45,27 +60,55 @@ class ObservabilityConfig:
     ``trace_capacity``
         Ring-buffer size; the oldest events are dropped (and counted)
         beyond this.
+    ``flightrec`` / ``flightrec_capacity``
+        The scheduler flight recorder (``engine.explain(rid)`` /
+        ``engine.why_degraded()`` / postmortem narratives).  Always
+        cheap — one host dict append per scheduling decision — so it is
+        ON by default; the ring drops (and counts) beyond capacity.
+    ``slo``
+        Per-tenant latency objectives + burn-rate evaluation
+        (:class:`~.slo.SLOConfig`).  ``None`` (default) disables SLO
+        tracking entirely; even when set, the brownout actuation path
+        stays off unless ``SLOConfig.brownout`` is also True.
+    ``bundle_dir`` / ``bundle_on_failure``
+        Postmortem bundles.  When ``bundle_on_failure`` (default True)
+        the engine captures a bundle in memory (``engine.last_bundle``)
+        on quarantine / salvage exhaustion / starvation / rung-3 shed,
+        and writes it under ``bundle_dir`` when that is set.
     """
 
     metrics: bool = True
     trace: bool = False
     trace_capacity: int = 4096
+    flightrec: bool = True
+    flightrec_capacity: int = 2048
+    slo: Optional[SLOConfig] = None
+    bundle_dir: Optional[str] = None
+    bundle_on_failure: bool = True
 
     def __post_init__(self):
         if self.trace_capacity < 1:
             raise ValueError(
                 f"trace_capacity {self.trace_capacity} < 1")
+        if self.flightrec_capacity < 1:
+            raise ValueError(
+                f"flightrec_capacity {self.flightrec_capacity} < 1")
 
 
 __all__ = [
     "ObservabilityConfig",
     # registry
     "MetricsRegistry", "Counter", "Gauge", "Histogram", "Pow2Histogram",
-    "pow2_bucket", "validate_prometheus",
+    "pow2_bucket", "validate_prometheus", "SUMMARY_QUANTILES",
     # trace
     "Tracer", "validate_chrome_trace", "slot_lane",
     "QUEUE_LANE", "TICK_LANE", "SLOT_LANE0",
     # rooflines
     "profile_kernels", "profile_serving_kernels", "KernelProfiler",
     "KernelProfile", "PEAK_FLOPS", "HBM_BW",
+    # slo / flightrec / bundles
+    "SLOConfig", "SLObjective", "SLOEngine", "SLO_METRICS",
+    "FlightRecorder", "EVENT_KINDS",
+    "export_bundle", "validate_bundle",
+    "BUNDLE_KIND", "BUNDLE_VERSION", "BUNDLE_REASONS",
 ]

@@ -1,0 +1,147 @@
+"""Postmortem debug bundles: one JSON artifact per incident.
+
+When the engine hits a terminal scheduling event — a NaN quarantine, a
+salvage budget exhausted, a :class:`StarvationError`, a rung-3 shed —
+or on demand, it exports everything a postmortem needs into a single
+JSON document:
+
+  * the flight-recorder ring (the decision narrative up to the event),
+  * the full metrics snapshot (``engine.metrics()``),
+  * SLO engine state (burn rates + per-tenant percentiles) if tracking,
+  * the brownout ladder's evidence (``engine.why_degraded()``),
+  * the engine/resilience/observability configuration,
+  * the driving :class:`~..resilience.faults.FaultPlan` when a chaos
+    harness caused the incident, and
+  * an optional snapshot reference (a path a restore could start from).
+
+Serialization rides ``checkpoint.io``'s numpy-tolerant encoder —
+whatever numpy scalars leaked into engine state serialize instead of
+crashing the one export that matters mid-incident.
+:func:`validate_bundle` mirrors ``validate_chrome_trace``: a schema
+checker tests and CI run against every produced bundle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Dict, Optional
+
+BUNDLE_KIND = "serving-postmortem-bundle"
+BUNDLE_VERSION = 1
+
+#: Reasons the engine auto-captures for (plus "on_demand"/"chaos_harness").
+BUNDLE_REASONS = ("quarantine", "salvage_exhausted", "starvation",
+                  "rung3_shed", "on_demand", "chaos_harness")
+
+_REQUIRED_KEYS = ("kind", "version", "reason", "tick", "engine_config",
+                  "flight_recorder", "metrics", "slo", "brownout",
+                  "error", "fault_plan", "snapshot_ref")
+
+
+def _engine_config(engine) -> Dict[str, Any]:
+    cfg: Dict[str, Any] = {
+        "slots": engine.slots, "max_len": engine.max_len,
+        "backend": engine.backend, "paged": engine.paged,
+        "unified": engine.unified, "chunk": engine.chunk,
+        "decode_ticks": engine.decode_ticks,
+        "auto_ticks": engine.auto_ticks,
+        "spec_k": engine.spec_k, "tenants": engine.tenants,
+        "prefix_cache": engine.prefix is not None,
+        "resilience": dataclasses.asdict(engine.rcfg),
+        "observability": dataclasses.asdict(engine.obs),
+    }
+    if engine.paged:
+        cfg["page_size"] = engine.page_size
+        cfg["num_pages"] = engine.num_pages
+    return cfg
+
+
+def export_bundle(engine, path=None, *, reason: str = "on_demand",
+                  error: Optional[BaseException] = None,
+                  fault_plan=None, snapshot_ref=None) -> Dict[str, Any]:
+    """Assemble (and optionally write) one postmortem bundle.
+
+    Returns the bundle dict; when ``path`` is given the JSON lands there
+    atomically enough for a crash path (single ``write`` of the full
+    document, parent dirs created)."""
+    fr = getattr(engine, "flightrec", None)
+    slo = getattr(engine, "slo", None)
+    bundle: Dict[str, Any] = {
+        "kind": BUNDLE_KIND,
+        "version": BUNDLE_VERSION,
+        "reason": str(reason),
+        "tick": int(engine.tick_count),
+        "engine_config": _engine_config(engine),
+        "flight_recorder": fr.to_dict() if fr is not None else None,
+        "metrics": engine.metrics(),
+        "slo": slo.state(engine.tick_count) if slo is not None else None,
+        "brownout": engine.why_degraded(),
+        "error": (None if error is None else
+                  {"type": type(error).__name__,
+                   "kind": getattr(error, "kind", None),
+                   "message": str(error)}),
+        "fault_plan": (None if fault_plan is None else
+                       {"seed": fault_plan.seed,
+                        "faults": [dataclasses.asdict(f)
+                                   for f in fault_plan.faults]}),
+        "snapshot_ref": None if snapshot_ref is None else str(snapshot_ref),
+    }
+    if path is not None:
+        from ...checkpoint.io import json_dumps
+        path = os.fspath(path)
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(path, "w") as f:
+            f.write(json_dumps(bundle, indent=2))
+    return bundle
+
+
+def validate_bundle(obj) -> int:
+    """Schema check mirroring ``validate_chrome_trace``: raises
+    ``ValueError`` on a malformed bundle, returns the number of
+    flight-recorder events it carries (0 when the recorder was off)."""
+    if not isinstance(obj, dict):
+        raise ValueError(f"bundle must be a dict, got {type(obj).__name__}")
+    missing = [k for k in _REQUIRED_KEYS if k not in obj]
+    if missing:
+        raise ValueError(f"bundle missing keys {missing}")
+    if obj["kind"] != BUNDLE_KIND:
+        raise ValueError(f"bundle kind {obj['kind']!r} != {BUNDLE_KIND!r}")
+    if not isinstance(obj["version"], int) \
+            or not 1 <= obj["version"] <= BUNDLE_VERSION:
+        raise ValueError(f"bad bundle version {obj['version']!r} "
+                         f"(reader supports <= {BUNDLE_VERSION})")
+    if obj["reason"] not in BUNDLE_REASONS:
+        raise ValueError(f"bundle reason {obj['reason']!r} not in "
+                         f"{BUNDLE_REASONS}")
+    if not isinstance(obj["tick"], int) or obj["tick"] < 0:
+        raise ValueError(f"bad bundle tick {obj['tick']!r}")
+    cfg = obj["engine_config"]
+    if not isinstance(cfg, dict) or "slots" not in cfg:
+        raise ValueError("engine_config must be a dict carrying 'slots'")
+    if not isinstance(obj["metrics"], dict):
+        raise ValueError("metrics must be a dict")
+    fr = obj["flight_recorder"]
+    if fr is None:
+        return 0
+    if not isinstance(fr, dict) or "events" not in fr:
+        raise ValueError("flight_recorder must be None or carry 'events'")
+    if not isinstance(fr.get("dropped"), int) or fr["dropped"] < 0:
+        raise ValueError("flight_recorder.dropped must be a count")
+    last_seq = 0
+    for i, ev in enumerate(fr["events"]):
+        if not isinstance(ev, dict):
+            raise ValueError(f"event {i} is not a dict")
+        for k in ("seq", "tick", "kind"):
+            if k not in ev:
+                raise ValueError(f"event {i} missing {k!r}")
+        if ev["seq"] <= last_seq:
+            raise ValueError(
+                f"event {i} seq {ev['seq']} not strictly increasing")
+        last_seq = ev["seq"]
+    return len(fr["events"])
+
+
+__all__ = ["export_bundle", "validate_bundle", "BUNDLE_KIND",
+           "BUNDLE_VERSION", "BUNDLE_REASONS"]

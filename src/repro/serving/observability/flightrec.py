@@ -1,0 +1,133 @@
+"""Scheduler flight recorder: a bounded ring of structured decision
+events, the "why" companion to the registry's "how much".
+
+Every scheduling decision the engine makes — admission (and the holds
+that delay it), preemption with the victim-selection rationale, brownout
+rung transitions with the signal that tripped them, speculative
+accept/reject per chain, prefix-cache hits and evictions, quarantine /
+salvage verdicts, and every terminal outcome — lands here as one plain
+dict.  The ring is host-side only and always cheap: one ``deque``
+append per event, nothing touching the device program, so recorder
+on/off leaves token streams bitwise identical (the same contract the
+PR-7 tracer pinned).
+
+Causality rides on request ids: every event carries the ``rid`` it is
+*about*, and events caused by another request (a preemption evicting a
+victim on behalf of a starving head) also list the other party in
+``rids``.  :meth:`FlightRecorder.explain` replays the ring for one rid
+as an ordered human-readable lifecycle narrative — the scheduler's
+answer to "what happened to my request".
+
+Like the Chrome tracer, the ring is bounded (``capacity`` events, FIFO
+drop) with exact drop accounting, so a long-lived engine never grows
+host memory without bound and a postmortem bundle knows how much
+history it is missing.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional
+
+#: Every event kind the engine records.  ``record`` rejects anything
+#: else so a typo'd hook fails loudly in tests, not silently in a ring
+#: nobody reads until an incident.
+EVENT_KINDS = (
+    "submit",        # accepted into the bounded queue
+    "reject",        # bounded-queue RetryLater / never-fits refusal
+    "hold",          # admissible head parked (oversubscription in flight)
+    "prefix_hit",    # radix-tree prefix lease taken at admission
+    "prefix_evict",  # cache pages reclaimed under allocation pressure
+    "admit",         # request bound to a slot
+    "preempt",       # victim evicted (rationale + starver linkage)
+    "requeue",       # preempted/salvaged request back in the queue
+    "salvage",       # quarantined stream truncated + requeued
+    "quarantine",    # NaN verdict on a slot (verdict: salvage | discard)
+    "spec",          # speculative chain accounting for one drain
+    "brownout",      # rung transition with the triggering signal
+    "shed",          # queued request dropped at rung 3
+    "fail",          # terminal error (cancelled/deadline/ttl/quarantined)
+    "retire",        # request completed and drained
+    "starvation",    # watchdog tripped (engine-fatal)
+    "bundle",        # postmortem bundle captured
+)
+
+_SKIP_RENDER = ("seq", "tick", "kind", "rid", "slot", "rids")
+
+
+class FlightRecorder:
+    """Bounded ring of scheduler decision events (host-side, always on
+    unless configured off; see ``ObservabilityConfig.flightrec``)."""
+
+    def __init__(self, capacity: int = 2048):
+        assert capacity >= 1, f"flight recorder capacity {capacity} < 1"
+        self.capacity = capacity
+        self._events: Deque[Dict[str, Any]] = deque(maxlen=capacity)
+        self.dropped = 0       # events evicted by ring overflow
+        self.seq = 0           # total events ever recorded
+
+    # ------------------------------------------------------------------
+    # recording
+    # ------------------------------------------------------------------
+
+    def record(self, tick: int, kind: str, rid: int = -1, slot: int = -1,
+               **detail):
+        """Append one event.  ``detail`` keys must be JSON-able scalars /
+        lists (they ride into postmortem bundles verbatim); an optional
+        ``rids`` list links other requests causally involved."""
+        assert kind in EVENT_KINDS, f"unknown flightrec event kind {kind!r}"
+        if len(self._events) == self.capacity:
+            self.dropped += 1
+        self.seq += 1
+        ev: Dict[str, Any] = {"seq": self.seq, "tick": int(tick),
+                              "kind": kind}
+        if rid >= 0:
+            ev["rid"] = int(rid)
+        if slot >= 0:
+            ev["slot"] = int(slot)
+        ev.update(detail)
+        self._events.append(ev)
+
+    # ------------------------------------------------------------------
+    # queries
+    # ------------------------------------------------------------------
+
+    def events(self, kind: Optional[str] = None) -> List[Dict[str, Any]]:
+        evs = list(self._events)
+        if kind is not None:
+            evs = [e for e in evs if e["kind"] == kind]
+        return evs
+
+    def events_for(self, rid: int) -> List[Dict[str, Any]]:
+        """Every retained event about ``rid`` — as subject or as a
+        causally linked party (``rids``) — in recording order."""
+        return [e for e in self._events
+                if e.get("rid") == rid or rid in e.get("rids", ())]
+
+    def explain(self, rid: int) -> List[str]:
+        """Ordered human-readable lifecycle narrative for one request."""
+        return [self.render(e) for e in self.events_for(rid)]
+
+    @staticmethod
+    def render(ev: Dict[str, Any]) -> str:
+        """One event as a stable ``t=<tick> <kind> k=v ...`` line."""
+        parts = [f"t={ev['tick']}", ev["kind"]]
+        if ev.get("rid", -1) >= 0:
+            parts.append(f"rid={ev['rid']}")
+        if ev.get("slot", -1) >= 0:
+            parts.append(f"slot={ev['slot']}")
+        for k in ev:
+            if k not in _SKIP_RENDER:
+                parts.append(f"{k}={ev[k]}")
+        return " ".join(parts)
+
+    # ------------------------------------------------------------------
+    # export
+    # ------------------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Bundle payload: ring contents + drop accounting."""
+        return {"capacity": self.capacity, "recorded": self.seq,
+                "dropped": self.dropped, "events": list(self._events)}
+
+
+__all__ = ["FlightRecorder", "EVENT_KINDS"]

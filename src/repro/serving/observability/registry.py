@@ -48,6 +48,15 @@ def _bucket_upper(key: str) -> int:
     return int(key.split("-")[-1])
 
 
+def _bucket_lower(key: str) -> int:
+    """Inclusive lower bound of a pow-2 bucket key."""
+    return int(key.split("-")[0])
+
+
+#: Summary quantiles exported alongside every histogram series.
+SUMMARY_QUANTILES = (("p50", 0.5), ("p95", 0.95), ("p99", 0.99))
+
+
 class Pow2Histogram:
     """Power-of-two bucket histogram over non-negative integers.
 
@@ -79,6 +88,40 @@ class Pow2Histogram:
     def to_dict(self) -> Dict[str, int]:
         """The legacy wire format: ``{bucket_key: count}``."""
         return dict(self.buckets)
+
+    def quantile(self, q: float) -> Optional[float]:
+        """Bucket-interpolated quantile estimate, ``None`` when empty.
+
+        The target rank ``q * count`` is located in the cumulative bucket
+        walk; within the owning bucket the value interpolates linearly
+        between its bounds.  The ``"0"`` and ``"1"`` buckets are single
+        points, so data confined to them yields *exact* quantiles; a
+        ``"lo-hi"`` bucket bounds the error by its own width (the pow-2
+        trade: O(log max) memory for ≤2× relative error)."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile {q} outside [0, 1]")
+        if self.count == 0:
+            return None
+        target = q * self.count
+        cum = 0
+        for key in sorted(self.buckets, key=_bucket_upper):
+            c = self.buckets[key]
+            if c <= 0:
+                continue
+            if cum + c >= target:
+                lo, hi = _bucket_lower(key), _bucket_upper(key)
+                if lo == hi:
+                    return float(lo)
+                return lo + (max(0.0, target - cum) / c) * (hi - lo)
+            cum += c
+        return float(_bucket_upper(max(self.buckets, key=_bucket_upper)))
+
+    def summary(self) -> Dict[str, float]:
+        """``{"p50": ..., "p95": ..., "p99": ...}`` (empty dict when no
+        observations)."""
+        if self.count == 0:
+            return {}
+        return {name: self.quantile(q) for name, q in SUMMARY_QUANTILES}
 
     def state_dict(self) -> Dict[str, object]:
         return {"buckets": dict(self.buckets), "count": self.count,
@@ -246,7 +289,7 @@ class MetricsRegistry:
                     "labels": dict(zip(m.labelnames, key))}
                 if isinstance(v, Pow2Histogram):
                     entry.update(buckets=v.to_dict(), count=v.count,
-                                 sum=v.sum)
+                                 sum=v.sum, **v.summary())
                 else:
                     entry["value"] = v
                 series.append(entry)
@@ -276,6 +319,8 @@ class MetricsRegistry:
                                             {**base, "le": "+Inf"}, v.count))
                     lines.append(_prom_line(f"{name}_sum", base, v.sum))
                     lines.append(_prom_line(f"{name}_count", base, v.count))
+                    for sk, sv in v.summary().items():
+                        lines.append(_prom_line(f"{name}_{sk}", base, sv))
                 else:
                     lines.append(_prom_line(name, base, v))
         return "\n".join(lines) + "\n"
@@ -332,4 +377,5 @@ def validate_prometheus(text: str) -> int:
 
 
 __all__ = ["MetricsRegistry", "Counter", "Gauge", "Histogram",
-           "Pow2Histogram", "pow2_bucket", "validate_prometheus"]
+           "Pow2Histogram", "pow2_bucket", "validate_prometheus",
+           "SUMMARY_QUANTILES"]

@@ -1,0 +1,209 @@
+"""Per-tenant SLO tracking: latency objectives, streaming percentiles,
+and multi-window burn rates feeding the brownout ladder.
+
+Three request-latency dimensions carry objectives, all measured in
+engine ticks (the scheduler's native clock — wall time divides out of
+every on/off comparison):
+
+  * **queue_wait** — submit → admission (observed at admission);
+  * **ttft**       — submit → first generated token;
+  * **itl**        — mean inter-token ticks over a retired stream.
+
+Each observation lands in a per-(tenant, metric) :class:`Pow2Histogram`
+(streaming percentiles via :meth:`~.registry.Pow2Histogram.quantile`)
+and is classified good/bad against the tenant's objective.  Burn rate
+follows the SRE playbook: with error budget ``1 - target``,
+
+    ``burn(window) = bad_fraction(window) / (1 - target)``
+
+so burn 1.0 consumes the budget exactly at the sustainable rate and
+burn N eats it N× too fast.  :meth:`SLOEngine.pressured` is the classic
+two-window alert — the *fast* window (responsive, noisy) AND the *slow*
+window (confirming, stable) must both exceed their thresholds — which
+is what lets SLO-driven brownout engage on wait-time burn several ticks
+before the queue-depth proxy saturates, without flapping on a single
+bad tick.
+
+Everything here is host-side bookkeeping over already-computed host
+integers: SLO tracking on/off cannot perturb token streams, and the
+actuation path (``SLOConfig.brownout``) is off by default.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, Optional, Tuple
+
+from .registry import Pow2Histogram
+
+#: The latency dimensions an objective can bound.
+SLO_METRICS = ("queue_wait", "ttft", "itl")
+
+
+@dataclasses.dataclass(frozen=True)
+class SLObjective:
+    """Latency objectives for one tenant, in engine ticks.  ``None``
+    leaves that dimension unbounded (observed for percentiles, never
+    counted against the budget)."""
+
+    ttft_ticks: Optional[float] = None
+    itl_ticks: Optional[float] = None
+    queue_wait_ticks: Optional[float] = None
+
+    def __post_init__(self):
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if v is not None and v < 0:
+                raise ValueError(f"{f.name}={v} must be >= 0")
+
+    def bound(self, metric: str) -> Optional[float]:
+        return getattr(self, f"{metric}_ticks")
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    """Objectives + burn-rate evaluation knobs (rides in
+    ``ObservabilityConfig.slo``; ``None`` there = SLO engine off).
+
+    ``per_tenant`` maps tenant label → :class:`SLObjective` override
+    (dicts are normalized to a sorted tuple so the config stays
+    hashable); every other tenant uses ``objective``.  ``brownout``
+    gates the actuation path: only when True does
+    ``engine._brownout_pressured`` consume :meth:`SLOEngine.pressured`
+    — off by default so enabling SLO *tracking* never changes
+    scheduling."""
+
+    objective: SLObjective = SLObjective()
+    per_tenant: Tuple[Tuple[str, SLObjective], ...] = ()
+    target: float = 0.9          # good fraction objective; budget = 1-target
+    fast_window: int = 8         # ticks (responsive window)
+    slow_window: int = 32        # ticks (confirming window)
+    fast_burn: float = 2.0       # burn-rate threshold on the fast window
+    slow_burn: float = 1.0       # burn-rate threshold on the slow window
+    brownout: bool = False       # feed the ladder (OFF by default)
+
+    def __post_init__(self):
+        if isinstance(self.per_tenant, dict):
+            object.__setattr__(self, "per_tenant",
+                               tuple(sorted((str(k), v) for k, v
+                                            in self.per_tenant.items())))
+        if not 0.0 < self.target < 1.0:
+            raise ValueError(f"target {self.target} outside (0, 1)")
+        if self.fast_window < 1 or self.slow_window < self.fast_window:
+            raise ValueError(
+                f"need 1 <= fast_window ({self.fast_window}) <= "
+                f"slow_window ({self.slow_window})")
+        if self.fast_burn <= 0 or self.slow_burn <= 0:
+            raise ValueError("burn thresholds must be positive")
+
+    def objective_for(self, tenant: str) -> SLObjective:
+        for t, obj in self.per_tenant:
+            if t == str(tenant):
+                return obj
+        return self.objective
+
+
+class SLOEngine:
+    """Streaming SLO evaluation: histograms per (tenant, metric), one
+    sliding sample window shared by both burn horizons."""
+
+    def __init__(self, cfg: SLOConfig):
+        self.cfg = cfg
+        self.hists: Dict[Tuple[str, str], Pow2Histogram] = {}
+        # (tick, bad) for every budgeted observation, pruned to the slow
+        # window — both horizons slice this one deque.
+        self._window: Deque[Tuple[int, bool]] = deque()
+        self.good = 0
+        self.bad = 0
+
+    # ------------------------------------------------------------------
+    # observation
+    # ------------------------------------------------------------------
+
+    def observe(self, metric: str, tenant, value: float, tick: int):
+        assert metric in SLO_METRICS, f"unknown SLO metric {metric!r}"
+        tenant = str(tenant)
+        key = (tenant, metric)
+        h = self.hists.get(key)
+        if h is None:
+            h = self.hists[key] = Pow2Histogram()
+        h.observe(int(round(value)))
+        bound = self.cfg.objective_for(tenant).bound(metric)
+        if bound is None:
+            return
+        bad = value > bound
+        self._window.append((int(tick), bad))
+        if bad:
+            self.bad += 1
+        else:
+            self.good += 1
+
+    def observe_queue_wait(self, tenant, ticks: float, tick: int):
+        self.observe("queue_wait", tenant, ticks, tick)
+
+    def observe_ttft(self, tenant, ticks: float, tick: int):
+        self.observe("ttft", tenant, ticks, tick)
+
+    def observe_itl(self, tenant, ticks: float, tick: int):
+        self.observe("itl", tenant, ticks, tick)
+
+    # ------------------------------------------------------------------
+    # evaluation
+    # ------------------------------------------------------------------
+
+    def _prune(self, tick: int):
+        horizon = tick - self.cfg.slow_window
+        while self._window and self._window[0][0] <= horizon:
+            self._window.popleft()
+
+    def _burn(self, tick: int, window: int) -> float:
+        lo = tick - window
+        total = bad = 0
+        for t, b in self._window:
+            if t > lo:
+                total += 1
+                bad += b
+        if total == 0:
+            return 0.0
+        return (bad / total) / (1.0 - self.cfg.target)
+
+    def burn_rates(self, tick: int) -> Dict[str, float]:
+        """``{"fast": ..., "slow": ...}`` burn rates ending at ``tick``."""
+        self._prune(tick)
+        return {"fast": self._burn(tick, self.cfg.fast_window),
+                "slow": self._burn(tick, self.cfg.slow_window)}
+
+    def pressured(self, tick: int) -> bool:
+        """Two-window burn alert: both horizons over threshold."""
+        br = self.burn_rates(tick)
+        return (br["fast"] >= self.cfg.fast_burn
+                and br["slow"] >= self.cfg.slow_burn)
+
+    # ------------------------------------------------------------------
+    # export (metrics / bundles)
+    # ------------------------------------------------------------------
+
+    def state(self, tick: int) -> Dict[str, object]:
+        """JSON-able snapshot: config, burn rates, and per-(tenant,
+        metric) percentiles against the objective."""
+        series = []
+        for (tenant, metric), h in sorted(self.hists.items()):
+            series.append({
+                "tenant": tenant, "metric": metric,
+                "objective_ticks":
+                    self.cfg.objective_for(tenant).bound(metric),
+                "count": h.count, "sum": h.sum, **h.summary()})
+        return {
+            "target": self.cfg.target,
+            "windows": {"fast": self.cfg.fast_window,
+                        "slow": self.cfg.slow_window},
+            "burn_thresholds": {"fast": self.cfg.fast_burn,
+                                "slow": self.cfg.slow_burn},
+            "burn_rates": self.burn_rates(tick),
+            "brownout_input": self.cfg.brownout,
+            "good": self.good, "bad": self.bad,
+            "series": series,
+        }
+
+
+__all__ = ["SLObjective", "SLOConfig", "SLOEngine", "SLO_METRICS"]

@@ -86,6 +86,10 @@ class PrefixCache:
         self.page_size = pool.page_size
         self.tree = PrefixTree(pool.page_size)
         self.stats = PrefixStats()
+        # optional observer called as on_evict(freed, need) after a
+        # pressure reclaim actually frees pages — the engine's flight
+        # recorder hooks here (never affects eviction order)
+        self.on_evict = None
         pool.attach_cache(self.evictable_pages, self.evict)
 
     # ------------------------------------------------------------------
@@ -185,6 +189,8 @@ class PrefixCache:
                     and not parent.children and ref.get(parent.page, 0) == 0):
                 victims.add(parent)
         self.stats.evicted_pages += freed
+        if freed and self.on_evict is not None:
+            self.on_evict(freed, need)
         return freed
 
     def clear(self) -> int:

@@ -20,7 +20,7 @@ from .errors import (DeadlineExceeded, NeverFitsError, RequestCancelled,
                      StarvationError, TTLExpired)
 from .faults import FAULT_KINDS, Fault, FaultHarness, FaultPlan
 from .policy import (ResilienceConfig, ResilienceStats, VictimCandidate,
-                     select_victim)
+                     select_victim, select_victims, victim_rationale)
 from .reshape import reshape_restore
 from .snapshot import restore_engine, snapshot_engine
 
@@ -28,6 +28,7 @@ __all__ = [
     "RequestError", "RequestCancelled", "DeadlineExceeded", "TTLExpired",
     "SlotQuarantined", "RetryLater", "NeverFitsError", "StarvationError",
     "ResilienceConfig", "ResilienceStats", "VictimCandidate",
-    "select_victim", "Fault", "FaultPlan", "FaultHarness", "FAULT_KINDS",
+    "select_victim", "select_victims", "victim_rationale",
+    "Fault", "FaultPlan", "FaultHarness", "FAULT_KINDS",
     "snapshot_engine", "restore_engine", "reshape_restore",
 ]

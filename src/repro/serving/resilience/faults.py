@@ -38,6 +38,7 @@ Fault kinds:
 from __future__ import annotations
 
 import dataclasses
+import os
 import tempfile
 from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -140,10 +141,18 @@ class FaultHarness:
                  workload: Dict[int, List[Any]],
                  snapshot_dir: Optional[str] = None,
                  reshape_factory: Optional[
-                     Callable[[Dict[str, int]], Any]] = None):
+                     Callable[[Dict[str, int]], Any]] = None,
+                 bundle_dir: Optional[str] = None):
         self.factory = engine_factory
         self.plan = plan
         self.workload = workload
+        # postmortem wiring: when set (or via REPRO_BUNDLE_DIR, which the
+        # CI chaos lane exports), every run() leaves a debug bundle named
+        # with the plan's seed — a failing chaos run reproduces from
+        # CHAOS_SEED and debugs from bundle_chaos_seed<seed>.json
+        if bundle_dir is None:
+            bundle_dir = os.environ.get("REPRO_BUNDLE_DIR") or None
+        self.bundle_dir = bundle_dir
         # builds a fresh engine with geometry overrides {slots,
         # num_pages, decode_ticks} for reshape_restore faults; without
         # one those faults degrade to plain kill_restore
@@ -275,22 +284,47 @@ class FaultHarness:
             self.finished[req.rid] = req
         return done
 
+    def dump_bundle(self, path=None) -> Optional[Dict[str, Any]]:
+        """Export the engine's postmortem bundle with this plan attached,
+        named after the chaos seed (``bundle_chaos_seed<seed>.json``)
+        unless ``path`` overrides.  No-op (None) without a destination."""
+        if path is None:
+            if self.bundle_dir is None:
+                return None
+            path = Path(self.bundle_dir) / \
+                f"bundle_chaos_seed{self.plan.seed}.json"
+        from ..observability.bundle import export_bundle
+        return export_bundle(self.engine, path, reason="chaos_harness",
+                             fault_plan=self.plan,
+                             snapshot_ref=str(self.snapshot_path))
+
     def run(self, max_ticks: int = 256) -> Dict[int, Any]:
         """Tick until the workload is fully submitted and drained (or
-        ``max_ticks``).  Returns ``finished`` (rid → request)."""
-        for _ in range(max_ticks):
-            # recomputed each tick: RetryLater re-queues push submissions
-            # forward into the workload dict
-            last_submit = max(self.workload, default=0)
-            eng = self.engine
-            pending = (eng.tick_count <= last_submit or eng._queue
-                       or any(r is not None for r in eng._active))
-            if not pending:
-                break
-            self.tick()
-        if self._tmp is not None:
-            self._tmp.cleanup()
-            self._tmp = None
+        ``max_ticks``).  Returns ``finished`` (rid → request).
+
+        With a ``bundle_dir`` configured a debug bundle is exported on
+        every exit — crash or clean — so a chaos-lane failure (including
+        a post-run assertion) always leaves the seed-named artifact CI
+        uploads."""
+        try:
+            for _ in range(max_ticks):
+                # recomputed each tick: RetryLater re-queues push
+                # submissions forward into the workload dict
+                last_submit = max(self.workload, default=0)
+                eng = self.engine
+                pending = (eng.tick_count <= last_submit or eng._queue
+                           or any(r is not None for r in eng._active))
+                if not pending:
+                    break
+                self.tick()
+        finally:
+            try:
+                self.dump_bundle()
+            except Exception:
+                pass             # never mask the run's own outcome
+            if self._tmp is not None:
+                self._tmp.cleanup()
+                self._tmp = None
         return self.finished
 
 

@@ -198,6 +198,18 @@ def select_victims(candidates: Sequence[VictimCandidate],
     return out
 
 
+def victim_rationale(c: VictimCandidate, starver_priority: int,
+                     need_pages: int = 0) -> str:
+    """One-line explanation of why this candidate was selected — the
+    :func:`_victim_order` criteria spelled out, recorded verbatim by the
+    flight recorder so ``engine.explain(rid)`` can answer "why was MY
+    request preempted"."""
+    return (f"priority {c.priority} < starver {starver_priority}; "
+            f"frees {c.resident_pages} resident page(s)"
+            f" toward a {need_pages}-page shortfall"
+            f"; admitted t={c.admit_tick} (youngest-first tiebreak)")
+
+
 @dataclasses.dataclass
 class ResilienceStats:
     """Cumulative resilience counters (``ServingEngine.
@@ -240,4 +252,4 @@ class ResilienceStats:
 
 
 __all__ = ["ResilienceConfig", "ResilienceStats", "VictimCandidate",
-           "select_victim", "select_victims"]
+           "select_victim", "select_victims", "victim_rationale"]

@@ -145,20 +145,39 @@ def replay_chain(chain: Sequence[int], k: int, emitted_per_step,
     speculate) are skipped.
     """
     drafted = accepted = 0
+    for ev in chain_events(chain, k, emitted_per_step, last_tokens,
+                           feed_start):
+        drafted += ev["drafted"]
+        accepted += ev["accepted"]
+    return drafted, accepted
+
+
+def chain_events(chain: Sequence[int], k: int, emitted_per_step,
+                 last_tokens, feed_start: int = 0):
+    """Per-micro-step accept/reject record of the chain automaton —
+    the flight recorder's view of one speculative drain.
+
+    Same replay as :func:`replay_chain`, but instead of collapsing to
+    totals it yields one event per consuming step: ``{"step", "drafted",
+    "accepted", "alive"}`` where ``alive`` is whether the chain survived
+    that step's verification (False marks the rejection point — the
+    first draft mismatch, or chain exhaustion)."""
+    events = []
     cur, ok = 0, True
     for t, e in enumerate(emitted_per_step):
         e = int(e)
         if e == 0 or t < feed_start:
             continue
-        if ok:
-            drafted += min(k, max(0, len(chain) - cur))
-        accepted += e - 1
+        d = min(k, max(0, len(chain) - cur)) if ok else 0
         alive = (ok and e == k + 1 and cur + k < len(chain)
                  and int(last_tokens[t]) == int(chain[cur + k]))
         if alive:
             cur += k + 1
+        events.append({"step": t, "drafted": d, "accepted": e - 1,
+                       "alive": alive})
         ok = alive
-    return drafted, accepted
+    return events
 
 
-__all__ = ["SpecConfig", "DraftProposer", "ngram_propose", "replay_chain"]
+__all__ = ["SpecConfig", "DraftProposer", "ngram_propose", "replay_chain",
+           "chain_events"]

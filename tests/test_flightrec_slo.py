@@ -1,0 +1,509 @@
+"""Decision-and-diagnosis layer: streaming SLO percentiles + burn-rate
+brownout input, the scheduler flight recorder (``explain(rid)`` /
+``why_degraded()``), and postmortem debug bundles — all under the same
+bitwise-invariance contract as the rest of the telemetry stack: the
+recorder and the SLO engine are host-side observers, so toggling them
+never changes token streams or the one-executable-per-lifetime pin."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke
+from repro.core.types import AdapterConfig
+from repro.models import Model
+from repro.serving import (ObservabilityConfig, Pow2Histogram, Request,
+                           ResilienceConfig, RetryLater, SamplingParams,
+                           ServingEngine, SLOConfig, SLObjective,
+                           StarvationError, validate_bundle,
+                           validate_prometheus)
+from repro.serving.observability import (EVENT_KINDS, SUMMARY_QUANTILES,
+                                         FlightRecorder, MetricsRegistry,
+                                         SLOEngine)
+from repro.serving.observability.bundle import (BUNDLE_KIND, BUNDLE_REASONS,
+                                                BUNDLE_VERSION)
+from repro.serving.observability.registry import (_bucket_lower,
+                                                  _bucket_upper)
+
+ACFG = AdapterConfig(method="mos", equiv_rank=2, rank=4, shards_per_vector=2,
+                     private_rank=1, dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke(get_config("granite-3-2b"))
+    m = Model(cfg, ACFG)
+    params, _ = m.init_params(jax.random.key(0))
+    states = []
+    for t in range(2):
+        st = m.init_adapter(jax.random.key(100))
+        st["trainable"] = jax.tree.map(
+            lambda v, tt=t: v + 0.02 * (tt + 1) * jax.random.normal(
+                jax.random.key(7 + tt), v.shape, v.dtype), st["trainable"])
+        states.append(st)
+    return m, params, states
+
+
+def _mk(model, **kw):
+    m, params, states = model
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("page_size", 8)
+    return ServingEngine(m, params, states, **kw)
+
+
+def _req(rid, L=10, max_new=5, adapter_id=0, seed=None, **kw):
+    sp = (SamplingParams(temperature=0.8, top_k=20, seed=seed)
+          if seed is not None else None)
+    return Request(rid=rid, adapter_id=adapter_id, max_new=max_new,
+                   prompt=(np.arange(L, dtype=np.int32) * (rid % 7 + 2))
+                   % 90 + 4, sampling=sp, **kw)
+
+
+def _drain(eng, max_ticks=100):
+    fin = []
+    for _ in range(max_ticks):
+        fin += eng.step()
+        if not eng._queue and all(r is None for r in eng._active):
+            return fin
+    raise AssertionError("engine did not drain")
+
+
+def _kinds(eng, rid):
+    return [e["kind"] for e in eng.flight_events(rid=rid)]
+
+
+# ---------------------------------------------------------------------------
+# histogram quantiles (no engine)
+# ---------------------------------------------------------------------------
+
+def test_quantile_exact_on_point_buckets():
+    """Buckets "0" and "1" are single-valued, so on {0,1} data the
+    streaming quantile must agree with the exact quantile — this pins
+    the bucket-walk arithmetic against numpy for every summary row."""
+    for zeros, ones in [(10, 0), (0, 10), (9, 1), (5, 5), (1, 19)]:
+        data = [0] * zeros + [1] * ones
+        h = Pow2Histogram.from_values(data)
+        for _, q in SUMMARY_QUANTILES:
+            exact = float(np.quantile(data, q, method="inverted_cdf"))
+            assert h.quantile(q) == exact, (zeros, ones, q)
+
+
+def test_quantile_edges_and_errors():
+    h = Pow2Histogram()
+    assert h.quantile(0.5) is None                    # empty
+    assert h.summary() == {}
+    for v in (1, 5, 5, 130):
+        h.observe(v)
+    assert h.quantile(0.0) == _bucket_lower("1")      # first bucket lo
+    assert h.quantile(1.0) == _bucket_upper("128-255")  # last bucket hi
+    for bad in (-0.01, 1.01):
+        with pytest.raises(ValueError):
+            h.quantile(bad)
+
+
+def test_quantile_bucket_bounds_and_monotonicity():
+    """General data: every quantile lands inside the bucket holding the
+    exact quantile (pow-2 resolution bound) and the curve is monotone."""
+    rng = np.random.default_rng(3)
+    data = rng.integers(0, 500, size=200).tolist()
+    h = Pow2Histogram.from_values(data)
+    qs = [0.05, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99]
+    prev = -1.0
+    for q in qs:
+        est = h.quantile(q)
+        exact = float(np.quantile(data, q, method="inverted_cdf"))
+        from repro.serving.observability.registry import pow2_bucket
+        b = pow2_bucket(int(exact))
+        assert _bucket_lower(b) <= est <= _bucket_upper(b) + 1, (q, est, b)
+        assert est >= prev, "quantile curve must be monotone"
+        prev = est
+
+
+def test_summary_rows_in_exports():
+    reg = MetricsRegistry()
+    hist = reg.histogram("lat_ticks", "latency")
+    values = (1, 2, 2, 3, 8, 40)
+    for v in values:
+        hist.observe(v)
+    expect = Pow2Histogram.from_values(values)
+    snap = reg.collect()
+    entry = snap["lat_ticks"]["series"][0]
+    for name, q in SUMMARY_QUANTILES:
+        assert entry[name] == expect.quantile(q)
+    text = reg.to_prometheus()
+    validate_prometheus(text)
+    for name, _ in SUMMARY_QUANTILES:
+        assert f"lat_ticks_{name}" in text, text
+
+
+# ---------------------------------------------------------------------------
+# flight recorder ring (no engine)
+# ---------------------------------------------------------------------------
+
+def test_flightrec_bounded_ring_drop_accounting():
+    fr = FlightRecorder(capacity=4)
+    for t in range(10):
+        fr.record(t, "submit", rid=t)
+    assert len(fr.events()) == 4                      # ring holds newest
+    assert fr.seq == 10 and fr.dropped == 6
+    assert [e["rid"] for e in fr.events()] == [6, 7, 8, 9]
+    d = fr.to_dict()
+    assert d["capacity"] == 4 and d["recorded"] == 10 and d["dropped"] == 6
+    # seq survives the drops: strictly increasing across the kept tail
+    seqs = [e["seq"] for e in d["events"]]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+    with pytest.raises(AssertionError):
+        fr.record(0, "not_a_kind")
+    assert all(isinstance(k, str) for k in EVENT_KINDS)
+
+
+def test_flightrec_causal_rids_and_render():
+    fr = FlightRecorder()
+    fr.record(3, "preempt", rid=7, slot=1, rids=[9], by_rid=9,
+              rationale="priority 0 < starver 5")
+    fr.record(4, "admit", rid=9, slot=1, queue_wait=2)
+    assert [e["kind"] for e in fr.events_for(7)] == ["preempt"]
+    # the starver's history includes the preemption it caused
+    assert [e["kind"] for e in fr.events_for(9)] == ["preempt", "admit"]
+    line = fr.explain(7)[0]
+    assert line.startswith("t=3 preempt rid=7 slot=1")
+    assert "rationale=priority 0 < starver 5" in line
+
+
+# ---------------------------------------------------------------------------
+# SLO engine units (no serving engine)
+# ---------------------------------------------------------------------------
+
+def test_slo_config_validation_and_per_tenant():
+    cfg = SLOConfig(objective=SLObjective(ttft_ticks=4),
+                    per_tenant={1: SLObjective(ttft_ticks=2)})
+    assert cfg.objective_for(1).ttft_ticks == 2
+    assert cfg.objective_for(0).ttft_ticks == 4       # default fallback
+    with pytest.raises(ValueError):
+        SLOConfig(target=1.0)
+    with pytest.raises(ValueError):
+        SLOConfig(fast_window=0)
+    with pytest.raises(ValueError):
+        SLOConfig(fast_window=8, slow_window=4)
+
+
+def test_slo_burn_rate_two_window_alert():
+    """burn = bad_fraction / error_budget; the alert needs BOTH windows
+    over their thresholds — a short spike trips fast but not slow."""
+    cfg = SLOConfig(objective=SLObjective(queue_wait_ticks=2),
+                    target=0.9, fast_window=4, slow_window=16,
+                    fast_burn=2.0, slow_burn=3.0)
+    slo = SLOEngine(cfg)
+    for t in range(12):                               # long good stretch
+        slo.observe_queue_wait("default", 1, t)
+    assert slo.burn_rates(12) == {"fast": 0.0, "slow": 0.0}
+    assert not slo.pressured(12)
+    for t in range(12, 15):                           # short bad spike
+        slo.observe_queue_wait("default", 9, t)
+    br = slo.burn_rates(15)
+    # fast window (ticks 12-14) is all-bad: 1.0 / (1 - 0.9) budget
+    assert br["fast"] == pytest.approx(10.0)
+    # slow window holds 12 good + 3 bad: 0.2 / 0.1
+    assert br["slow"] == pytest.approx(2.0)
+    assert br["fast"] >= cfg.fast_burn
+    # slow window still dominated by the good stretch -> no alert
+    assert br["slow"] < cfg.slow_burn
+    assert not slo.pressured(15)
+    for t in range(15, 28):                           # sustained badness
+        slo.observe_queue_wait("default", 9, t)
+    assert slo.pressured(28)
+    # unbounded metrics observe into histograms but never burn budget
+    slo.observe_ttft("default", 999, 28)
+    assert slo.bad + slo.good == 28                    # ttft not counted
+    st = slo.state(28)
+    assert st["brownout_input"] is False               # cfg gate off
+    assert any(s["tenant"] == "default" and s["metric"] == "ttft"
+               for s in st["series"])
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity: recorder + SLO on vs off
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sampled", [False, True])
+@pytest.mark.parametrize("prefix", [False, True])
+def test_streams_bitwise_identical_on_vs_off(model, sampled, prefix):
+    """The whole decision layer on (flight recorder + SLO engine +
+    metrics) vs everything off, same workload including a mid-flight
+    operator preemption: token streams bitwise identical, exactly one
+    traced executable per engine lifetime."""
+    slo = SLOConfig(objective=SLObjective(queue_wait_ticks=1, ttft_ticks=3,
+                                          itl_ticks=2),
+                    target=0.9, fast_window=4, slow_window=8)
+    cfgs = {"off": ObservabilityConfig(metrics=False, flightrec=False),
+            "on": ObservabilityConfig(metrics=True, flightrec=True,
+                                      slo=slo)}
+    streams = {}
+    for mode, obs in cfgs.items():
+        eng = _mk(model, prefix_cache=prefix, observability=obs)
+        reqs = [_req(i, L=6 + i, max_new=5, adapter_id=i % 2,
+                     seed=31 + i if sampled else None) for i in range(5)]
+        for r in reqs[:4]:
+            eng.submit(r)
+        for _ in range(3):
+            eng.step()
+        eng.preempt(next(r.rid for r in reqs
+                         if r.out and not r.done))     # mid-flight
+        eng.submit(reqs[4])                            # late arrival
+        fin = _drain(eng)
+        assert len(fin) == 5 and all(r.error is None for r in fin)
+        streams[mode] = {r.rid: tuple(r.out) for r in fin}
+        assert len(eng.unified_traces) == 1
+    assert streams["on"] == streams["off"]
+
+
+# ---------------------------------------------------------------------------
+# explain(rid): full lifecycle narratives
+# ---------------------------------------------------------------------------
+
+def test_explain_preempt_readmit_prefix_retire(model):
+    """The acceptance lifecycle: admitted -> preempted (with rationale)
+    -> re-admitted via a prefix-cache hit -> retired, reconstructed in
+    order from the ring."""
+    eng = _mk(model, prefix_cache=True)
+    r = _req(7, L=18, max_new=6)
+    eng.submit(r)
+    for _ in range(4):
+        eng.step()
+    assert r.out and not r.done
+    assert eng.preempt(7)
+    fin = _drain(eng)
+    assert fin[0].error is None and len(fin[0].out) == 6
+    assert _kinds(eng, 7) == ["submit", "admit", "preempt", "requeue",
+                              "prefix_hit", "admit", "retire"]
+    ev = {e["kind"]: e for e in eng.flight_events(rid=7)}
+    assert ev["preempt"]["rationale"] == "operator"
+    assert ev["prefix_hit"]["reused_tokens"] > 0
+    assert ev["prefix_hit"]["resumed"] is True
+    assert ev["retire"]["preemptions"] == 1
+    lines = eng.explain(7)
+    assert len(lines) == 7 and all(f"rid=7" in ln for ln in lines)
+    ticks = [int(ln.split()[0][2:]) for ln in lines]
+    assert ticks == sorted(ticks)
+
+
+def test_explain_cancelled_deadline_quarantined(model):
+    eng = _mk(model)
+    eng.submit(_req(0, L=6, max_new=8))
+    eng.submit(_req(1, L=6, max_new=16, deadline_ticks=3))
+    eng.step()
+    eng.cancel(0)
+    _drain(eng)
+    assert _kinds(eng, 0) == ["submit", "admit", "fail"]
+    assert eng.flight_events(rid=0, kind="fail")[0]["reason"] == "cancelled"
+    assert eng.flight_events(rid=1, kind="fail")[0]["reason"] == \
+        "deadline_expired"
+    # quarantine without a salvage budget: verdict=discard then fail
+    eng = _mk(model)
+    eng.submit(_req(5, L=8, max_new=8))
+    eng.step()
+    eng.inject_nan(next(s for s, r in enumerate(eng._active)
+                        if r is not None))
+    fin = _drain(eng)
+    assert fin[0].error is not None
+    assert _kinds(eng, 5) == ["submit", "admit", "quarantine", "fail"]
+    q = eng.flight_events(rid=5, kind="quarantine")[0]
+    assert q["verdict"] == "discard"
+
+
+def test_explain_salvaged(model):
+    eng = _mk(model, resilience=ResilienceConfig(salvage_retries=2))
+    eng.submit(_req(9, L=8, max_new=8))
+    eng.step()
+    eng.step()
+    eng.inject_nan(next(s for s, r in enumerate(eng._active)
+                        if r is not None))
+    fin = _drain(eng)
+    assert fin[0].error is None
+    assert _kinds(eng, 9) == ["submit", "admit", "quarantine", "salvage",
+                              "requeue", "admit", "retire"]
+    q = eng.flight_events(rid=9, kind="quarantine")[0]
+    assert q["verdict"] == "salvage"
+    assert eng.flight_events(rid=9, kind="salvage")[0]["kept_tokens"] >= 0
+
+
+def test_explain_shed_and_why_degraded(model):
+    """Rung-3 shedding under sustained overload: shed rids carry the
+    rung + wait in their narrative; why_degraded() reports the active
+    rung with its triggering signals and transition history."""
+    eng = _mk(model, resilience=ResilienceConfig(
+        pressure_ticks=2, watchdog_ticks=64, max_queue=6, brownout=True,
+        brownout_queue_depth=3, brownout_engage_ticks=1,
+        brownout_release_ticks=8))
+    rid, shed_rids = 0, []
+    for tick in range(16):
+        for _ in range(3):
+            rid += 1
+            try:
+                eng.submit(_req(rid, L=8, max_new=2))
+            except RetryLater:
+                pass
+        for r in eng.step():
+            if isinstance(r.error, RetryLater):
+                shed_rids.append(r.rid)
+        if shed_rids and eng._brownout_rung == 3:
+            break
+    assert shed_rids and eng._brownout_rung == 3
+    wd = eng.why_degraded()
+    assert wd["rung"] == 3 and wd["transitions"]["up"] >= 3
+    assert "queue_depth" in wd["signals"]["active"]
+    assert len(wd["history"]) >= 3
+    assert all(e["signal"] for e in wd["history"])
+    sk = _kinds(eng, shed_rids[0])
+    assert sk[0] == "submit" and sk[-1] == "shed"      # shed is terminal
+    shed_ev = eng.flight_events(rid=shed_rids[0], kind="shed")[0]
+    assert shed_ev["rung"] == 3 and shed_ev["waited"] >= 0
+    _drain(eng)
+
+
+# ---------------------------------------------------------------------------
+# SLO-driven brownout (engine level)
+# ---------------------------------------------------------------------------
+
+def test_slo_burn_feeds_brownout_when_gated(model):
+    """With the saturation signals parked out of range, only the
+    config-gated SLO burn alert can climb the ladder — and the rung
+    transition attributes itself to ``slo_burn``."""
+    rcfg = ResilienceConfig(
+        pressure_ticks=2, watchdog_ticks=64, max_queue=16, brownout=True,
+        brownout_queue_depth=32,          # beyond max_queue: can't fire
+        brownout_head_wait=64,            # beyond the run: can't fire
+        brownout_engage_ticks=2, brownout_release_ticks=4)
+    slo = SLOConfig(objective=SLObjective(queue_wait_ticks=1),
+                    target=0.9, fast_window=4, slow_window=8,
+                    fast_burn=1.0, slow_burn=1.0, brownout=True)
+    for gated in (False, True):
+        obs = ObservabilityConfig(
+            slo=slo if gated else
+            SLOConfig(objective=SLObjective(queue_wait_ticks=1),
+                      target=0.9, fast_window=4, slow_window=8,
+                      fast_burn=1.0, slow_burn=1.0, brownout=False))
+        eng = _mk(model, resilience=rcfg, observability=obs)
+        rid = 0
+        for tick in range(14):
+            if tick % 2 == 0:
+                for _ in range(4):
+                    rid += 1
+                    try:
+                        eng.submit(_req(rid, L=8, max_new=2))
+                    except RetryLater:
+                        pass
+            eng.step()
+        if gated:
+            assert eng._brownout_rung > 0
+            first = eng.flight_events(kind="brownout")[0]
+            assert first["signal"] == "slo_burn"
+            assert "slo_burn" in eng.why_degraded()["signals"]["active"]
+        else:
+            # same burn rates, but the gate keeps them advisory
+            assert eng._brownout_rung == 0
+            assert eng.flight_events(kind="brownout") == []
+        _drain(eng, max_ticks=200)
+
+
+# ---------------------------------------------------------------------------
+# postmortem bundles
+# ---------------------------------------------------------------------------
+
+def test_bundle_on_demand_and_validate(model, tmp_path):
+    eng = _mk(model, observability=ObservabilityConfig(
+        slo=SLOConfig(objective=SLObjective(queue_wait_ticks=2))))
+    for i in range(3):
+        eng.submit(_req(i, L=6 + i, max_new=3))
+    _drain(eng)
+    path = tmp_path / "bundle.json"
+    bundle = eng.export_bundle(path)
+    assert validate_bundle(bundle) > 0
+    on_disk = json.loads(path.read_text())
+    assert validate_bundle(on_disk) == validate_bundle(bundle)
+    assert on_disk["kind"] == BUNDLE_KIND
+    assert on_disk["version"] == BUNDLE_VERSION
+    assert on_disk["reason"] == "on_demand" and "on_demand" in BUNDLE_REASONS
+    assert on_disk["engine_config"]["slots"] == 2
+    assert on_disk["slo"]["target"] == 0.9
+    assert on_disk["brownout"]["rung"] == 0
+    assert on_disk["metrics"]["engine"]["tokens_out"] == 9
+    kinds = [e["kind"] for e in on_disk["flight_recorder"]["events"]]
+    assert kinds.count("retire") == 3
+
+
+def test_bundle_auto_on_quarantine_and_starvation(model, tmp_path):
+    eng = _mk(model, observability=ObservabilityConfig(
+        bundle_dir=str(tmp_path)))
+    eng.submit(_req(5, L=8, max_new=8))
+    eng.step()
+    eng.inject_nan(next(s for s, r in enumerate(eng._active)
+                        if r is not None))
+    _drain(eng)
+    assert len(eng.bundle_paths) == 1
+    obj = json.loads(open(eng.bundle_paths[0]).read())
+    assert validate_bundle(obj) > 0 and obj["reason"] == "quarantine"
+    assert obj["error"]["kind"] == "quarantined"
+    # starvation: leak the pool outside the ledger, watchdog fires
+    eng = _mk(model, observability=ObservabilityConfig(
+        bundle_dir=str(tmp_path)),
+        resilience=ResilienceConfig(pressure_ticks=2, watchdog_ticks=4))
+    leaked = [eng.pages._pop_free() for _ in range(eng.pages.free_pages)]
+    eng.submit(_req(0, L=8, max_new=3))
+    with pytest.raises(StarvationError):
+        for _ in range(10):
+            eng.step()
+    assert any("starvation" in p for p in eng.bundle_paths)
+    obj = json.loads(open(eng.bundle_paths[-1]).read())
+    assert obj["reason"] == "starvation"
+    assert obj["error"]["type"] == "StarvationError"
+    # the dump snapshots the ring up to the incident; the live recorder
+    # then also notes the capture itself
+    assert [e["kind"] for e in obj["flight_recorder"]["events"]][-1] == \
+        "starvation"
+    assert eng.flight_events(kind="bundle")
+    for p in leaked:
+        eng.pages._push_free(p)
+
+
+def test_validate_bundle_rejects_malformed(model):
+    eng = _mk(model)
+    eng.submit(_req(0, L=6, max_new=2))
+    _drain(eng)
+    good = eng.export_bundle()
+    for mutate in (
+            lambda b: b.pop("metrics"),
+            lambda b: b.__setitem__("kind", "other"),
+            lambda b: b.__setitem__("version", 99),
+            lambda b: b.__setitem__("reason", "nope"),
+            lambda b: b["flight_recorder"]["events"].reverse(),
+            lambda b: b["engine_config"].pop("slots")):
+        bad = json.loads(json.dumps(good, default=str))
+        mutate(bad)
+        with pytest.raises((ValueError, KeyError)):
+            validate_bundle(bad)
+
+
+def test_chaos_harness_dumps_seed_named_bundle(model, tmp_path):
+    from repro.serving.resilience.faults import FaultHarness, FaultPlan
+
+    def factory():
+        return _mk(model, resilience=ResilienceConfig(salvage_retries=1))
+
+    plan = FaultPlan.random(8, ticks=10, slots=2, rids=[100, 101],
+                            kinds=("poison", "cancel"), events=4)
+    workload = {0: [_req(100, L=8, max_new=4)],
+                3: [_req(101, L=6, max_new=4, adapter_id=1)]}
+    h = FaultHarness(factory, plan, workload, bundle_dir=str(tmp_path))
+    h.run(max_ticks=40)
+    out = tmp_path / "bundle_chaos_seed8.json"
+    assert out.exists()
+    obj = json.loads(out.read_text())
+    assert validate_bundle(obj) >= 0
+    assert obj["reason"] == "chaos_harness"
+    assert obj["fault_plan"]["seed"] == 8
+    assert {f["kind"] for f in obj["fault_plan"]["faults"]} <= \
+        {"poison", "cancel"}
